@@ -1,0 +1,116 @@
+"""Tables 5 & 6 — behavioral validation on four BEIR-like corpora (§4.4).
+
+Per modulation, the paper's diagnostic metric:
+    diverse      ILS reduction (10-40% band) + nDCG@10 retention (Table 6)
+    suppress:X   RBO vs baseline well below 1 (band 0.19-0.41)
+    decay:7      mean result age shift (tens of days on 90-day spread)
+    centroid:ids centroid similarity gain (+0.05..+0.12)
+    from:/to:    RBO vs baseline (band 0.08-0.25)
+
+Synthetic stand-ins preserve structure (DESIGN.md §7): direction/band is the
+validation target, not the paper's exact decimals. 30 queries per dataset,
+by insertion order (paper Appendix A).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import DIM, emit
+from repro.core import modulations as M
+from repro.core.vectorcache import VectorCache
+from repro.data.beir import DATASET_SPECS, make_dataset
+from repro.embed import HashEmbedder
+from repro.metrics import centroid_similarity, ils, ndcg_at_k, rbo
+
+N_QUERIES = 30
+K = 10
+
+
+def _setup(name: str):
+    emb = HashEmbedder(DIM)
+    ds = make_dataset(name)
+    matrix = emb.embed_batch(ds.doc_texts)
+    cache = VectorCache(np.arange(len(ds.doc_texts)), matrix, ds.timestamps, emb)
+    return emb, ds, cache
+
+
+def _rank(cache: VectorCache, plan: M.ModulationPlan, now: float) -> List[int]:
+    return [i for i, _ in cache.search_plan(plan, now=now)][:K]
+
+
+def run() -> None:
+    t6_rows = []
+    for name in DATASET_SPECS:
+        emb, ds, cache = _setup(name)
+        base_ndcg, div_ndcg = [], []
+        base_ils, div_ils = [], []
+        rbo_sup, rbo_traj = [], []
+        age_shift, cent_gain = [], []
+        for qi in range(min(N_QUERIES, len(ds.queries))):
+            q = M.l2_normalize(emb(ds.queries[qi]))
+            qrels = ds.qrels[qi]
+            base_plan = M.ModulationPlan(query=np.asarray(q))
+            base = _rank(cache, base_plan, ds.now)
+            base_ndcg.append(ndcg_at_k(base, qrels, K))
+            base_ils.append(ils(cache.matrix[base]))
+
+            # diverse
+            div = _rank(cache, M.ModulationPlan(
+                query=np.asarray(q), diverse=M.DiverseSpec()), ds.now)
+            div_ndcg.append(ndcg_at_k(div, qrels, K))
+            div_ils.append(ils(cache.matrix[div]))
+
+            # suppress: the dominant-cluster direction = centroid of the
+            # baseline top-3 (the paper's 'named concept' use case)
+            sup_dir = M.l2_normalize(cache.matrix[base[:3]].mean(axis=0))
+            sup = _rank(cache, M.ModulationPlan(
+                query=np.asarray(q),
+                suppress=(M.SuppressSpec(direction=np.asarray(sup_dir)),)), ds.now)
+            rbo_sup.append(rbo(base, sup))
+
+            # decay:7
+            dec = _rank(cache, M.ModulationPlan(
+                query=np.asarray(q), decay=M.DecaySpec(7.0)), ds.now)
+            age = lambda rows: float(np.mean(
+                (ds.now - ds.timestamps[rows]) / 86400.0))
+            age_shift.append(age(base) - age(dec))
+
+            # centroid from relevant seeds the words did NOT surface (the
+            # paper's use case: anchor to a facet the text query missed)
+            deep = [r for r in qrels if r not in base][:5]
+            seeds = deep or base[:3]
+            cent = _rank(cache, M.ModulationPlan(
+                query=np.asarray(q),
+                centroid=M.CentroidSpec(examples=cache.matrix[seeds])), ds.now)
+            cent_gain.append(
+                centroid_similarity(cache.matrix[cent], cache.matrix[seeds])
+                - centroid_similarity(cache.matrix[base], cache.matrix[seeds]))
+
+            # trajectory between two random docs' directions
+            a, b = cache.matrix[(qi * 7) % len(ds.doc_texts)], \
+                cache.matrix[(qi * 13 + 5) % len(ds.doc_texts)]
+            traj = _rank(cache, M.ModulationPlan(
+                query=np.asarray(q),
+                trajectory=M.TrajectorySpec(direction=b - a)), ds.now)
+            rbo_traj.append(rbo(base, traj))
+
+        b_ndcg = float(np.mean(base_ndcg))
+        d_ndcg = float(np.mean(div_ndcg))
+        ils_red = 1.0 - float(np.mean(div_ils)) / max(float(np.mean(base_ils)), 1e-9)
+        retention = d_ndcg / max(b_ndcg, 1e-9)
+        emit(f"table5/{name}/diverse_ils_reduction", 0.0, f"{ils_red:.3f}")
+        emit(f"table5/{name}/suppress_rbo", 0.0, f"{float(np.mean(rbo_sup)):.3f}")
+        emit(f"table5/{name}/decay7_age_shift_days", 0.0,
+             f"{float(np.mean(age_shift)):.1f}")
+        emit(f"table5/{name}/centroid_sim_gain", 0.0,
+             f"{float(np.mean(cent_gain)):+.3f}")
+        emit(f"table5/{name}/trajectory_rbo", 0.0, f"{float(np.mean(rbo_traj)):.3f}")
+        t6_rows.append((name, b_ndcg, d_ndcg, retention, ils_red))
+
+    for name, b, d, r, i_red in t6_rows:
+        emit(f"table6/{name}", 0.0,
+             f"baseline_ndcg={b:.3f} diverse_ndcg={d:.3f} "
+             f"retention={r:.2f} ils_reduction={i_red:.2f}")

@@ -1,0 +1,59 @@
+"""Shared benchmark fixtures: the production-like corpus + database.
+
+Built once per process (module cache). ``FLEX_BENCH_SCALE`` < 1.0 shrinks
+everything for smoke runs (tests set 0.02).
+"""
+
+from __future__ import annotations
+
+import os
+import sqlite3
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.vectorcache import VectorCache
+from repro.data.corpus import Chunk, build_database, generate_corpus
+from repro.embed import HashEmbedder
+from repro.sqlio.schema import load_embedding_matrix
+
+SCALE = float(os.environ.get("FLEX_BENCH_SCALE", "1.0"))
+N_CHUNKS = max(2000, int(240_000 * SCALE))
+N_SESSIONS = max(50, int(4_000 * SCALE))
+NOW = 1_770_000_000.0
+DIM = 128
+
+_cache: Dict[str, object] = {}
+
+
+def production_db() -> Tuple[sqlite3.Connection, VectorCache, list, HashEmbedder]:
+    if "db" not in _cache:
+        emb = HashEmbedder(DIM)
+        t0 = time.time()
+        chunks = generate_corpus(n_chunks=N_CHUNKS, n_sessions=N_SESSIONS,
+                                 seed=0, now=NOW)
+        conn = sqlite3.connect(":memory:", check_same_thread=False)
+        build_database(conn, chunks, emb)
+        ids, matrix, ts = load_embedding_matrix(conn, DIM)
+        cache = VectorCache(ids, matrix, ts, emb)
+        print(f"# built corpus n={N_CHUNKS} in {time.time()-t0:.1f}s", flush=True)
+        _cache["db"] = (conn, cache, chunks, emb)
+    return _cache["db"]  # type: ignore[return-value]
+
+
+def timed(fn, *, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds, warm cache (paper methodology)."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived (harness contract)."""
+    print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,63 @@
+"""Table 2 — latency breakdown on the production corpus (paper §4.1).
+
+Rows: base matmul / scoring+3 mods+MMR (Phase 2 only) / full pipeline /
+FTS5 keyword / hybrid JOIN. Both engines are reported: `reference`
+(paper-faithful, one matvec per direction) and `fused` (folded two-matvec,
+the beyond-paper formulation).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import NOW, emit, production_db, timed
+from repro.core.grammar import parse
+from repro.core import modulations as M
+from repro.core.materializer import Materializer
+
+TOKENS_3MODS = (
+    "similar:how the system works architecture diverse "
+    "suppress:website landing page design tagline "
+    "suppress:documentation readme community post"
+)
+
+FULL_SQL = (
+    "SELECT v.id, v.score, m.content FROM vec_ops("
+    f"'{TOKENS_3MODS}',"
+    "'SELECT id FROM messages WHERE type = ''assistant'' "
+    "AND length(content) > 300') v "
+    "JOIN messages m ON v.id = m.id ORDER BY v.score DESC LIMIT 5"
+)
+
+HYBRID_SQL = (
+    "SELECT k.id, k.rank, v.score, m.content FROM keyword('server') k "
+    "JOIN vec_ops('similar:server lifecycle debugging diverse') v ON k.id = v.id "
+    "JOIN messages m ON k.id = m.id ORDER BY v.score DESC LIMIT 10"
+)
+
+
+def run() -> None:
+    conn, cache, chunks, emb = production_db()
+    n = cache.matrix.shape[0]
+    q = cache.matrix[0]
+
+    t = timed(lambda: cache.matrix @ q)
+    emit("table2/base_matmul", t, f"n={n} d={cache.dim}")
+
+    plan = parse(TOKENS_3MODS, emb, cache.embeddings_for_ids)
+    for engine in ("reference", "fused"):
+        t = timed(lambda: cache.search_plan(plan, now=NOW, engine=engine))
+        emit(f"table2/phase2_3mods_mmr_{engine}", t, "phase2-only")
+
+    for engine in ("reference", "fused"):
+        mz = Materializer(conn, cache, now=NOW, engine=engine)
+        t = timed(lambda: mz.execute(FULL_SQL))
+        emit(f"table2/full_pipeline_{engine}", t, "all-phases")
+
+    mz = Materializer(conn, cache, now=NOW)
+    t = timed(lambda: mz.execute("SELECT k.id, k.rank FROM keyword('server') k "
+                                 "ORDER BY k.rank DESC LIMIT 10"))
+    emit("table2/fts5_keyword", t)
+
+    t = timed(lambda: mz.execute(HYBRID_SQL))
+    emit("table2/hybrid_join", t, "all-phases")

@@ -1,0 +1,39 @@
+"""Table 3 — SQL pre-filtering effect on Phase-2 latency (paper §4.2).
+
+Five filter configurations; timing is Phase 2 only (scoring + 3 modulations
++ MMR on the filtered candidate set), matching the paper's scope note.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import NOW, emit, production_db, timed
+from repro.core.grammar import parse
+from benchmarks.latency import TOKENS_3MODS
+
+FILTERS = {
+    "full_corpus": None,
+    "non_tool_30d": ("SELECT id FROM chunks WHERE type != 'tool_call' "
+                     f"AND created_at > {NOW} - 30*86400"),
+    "non_tool_7d": ("SELECT id FROM chunks WHERE type != 'tool_call' "
+                    f"AND created_at > {NOW} - 7*86400"),
+    "non_tool_24h": ("SELECT id FROM chunks WHERE type != 'tool_call' "
+                     f"AND created_at > {NOW} - 86400"),
+    "one_project_30d": ("SELECT id FROM chunks WHERE project = 'core' "
+                        f"AND created_at > {NOW} - 30*86400"),
+}
+
+
+def run() -> None:
+    conn, cache, chunks, emb = production_db()
+    plan = parse(TOKENS_3MODS, emb, cache.embeddings_for_ids)
+    for name, sql in FILTERS.items():
+        candidate_ids = None
+        n = cache.matrix.shape[0]
+        if sql is not None:
+            candidate_ids = [r[0] for r in conn.execute(sql).fetchall()]
+            n = len(candidate_ids)
+        if n == 0:
+            emit(f"table3/{name}", 0.0, "candidates=0 (skipped)")
+            continue
+        t = timed(lambda: cache.search_plan(plan, candidate_ids, now=NOW))
+        emit(f"table3/{name}", t, f"candidates={n}")

@@ -1,0 +1,37 @@
+"""Benchmark harness: one function per paper table + beyond-paper engine
+benches. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [table2 table3 ...]
+    FLEX_BENCH_SCALE=0.02 ... (smoke scale)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import behavioral, case_study, kernel_bench, latency, prefilter, scaling
+
+    suites = {
+        "table2": latency.run,
+        "table3": prefilter.run,
+        "table4": scaling.run,
+        "table5+6": behavioral.run,
+        "table7": case_study.run,
+        "kernel": kernel_bench.run,
+    }
+    want = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in want:
+        key = name if name in suites else {"table5": "table5+6", "table6": "table5+6"}.get(name)
+        if key is None:
+            raise SystemExit(f"unknown suite {name}; known: {list(suites)}")
+        t0 = time.time()
+        suites[key]()
+        print(f"# suite {key} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

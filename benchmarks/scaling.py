@@ -1,0 +1,47 @@
+"""Table 4 — corpus scaling 250K -> 1M chunks (paper §4.3).
+
+Larger corpora are constructed by combining embedding matrices (the paper
+does exactly this: 'constructed larger corpora by combining embeddings from
+multiple production datasets'). Reports base matmul, full Phase-2 pipeline
+(scoring + 3 mods + MMR), and the matrix's memory footprint.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import NOW, SCALE, emit, production_db, timed
+from benchmarks.latency import TOKENS_3MODS
+from repro.core.grammar import parse
+from repro.core.vectorcache import VectorCache
+
+SIZES = [int(s * SCALE) for s in (250_000, 500_000, 750_000, 1_000_000)]
+
+
+def run() -> None:
+    conn, cache, chunks, emb = production_db()
+    base = cache.matrix
+    ts = cache.timestamps
+    rng = np.random.default_rng(0)
+    for target in SIZES:
+        target = max(target, 1000)
+        reps = int(np.ceil(target / base.shape[0]))
+        mats, tss = [], []
+        for r in range(reps):
+            m = base if r == 0 else base + rng.normal(
+                0, 0.05, base.shape).astype(np.float32)
+            m = m / np.linalg.norm(m, axis=1, keepdims=True)
+            mats.append(m)
+            tss.append(ts)
+        matrix = np.concatenate(mats)[:target]
+        big = VectorCache(np.arange(target), matrix,
+                          np.concatenate(tss)[:target], emb, normalized=True)
+        plan = parse(TOKENS_3MODS, emb, big.embeddings_for_ids)
+        q = matrix[0]
+        t_mm = timed(lambda: matrix @ q, repeats=3)
+        t_full = timed(lambda: big.search_plan(plan, now=NOW), repeats=3)
+        mem_mb = matrix.nbytes / 1e6
+        emit(f"table4/matmul_{target}", t_mm, f"n={target}")
+        emit(f"table4/full_{target}", t_full, f"n={target} mem={mem_mb:.0f}MB")

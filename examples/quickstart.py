@@ -1,0 +1,64 @@
+"""Quickstart: build a small corpus, search it with PEM via plain SQL.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sqlite3
+
+from repro.data.corpus import build_database, generate_corpus
+from repro.embed import HashEmbedder
+from repro.serve.retrieval import RetrievalService
+
+NOW = 1_770_000_000.0
+
+
+def main() -> None:
+    print("== building a 20k-chunk session-history corpus ...")
+    emb = HashEmbedder(128)
+    chunks = generate_corpus(n_chunks=20_000, n_sessions=400, seed=0, now=NOW)
+    conn = sqlite3.connect(":memory:")
+    build_database(conn, chunks, emb)
+    svc = RetrievalService(conn, dim=128, embedder=emb, now=NOW)
+
+    print("\n== @orient — the agent's first call (schema discovery)")
+    res = svc.flex_search("@orient")
+    for section, data in res.rows:
+        if section == "shape":
+            print("  shape:", data["rows"])
+
+    print("\n== Phase 1+2+3 in one SQL statement (suppression case study)")
+    res = svc.flex_search("""
+        SELECT v.id, v.score, substr(m.content, 1, 48) AS preview
+        FROM vec_ops(
+         'similar:how the system works architecture
+          diverse
+          suppress:website landing page design tagline
+          suppress:documentation readme community post',
+         'SELECT id FROM messages
+          WHERE type = ''assistant'' AND length(content) > 300') v
+        JOIN messages m ON v.id = m.id
+        ORDER BY v.score DESC LIMIT 5
+    """)
+    for row in res.rows:
+        print(f"  id={row[0]:>6}  score={row[1]:+.3f}  {row[2]}")
+    print(f"  ({res.latency_ms:.1f} ms end-to-end)")
+
+    print("\n== hybrid: keyword AND semantic must both match")
+    res = svc.flex_search("""
+        SELECT k.id, k.rank, v.score FROM keyword('server') k
+        JOIN vec_ops('similar:server lifecycle debugging') v ON k.id = v.id
+        ORDER BY v.score DESC LIMIT 3
+    """)
+    for row in res.rows:
+        print(f"  id={row[0]:>6}  bm25={row[1]:.2f}  cosine={row[2]:+.3f}")
+
+    print("\n== explicit error -> agent rewrites and retries (paper §7)")
+    bad = svc.flex_search("SELECT v.id FROM vec_ops('decay:not_a_number') v")
+    print(f"  error: {bad.error}")
+    good = svc.flex_search(
+        "SELECT v.id FROM vec_ops('similar:retry decay:7') v LIMIT 1")
+    print(f"  retry ok: {good.ok}")
+
+
+if __name__ == "__main__":
+    main()

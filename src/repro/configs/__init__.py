@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+10 assigned architectures + the paper's own retrieval config (flexvec).
+Each ArchSpec knows its published full config, a reduced smoke config, its
+shape cells, and how to build (step_fn, ShapeDtypeStruct inputs) for the
+multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchSpec
+from repro.configs.lm import LM_ARCHS
+from repro.configs.gnn import GNN_ARCHS
+from repro.configs.recsys_archs import RECSYS_ARCHS
+from repro.configs.flexvec import FLEXVEC_ARCHS
+
+REGISTRY: Dict[str, ArchSpec] = {}
+for _a in (*LM_ARCHS, *GNN_ARCHS, *RECSYS_ARCHS, *FLEXVEC_ARCHS):
+    REGISTRY[_a.arch_id] = _a
+
+ASSIGNED = [
+    "granite-34b", "minitron-4b", "internlm2-1.8b",
+    "granite-moe-1b-a400m", "qwen3-moe-235b-a22b",
+    "pna",
+    "bst", "autoint", "dlrm-mlperf", "two-tower-retrieval",
+]
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch_id]

@@ -1,0 +1,70 @@
+"""Common machinery for architecture specs and dry-run cells."""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.dist.sharding import ShardingRules
+
+
+@dataclasses.dataclass
+class ShapeCell:
+    """One (arch x input-shape) dry-run unit."""
+
+    name: str
+    kind: str                      # train | prefill | decode | serve | retrieval
+    desc: str
+    skip_reason: Optional[str] = None  # e.g. long_500k on full-attention archs
+    beyond_assignment: bool = False    # extra cells we run anyway
+
+
+@dataclasses.dataclass
+class LoweredSpec:
+    """What dryrun.py feeds to jax.jit(...).lower(...)."""
+
+    fn: Callable
+    args: Tuple[Any, ...]          # ShapeDtypeStructs with shardings attached
+    donate_argnums: Tuple[int, ...] = ()
+    static_desc: str = ""
+
+
+def with_sharding(tree, spec_tree, mesh: Mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree."""
+
+    def att(x, s):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, s))
+
+    return jax.tree.map(att, tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+class ArchSpec(abc.ABC):
+    """One selectable architecture (``--arch``)."""
+
+    arch_id: str
+    family: str                    # lm | gnn | recsys | retrieval
+    source: str                    # public-literature citation
+
+    @abc.abstractmethod
+    def cells(self) -> Dict[str, ShapeCell]:
+        ...
+
+    @abc.abstractmethod
+    def build(self, shape: str, mesh: Mesh, rules: ShardingRules) -> LoweredSpec:
+        """Build the jit-able step + ShapeDtypeStruct inputs for a cell."""
+
+    @abc.abstractmethod
+    def smoke_run(self) -> Dict[str, Any]:
+        """Reduced-config forward/train step on CPU; returns diagnostics
+        (loss, shapes) for the per-arch smoke tests."""
+
+    def model_flops(self, shape: str) -> Optional[float]:
+        """Analytic useful-work FLOPs for the cell (6ND convention for LM
+        training, 2ND for forward-only; analytic op counts elsewhere).
+        Used for the roofline's MODEL_FLOPS / HLO_FLOPs ratio."""
+        return None

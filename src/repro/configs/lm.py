@@ -1,0 +1,248 @@
+"""The five assigned LM architectures (published configs, exact dims).
+
+Shapes (assignment):
+    train_4k     seq 4096  global_batch 256   -> train_step
+    prefill_32k  seq 32768 global_batch 32    -> prefill (serve)
+    decode_32k   seq 32768 global_batch 128   -> decode_step (1 tok, KV cache)
+    long_500k    seq 524288 global_batch 1    -> decode; SKIPPED for these
+                 pure full-attention archs per assignment (DESIGN.md §3.5),
+                 but additionally lowered as a beyond-assignment cell since
+                 decode against a KV cache is linear in context.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchSpec, LoweredSpec, ShapeCell, with_sharding
+from repro.dist.sharding import ShardingRules, default_rules
+from repro.models import transformer as T
+from repro.models.layers import LMConfig, MoEConfig
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+_SKIP_500K = (
+    "long_500k requires sub-quadratic attention; this arch is pure "
+    "full-attention (published config) -> skipped per assignment. A "
+    "beyond-assignment decode lowering (linear-in-context KV-cache decode "
+    "with sequence-sharded cache) is reported separately."
+)
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+class LMArch(ArchSpec):
+    family = "lm"
+
+    def __init__(self, arch_id: str, source: str, cfg: LMConfig, smoke_cfg: LMConfig):
+        self.arch_id = arch_id
+        self.source = source
+        self.cfg = cfg
+        self.smoke_cfg = smoke_cfg
+
+    def cells(self) -> Dict[str, ShapeCell]:
+        out = {}
+        for name, s in LM_SHAPES.items():
+            skip = _SKIP_500K if name == "long_500k" else None
+            out[name] = ShapeCell(
+                name=name, kind=s["kind"],
+                desc=f"seq={s['seq']} batch={s['batch']}",
+                skip_reason=skip,
+                beyond_assignment=(name == "long_500k"),
+            )
+        return out
+
+    def model_flops(self, shape: str) -> float:
+        s = LM_SHAPES[shape]
+        n = self.cfg.n_active_params
+        if s["kind"] == "train":
+            return 6.0 * n * s["batch"] * s["seq"]
+        if s["kind"] == "prefill":
+            return 2.0 * n * s["batch"] * s["seq"]
+        # decode: one token per sequence + KV-cache attention reads
+        cfg = self.cfg
+        att = 4.0 * s["batch"] * cfg.n_heads * cfg.head_dim * s["seq"] * cfg.n_layers
+        return 2.0 * n * s["batch"] + att
+
+    # -- dry-run builders ----------------------------------------------------
+
+    def _abstract_params(self):
+        return jax.eval_shape(lambda: T.init_params(self.cfg, jax.random.key(0)))
+
+    def build(self, shape: str, mesh: Mesh, rules: ShardingRules,
+              cfg: LMConfig = None) -> LoweredSpec:
+        cfg = cfg or self.cfg
+        s = LM_SHAPES[shape]
+        p_struct = jax.eval_shape(lambda: T.init_params(cfg, jax.random.key(0)))
+        p_spec = T.param_shardings(cfg, rules)
+        params = with_sharding(p_struct, p_spec, mesh)
+
+        if s["kind"] == "train":
+            o_struct = jax.eval_shape(init_opt_state, p_struct)
+            o_spec = OptState(
+                step=rules.spec(), m=p_spec,
+                v=jax.tree.map(lambda x: x, p_spec),
+            )
+            opt = with_sharding(o_struct, o_spec, mesh)
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((s["batch"], s["seq"]), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((s["batch"], s["seq"]), jnp.int32),
+            }
+            bspec = {"tokens": rules.spec("batch", "seq"),
+                     "labels": rules.spec("batch", "seq")}
+            batch = with_sharding(batch, bspec, mesh)
+            ocfg = AdamWConfig()
+
+            def train_step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(T.lm_loss)(params, batch, cfg, rules)
+                params, opt_state, metrics = adamw_update(ocfg, params, grads, opt_state)
+                return params, opt_state, {"loss": loss, **metrics}
+
+            return LoweredSpec(
+                fn=train_step, args=(params, opt, batch),
+                donate_argnums=(0, 1),
+                static_desc=f"{self.arch_id}/train_4k",
+            )
+
+        if s["kind"] == "prefill":
+            tokens = with_sharding(
+                jax.ShapeDtypeStruct((s["batch"], s["seq"]), jnp.int32),
+                rules.spec("batch", "seq"), mesh,
+            )
+
+            def prefill(params, tokens):
+                return T.prefill_step(params, tokens, cfg, rules)
+
+            return LoweredSpec(fn=prefill, args=(params, tokens),
+                               static_desc=f"{self.arch_id}/{shape}")
+
+        # decode: one new token against a KV cache of length seq
+        B, S = s["batch"], s["seq"]
+        if B % max(rules.size_of("batch"), 1) != 0:
+            # long_500k: batch=1 cannot shard -> sequence-shard the KV cache
+            # over the data axes instead (context parallelism for decode).
+            new_rules = dict(rules.rules)
+            new_rules["seq"] = rules.rules["batch"]
+            new_rules["batch"] = None
+            rules = dataclasses.replace(rules, rules=new_rules)
+        cache_struct = jax.eval_shape(lambda: T.make_cache(cfg, B, S))
+        cspec = T.cache_shardings(cfg, rules)
+        cache = with_sharding(cache_struct, cspec, mesh)
+        token = with_sharding(
+            jax.ShapeDtypeStruct((B, 1), jnp.int32), rules.spec("batch", None), mesh)
+        clen = with_sharding(
+            jax.ShapeDtypeStruct((), jnp.int32), rules.spec(), mesh)
+
+        def decode(params, token, cache, cache_len):
+            return T.decode_step(params, token, cache, cache_len, cfg, rules)
+
+        return LoweredSpec(
+            fn=decode, args=(params, token, cache, clen),
+            donate_argnums=(2,),
+            static_desc=f"{self.arch_id}/{shape}",
+        )
+
+    # -- loop-aware cost extrapolation ----------------------------------------
+
+    def cost_probe_configs(self, shape: str):
+        """Two unrolled low-layer-count variants for cost extrapolation.
+
+        The production lowering scans layers (one while loop, flat compile
+        time) but XLA cost_analysis counts loop bodies ONCE. These probes
+        unroll {2,4} layers with single-chunk attention; dryrun.py takes the
+        per-layer delta and extrapolates to n_layers (layers are identical,
+        so the extrapolation is exact for matmul work).
+        """
+        s = LM_SHAPES[shape]
+        out = []
+        for l in (2, 4):
+            out.append((l, dataclasses.replace(
+                self.cfg, n_layers=l, scan_unroll=l, q_chunk=s["seq"],
+            )))
+        return out, self.cfg.n_layers
+
+    # -- smoke ----------------------------------------------------------------
+
+    def smoke_run(self) -> Dict[str, Any]:
+        cfg = self.smoke_cfg
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        rules = default_rules(mesh)
+        with mesh:
+            params = T.init_params(cfg, jax.random.key(0))
+            B, S = 2, 16
+            tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+            batch = {"tokens": tokens, "labels": tokens}
+            loss, grads = jax.value_and_grad(T.lm_loss)(params, batch, cfg, rules)
+            opt = init_opt_state(params)
+            params2, opt2, metrics = adamw_update(AdamWConfig(), params, grads, opt)
+            logits_last, cache = T.prefill_step(params, tokens, cfg, rules)
+            big = T.make_cache(cfg, B, S + 4)
+            big = tuple(
+                jax.lax.dynamic_update_slice(b, c, (0, 0, 0, 0, 0))
+                for b, c in zip(big, cache)
+            )
+            dec_logits, _ = T.decode_step(
+                params, tokens[:, :1], big, jnp.int32(S), cfg, rules)
+        return {
+            "loss": float(loss),
+            "grad_norm": float(metrics["grad_norm"]),
+            "logits_shape": tuple(logits_last.shape),
+            "decode_shape": tuple(dec_logits.shape),
+            "vocab": cfg.vocab,
+        }
+
+
+def _smoke_of(cfg: LMConfig) -> LMConfig:
+    """Same family (mlp type, GQA ratio, MoE-ness), tiny dims."""
+    moe = None
+    if cfg.moe is not None:
+        moe = MoEConfig(n_experts=min(8, cfg.moe.n_experts), top_k=min(2, cfg.moe.top_k))
+    kv = max(1, min(2, cfg.n_kv_heads))
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=kv, head_dim=16,
+        d_ff=96 if moe is None else 32,
+        vocab=128, dtype=jnp.float32, q_chunk=8, remat=False, moe=moe,
+    )
+
+
+def _mk(arch_id, source, **kw) -> LMArch:
+    cfg = LMConfig(name=arch_id, **kw)
+    return LMArch(arch_id, source, cfg, _smoke_of(cfg))
+
+
+LM_ARCHS = [
+    # 88L d6144 48H MQA(kv=1) dff 24576 vocab 49152, non-gated GELU (~34B)
+    _mk("granite-34b", "arXiv:2405.04324; hf",
+        n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1, head_dim=128,
+        d_ff=24576, vocab=49152, mlp_type="gelu"),
+    # 32L d3072 24H GQA(kv=8) dff 9216 vocab 256000, squared-ReLU (~4B)
+    _mk("minitron-4b", "arXiv:2407.14679; hf",
+        n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8, head_dim=128,
+        d_ff=9216, vocab=256000, mlp_type="relu2"),
+    # 24L d2048 16H GQA(kv=8) dff 8192 vocab 92544, SwiGLU (~1.9B)
+    _mk("internlm2-1.8b", "arXiv:2403.17297; hf",
+        n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+        d_ff=8192, vocab=92544, mlp_type="swiglu"),
+    # 24L d1024 16H GQA(kv=8) per-expert dff 512, MoE 32e top-8 (~1.4B/0.4B)
+    _mk("granite-moe-1b-a400m", "hf:ibm-granite/granite-3.0-1b-a400m-base",
+        n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8, head_dim=64,
+        d_ff=512, vocab=49155, mlp_type="swiglu",
+        moe=MoEConfig(n_experts=32, top_k=8)),
+    # 94L d4096 64H GQA(kv=4) per-expert dff 1536, MoE 128e top-8 (~235B/22B)
+    _mk("qwen3-moe-235b-a22b", "hf:Qwen/Qwen3-30B-A3B (scaled cfg per assignment)",
+        n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, head_dim=128,
+        d_ff=1536, vocab=151936, mlp_type="swiglu",
+        moe=MoEConfig(n_experts=128, top_k=8)),
+]

@@ -1,0 +1,308 @@
+"""Query materializer (paper contribution #1, §3.2).
+
+``vec_ops()`` and ``keyword()`` are NOT SQLite functions or virtual tables.
+They are pseudo-functions recognized here, *before* SQLite sees the query:
+
+1. scan the agent's SQL for pseudo-function calls in FROM/JOIN position
+   (a quote-aware scanner, not a full SQL parser — paper §7 Limitations),
+2. dispatch each call to its engine (numpy/PEM for ``vec_ops``, FTS5 for
+   ``keyword``), running the embedded Phase-1 pre-filter SQL first,
+3. write each result to a temp table,
+4. rewrite the statement to reference the temp tables,
+5. hand the rewritten statement to SQLite (Phase 3 composition).
+
+Failure mode is an explicit ``MaterializeError`` (the agent retries), never
+silent misexecution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import re
+import sqlite3
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+# Monotonic across all Materializer instances sharing a connection: temp
+# tables live on the CONNECTION, so names must be process-unique.
+_TEMP_IDS = itertools.count(1)
+
+from repro.core.vectorcache import VectorCache
+
+_PSEUDO_FUNCS = ("vec_ops", "keyword")
+_READONLY_RE = re.compile(r"^\s*(SELECT|WITH)\b", re.IGNORECASE)
+
+
+class MaterializeError(RuntimeError):
+    """Explicit rewrite/execution failure surfaced to the agent via MCP."""
+
+
+@dataclasses.dataclass
+class PseudoCall:
+    func: str            # 'vec_ops' | 'keyword'
+    args: List[str]      # decoded SQL string-literal arguments
+    start: int           # span of the call in the original SQL text
+    end: int
+
+
+# ---------------------------------------------------------------------------
+# Quote-aware scanning
+# ---------------------------------------------------------------------------
+
+
+def _scan_calls(sql: str) -> List[PseudoCall]:
+    """Find pseudo-function calls at the top level of the statement.
+
+    Respects single-quoted SQL strings (with '' escapes) so that e.g. a
+    pre-filter argument containing ``type = ''assistant''`` does not confuse
+    the paren matcher. Nested pseudo-calls inside the *arguments* are not
+    expanded (the Phase-1 subquery is plain SQL by construction).
+    """
+    calls: List[PseudoCall] = []
+    i, n = 0, len(sql)
+    while i < n:
+        c = sql[i]
+        if c == "'":
+            i = _skip_string(sql, i)
+            continue
+        matched = None
+        for name in _PSEUDO_FUNCS:
+            if sql.startswith(name, i) and _is_word_boundary(sql, i, len(name)):
+                j = i + len(name)
+                while j < n and sql[j] in " \t\n":
+                    j += 1
+                if j < n and sql[j] == "(":
+                    matched = (name, j)
+                break
+        if matched is None:
+            i += 1
+            continue
+        name, open_paren = matched
+        close = _match_paren(sql, open_paren)
+        args = _split_args(sql[open_paren + 1 : close])
+        calls.append(PseudoCall(func=name, args=args, start=i, end=close + 1))
+        i = close + 1
+    return calls
+
+
+def _skip_string(sql: str, i: int) -> int:
+    """i points at an opening quote; return index just past the string."""
+    j = i + 1
+    n = len(sql)
+    while j < n:
+        if sql[j] == "'":
+            if j + 1 < n and sql[j + 1] == "'":
+                j += 2
+                continue
+            return j + 1
+        j += 1
+    raise MaterializeError(f"unterminated string literal at offset {i}")
+
+
+def _is_word_boundary(sql: str, i: int, length: int) -> bool:
+    before_ok = i == 0 or not (sql[i - 1].isalnum() or sql[i - 1] == "_")
+    j = i + length
+    after_ok = j >= len(sql) or not (sql[j].isalnum() or sql[j] == "_")
+    return before_ok and after_ok
+
+
+def _match_paren(sql: str, open_paren: int) -> int:
+    depth = 0
+    i = open_paren
+    n = len(sql)
+    while i < n:
+        c = sql[i]
+        if c == "'":
+            i = _skip_string(sql, i)
+            continue
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+        i += 1
+    raise MaterializeError(f"unbalanced parentheses at offset {open_paren}")
+
+
+def _split_args(body: str) -> List[str]:
+    """Split top-level comma-separated string-literal arguments and decode."""
+    args: List[str] = []
+    i, n = 0, len(body)
+    depth = 0
+    start = 0
+    while i < n:
+        c = body[i]
+        if c == "'":
+            i = _skip_string(body, i)
+            continue
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        elif c == "," and depth == 0:
+            args.append(body[start:i])
+            start = i + 1
+        i += 1
+    tail = body[start:].strip()
+    if tail or args:
+        args.append(body[start:])
+    decoded = []
+    for a in args:
+        a = a.strip()
+        if not (a.startswith("'") and a.endswith("'") and len(a) >= 2):
+            raise MaterializeError(
+                f"pseudo-function arguments must be string literals, got: {a[:60]!r}"
+            )
+        decoded.append(a[1:-1].replace("''", "'"))
+    return decoded
+
+
+# ---------------------------------------------------------------------------
+# The materializer
+# ---------------------------------------------------------------------------
+
+
+class Materializer:
+    """Rewrites agent SQL, dispatching pseudo-functions to their engines."""
+
+    def __init__(
+        self,
+        conn: sqlite3.Connection,
+        cache: Optional[VectorCache] = None,
+        *,
+        fts_table: str = "chunks_fts",
+        now: Optional[float] = None,
+        engine: str = "reference",
+    ) -> None:
+        self.conn = conn
+        self.cache = cache
+        self.fts_table = fts_table
+        self.now = now
+        self.engine = engine
+
+    # -- public API ----------------------------------------------------------
+
+    def execute(
+        self, sql: str, params: Sequence = ()
+    ) -> Tuple[List[str], List[tuple]]:
+        """Full 3-phase execution. Returns (column names, rows)."""
+        rewritten = self.rewrite(sql)
+        if not _READONLY_RE.match(rewritten):
+            raise MaterializeError("only read-only SELECT/WITH statements are allowed")
+        try:
+            cur = self.conn.execute(rewritten, params)
+        except sqlite3.Error as e:
+            raise MaterializeError(f"SQL error after rewrite: {e}") from e
+        cols = [d[0] for d in cur.description] if cur.description else []
+        return cols, cur.fetchall()
+
+    def rewrite(self, sql: str) -> str:
+        """Phases 1+2: materialize every pseudo-call, rewrite references."""
+        calls = _scan_calls(sql)
+        out = []
+        pos = 0
+        for call in calls:
+            table = self._materialize(call)
+            out.append(sql[pos : call.start])
+            out.append(table)
+            pos = call.end
+        out.append(sql[pos:])
+        return "".join(out)
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _materialize(self, call: PseudoCall) -> str:
+        if call.func == "vec_ops":
+            return self._materialize_vec_ops(call)
+        if call.func == "keyword":
+            return self._materialize_keyword(call)
+        raise MaterializeError(f"unknown pseudo-function {call.func}")
+
+    def _fresh_table(self, prefix: str) -> str:
+        name = f"_{prefix}_{next(_TEMP_IDS)}"
+        self.conn.execute(f"DROP TABLE IF EXISTS {name}")
+        return name
+
+    def _materialize_vec_ops(self, call: PseudoCall) -> str:
+        if self.cache is None:
+            raise MaterializeError("vec_ops: no VectorCache attached")
+        if not 1 <= len(call.args) <= 2:
+            raise MaterializeError(
+                f"vec_ops expects 1-2 string arguments, got {len(call.args)}"
+            )
+        tokens = call.args[0]
+        candidate_ids = None
+        if len(call.args) == 2 and call.args[1].strip():
+            prefilter_sql = call.args[1]
+            if not _READONLY_RE.match(prefilter_sql):
+                raise MaterializeError("vec_ops pre-filter must be a SELECT")
+            try:
+                rows = self.conn.execute(prefilter_sql).fetchall()
+            except sqlite3.Error as e:
+                raise MaterializeError(f"pre-filter SQL failed: {e}") from e
+            candidate_ids = [r[0] for r in rows]
+            if not candidate_ids:
+                # Paper §7: malformed pre-filters returning no rows are an
+                # agent error class; we surface an EMPTY result, not a crash.
+                table = self._fresh_table("vec_ops")
+                self.conn.execute(
+                    f"CREATE TEMP TABLE {table} (id INTEGER PRIMARY KEY, score REAL)"
+                )
+                return table
+
+        try:
+            cols, results = self.cache.search_full(
+                tokens, candidate_ids, now=self.now, engine=self.engine
+            )
+        except Exception as e:  # grammar errors -> explicit failure
+            raise MaterializeError(f"vec_ops failed: {e}") from e
+
+        table = self._fresh_table("vec_ops")
+        # base columns + any structural-operator columns (§3.2):
+        # cluster (INTEGER k-means label), central (REAL centrality)
+        decls = {"id": "INTEGER PRIMARY KEY", "score": "REAL",
+                 "cluster": "INTEGER", "central": "REAL"}
+        col_sql = ", ".join(f"{c} {decls[c]}" for c in cols)
+        self.conn.execute(f"CREATE TEMP TABLE {table} ({col_sql})")
+        ph = ",".join("?" * len(cols))
+        self.conn.executemany(
+            f"INSERT OR REPLACE INTO {table} ({', '.join(cols)}) VALUES ({ph})",
+            results,
+        )
+        return table
+
+    def _materialize_keyword(self, call: PseudoCall) -> str:
+        if len(call.args) != 1:
+            raise MaterializeError("keyword expects exactly one string argument")
+        term = call.args[0]
+        table = self._fresh_table("kw")
+        self.conn.execute(
+            f"CREATE TEMP TABLE {table} (id INTEGER PRIMARY KEY, rank REAL, snippet TEXT)"
+        )
+        rows = self._fts_query(term)
+        self.conn.executemany(
+            f"INSERT OR REPLACE INTO {table} (id, rank, snippet) VALUES (?, ?, ?)",
+            rows,
+        )
+        return table
+
+    def _fts_query(self, term: str) -> List[tuple]:
+        """FTS5 BM25 with automatic fallback quoting for special chars."""
+        fts = self.fts_table
+        sql = (
+            f"SELECT rowid, -bm25({fts}) AS rank, "
+            f"snippet({fts}, -1, '[', ']', '…', 12) "
+            f"FROM {fts} WHERE {fts} MATCH ? ORDER BY rank DESC LIMIT 500"
+        )
+        try:
+            return self.conn.execute(sql, (term,)).fetchall()
+        except sqlite3.OperationalError:
+            # Fallback quoting (paper Appendix B): dots/operators in the term
+            # break FTS5 syntax; quote each whitespace token and retry.
+            quoted = " ".join(f'"{t}"' for t in term.split())
+            try:
+                return self.conn.execute(sql, (quoted,)).fetchall()
+            except sqlite3.OperationalError as e:
+                raise MaterializeError(f"keyword: FTS5 rejected {term!r}: {e}") from e

@@ -1,0 +1,280 @@
+"""Programmatic Embedding Modulation (PEM) — the paper's core operator set.
+
+Each modulation is a pure function over (embedding matrix ``M``, score array
+``s``, query vector ``q``).  The formulas are paper Table 1, verbatim:
+
+    suppress:X    s -= w * (M @ embed(X))                       (w = 0.5)
+    decay:N       s *= 1 / (1 + days / N)
+    centroid:ids  q = a*q + (1-a)*mean(E[ids]); q /= ||q||       (a = 0.5)
+    from:A to:B   s  = 0.5*s + 0.5*(M @ (embed(B) - embed(A)))
+    diverse       MMR: score = lam*rel - (1-lam)*max_sim         (lam = 0.7)
+
+Modulations execute in a FIXED order regardless of token order (paper §3.3):
+
+    centroid -> base similarity -> trajectory -> decay -> suppress -> diverse
+
+The functions below are written against the array-API subset shared by numpy
+and jax.numpy, so the same code path is the oracle for (a) the paper-faithful
+host/numpy engine, (b) the jit'd JAX engine, and (c) the Pallas kernel tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import numpy as np
+
+Array = Any  # np.ndarray | jax.Array
+
+# Paper defaults (§4.4): suppress w=0.5, centroid alpha=0.5, trajectory blend
+# 0.5/0.5, decay half-life 30 days, diverse lambda=0.7 with 3x oversample,
+# candidate pool K=500.
+DEFAULT_SUPPRESS_WEIGHT = 0.5
+DEFAULT_CENTROID_ALPHA = 0.5
+DEFAULT_TRAJECTORY_BLEND = 0.5
+DEFAULT_DECAY_HALF_LIFE = 30.0
+DEFAULT_MMR_LAMBDA = 0.7
+DEFAULT_MMR_OVERSAMPLE = 3
+DEFAULT_POOL = 500
+
+
+def l2_normalize(v: Array, eps: float = 1e-12) -> Array:
+    """L2-normalize along the last axis. Works for numpy and jax arrays."""
+    nrm = (v * v).sum(axis=-1, keepdims=True) ** 0.5
+    return v / (nrm + eps)
+
+
+# ---------------------------------------------------------------------------
+# Specs — a declarative plan the grammar parser emits and every backend
+# (numpy host engine, jit JAX engine, fused Pallas kernel) consumes.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SuppressSpec:
+    """`suppress:X` — subtract directional similarity toward a concept."""
+
+    direction: Array  # (d,) L2-normalized embed(X)
+    weight: float = DEFAULT_SUPPRESS_WEIGHT
+
+
+@dataclasses.dataclass(frozen=True)
+class DecaySpec:
+    """`decay:N` — reciprocal temporal decay with an N-day half-life."""
+
+    half_life_days: float = DEFAULT_DECAY_HALF_LIFE
+
+
+@dataclasses.dataclass(frozen=True)
+class CentroidSpec:
+    """`centroid:ids` — shift the query toward the mean of example embeds."""
+
+    examples: Array  # (m, d) embeddings of the example chunks
+    alpha: float = DEFAULT_CENTROID_ALPHA
+
+
+@dataclasses.dataclass(frozen=True)
+class TrajectorySpec:
+    """`from:A to:B` — blend directional similarity along embed(B)-embed(A)."""
+
+    direction: Array  # (d,) = embed(B) - embed(A), NOT renormalized (paper)
+    blend: float = DEFAULT_TRAJECTORY_BLEND
+
+
+@dataclasses.dataclass(frozen=True)
+class DiverseSpec:
+    """`diverse` — MMR iterative selection from an oversampled pool."""
+
+    lam: float = DEFAULT_MMR_LAMBDA
+    oversample: int = DEFAULT_MMR_OVERSAMPLE
+
+
+@dataclasses.dataclass(frozen=True)
+class ModulationPlan:
+    """Everything Phase 2 needs, in executable form.
+
+    ``query`` is the raw `similar:` embedding; centroid shifting happens at
+    execution time so the plan remains a faithful record of the request.
+    ``cluster``/``central`` are the §3.2 STRUCTURAL operators: they compute
+    over the selected candidates and surface as extra temp-table columns.
+    """
+
+    query: Array  # (d,) L2-normalized
+    centroid: Optional[CentroidSpec] = None
+    trajectory: Optional[TrajectorySpec] = None
+    decay: Optional[DecaySpec] = None
+    suppress: Tuple[SuppressSpec, ...] = ()
+    diverse: Optional[DiverseSpec] = None
+    pool: int = DEFAULT_POOL
+    cluster: Optional[int] = None   # cluster:K -> k-means label column
+    central: bool = False           # central -> similarity-centrality column
+
+    @property
+    def n_directions(self) -> int:
+        """Query-side directions the fused kernel must score (incl. base)."""
+        return 1 + (1 if self.trajectory is not None else 0) + len(self.suppress)
+
+
+# ---------------------------------------------------------------------------
+# The five modulations, as pure functions (paper Table 1).
+# ---------------------------------------------------------------------------
+
+
+def apply_centroid(query: Array, spec: CentroidSpec) -> Array:
+    """q = alpha*q + (1-alpha)*mean(E[ids]);  q /= ||q||   (query-side)."""
+    center = spec.examples.mean(axis=0)
+    q = spec.alpha * query + (1.0 - spec.alpha) * center
+    return l2_normalize(q)
+
+
+def base_similarity(matrix: Array, query: Array) -> Array:
+    """Brute-force cosine scores for L2-normalized rows: one matvec."""
+    return matrix @ query
+
+
+def apply_trajectory(scores: Array, matrix: Array, spec: TrajectorySpec) -> Array:
+    """scores = (1-b)*sim + b*(M @ (embed(B) - embed(A))), b = 0.5 default."""
+    directional = matrix @ spec.direction
+    return (1.0 - spec.blend) * scores + spec.blend * directional
+
+
+def apply_decay(scores: Array, days_ago: Array, spec: DecaySpec) -> Array:
+    """scores *= 1 / (1 + days/N). Not a filter: old-but-relevant survives."""
+    return scores * (1.0 / (1.0 + days_ago / spec.half_life_days))
+
+
+def apply_suppress(scores: Array, matrix: Array, spec: SuppressSpec) -> Array:
+    """scores -= w * (M @ embed(X)). Multiple suppressions stack additively."""
+    return scores - spec.weight * (matrix @ spec.direction)
+
+
+def mmr_select_np(
+    pool_embeds: np.ndarray,
+    pool_scores: np.ndarray,
+    k: int,
+    lam: float = DEFAULT_MMR_LAMBDA,
+) -> np.ndarray:
+    """Maximal Marginal Relevance over a candidate pool (numpy host path).
+
+    Iteratively picks argmax of  lam*rel - (1-lam)*max_sim(selected)  from the
+    remaining pool.  O(k * n * d); the pool is small (paper: 3x oversample of
+    K=500) so this is the paper's ``k x n pairwise`` cost.
+    """
+    n = pool_scores.shape[0]
+    k = min(k, n)
+    selected = np.empty(k, dtype=np.int64)
+    max_sim = np.full(n, -np.inf)
+    taken = np.zeros(n, dtype=bool)
+    for i in range(k):
+        mmr = lam * pool_scores - (1.0 - lam) * np.where(
+            np.isneginf(max_sim), 0.0, max_sim
+        )
+        mmr = np.where(taken, -np.inf, mmr)
+        j = int(np.argmax(mmr))
+        selected[i] = j
+        taken[j] = True
+        sim_to_j = pool_embeds @ pool_embeds[j]
+        max_sim = np.maximum(max_sim, sim_to_j)
+    return selected
+
+
+def modulate_scores(
+    matrix: Array,
+    days_ago: Optional[Array],
+    plan: ModulationPlan,
+) -> Array:
+    """Run the score-side fixed-order pipeline (no selection).
+
+    Order (paper §3.3): centroid (query shift) -> base similarity ->
+    trajectory -> decay -> suppress.  `diverse` changes selection, not
+    scoring, and is applied by the caller over the top-pool candidates.
+    """
+    q = plan.query
+    if plan.centroid is not None:
+        q = apply_centroid(q, plan.centroid)
+    scores = base_similarity(matrix, q)
+    if plan.trajectory is not None:
+        scores = apply_trajectory(scores, matrix, plan.trajectory)
+    if plan.decay is not None:
+        if days_ago is None:
+            raise ValueError("decay: modulation requires per-chunk timestamps")
+        scores = apply_decay(scores, days_ago, plan.decay)
+    for spec in plan.suppress:
+        scores = apply_suppress(scores, matrix, spec)
+    return scores
+
+
+def effective_query(plan: ModulationPlan) -> Array:
+    """The query vector after centroid shift (what base similarity uses)."""
+    q = plan.query
+    if plan.centroid is not None:
+        q = apply_centroid(q, plan.centroid)
+    return q
+
+
+def stacked_directions(plan: ModulationPlan) -> Tuple[Array, Array]:
+    """Fuse all query-side directions into one (d, m) panel + (m,) weights.
+
+    This is the beyond-paper TPU formulation: because trajectory and suppress
+    are LINEAR in the scores, the whole pre-decay/post-decay pipeline is
+
+        scores = (M @ Q_all) @ w        with decay folded multiplicatively.
+
+    Column 0 is the (centroid-shifted) query; its weight absorbs the
+    trajectory blend ((1-b) scaling of the base sim). Trajectory contributes
+    column with weight b. Suppressions contribute columns with weight -w_i.
+
+    NOTE decay ordering: the paper applies decay BEFORE suppress, i.e.
+        s = decay(
+              (1-b)*sim + b*traj
+            ) - sum_i w_i * (M @ x_i)
+    so the fused form is  decay * (M @ Q_pre) @ w_pre  +  (M @ Q_sup) @ w_sup.
+    `stacked_directions` returns the PRE-decay panel columns first and the
+    suppress columns after; the consumer splits at `1 + has_trajectory`.
+    """
+    np_mod = _module_of(plan.query)
+    q = effective_query(plan)
+    cols = [q]
+    weights = [1.0]
+    if plan.trajectory is not None:
+        weights[0] = 1.0 - plan.trajectory.blend
+        cols.append(plan.trajectory.direction)
+        weights.append(plan.trajectory.blend)
+    for spec in plan.suppress:
+        cols.append(spec.direction)
+        weights.append(-spec.weight)
+    panel = np_mod.stack(cols, axis=1)  # (d, m)
+    w = np_mod.asarray(weights, dtype=panel.dtype)
+    return panel, w
+
+
+def fused_modulate_scores(
+    matrix: Array,
+    days_ago: Optional[Array],
+    plan: ModulationPlan,
+) -> Array:
+    """Single-GEMM formulation of `modulate_scores` (algebraically equal).
+
+    scores = decay * ((M @ Q_pre) @ w_pre) + (M @ Q_sup) @ w_sup
+    """
+    panel, w = stacked_directions(plan)
+    n_pre = 1 + (1 if plan.trajectory is not None else 0)
+    all_scores = matrix @ panel  # (N, m) — ONE pass over the corpus matrix
+    pre = all_scores[:, :n_pre] @ w[:n_pre]
+    if plan.decay is not None:
+        if days_ago is None:
+            raise ValueError("decay: modulation requires per-chunk timestamps")
+        pre = apply_decay(pre, days_ago, plan.decay)
+    if panel.shape[1] > n_pre:
+        pre = pre + all_scores[:, n_pre:] @ w[n_pre:]
+    return pre
+
+
+def _module_of(x: Array):
+    """numpy-or-jax dispatch for the few non-operator calls we need."""
+    if type(x).__module__.startswith("jax") or "Array" in type(x).__name__:
+        import jax.numpy as jnp
+
+        return jnp
+    return np

@@ -1,0 +1,192 @@
+"""VectorCache — the production Phase-2 engine (paper §3.4.1).
+
+Holds the corpus embedding matrix in memory (the paper's core requirement),
+parses the token grammar, runs the fixed-order modulation pipeline, and
+returns the top-``pool`` scored candidates for Phase 3 composition.
+
+Two execution paths, algebraically identical (tested against each other):
+
+* ``engine="reference"`` — paper-faithful: one matvec per direction
+  (base + each suppress + trajectory), exactly Table 1.
+* ``engine="fused"``     — beyond-paper: all directions stacked into one
+  skinny GEMM so the corpus matrix is streamed once (see
+  ``modulations.fused_modulate_scores``; on TPU this is the Pallas kernel
+  ``repro.kernels.pem_score``).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import grammar
+from repro.core import modulations as M
+
+SECONDS_PER_DAY = 86400.0
+
+
+class VectorCache:
+    """In-memory corpus matrix + token-grammar search (paper VectorCache)."""
+
+    def __init__(
+        self,
+        ids: Sequence[int],
+        matrix: np.ndarray,
+        timestamps: Optional[Sequence[float]] = None,
+        embed_fn: Optional[grammar.EmbedFn] = None,
+        *,
+        normalized: bool = False,
+    ) -> None:
+        self.ids = np.asarray(ids, dtype=np.int64)
+        matrix = np.asarray(matrix, dtype=np.float32)
+        if matrix.ndim != 2 or matrix.shape[0] != self.ids.shape[0]:
+            raise ValueError(
+                f"matrix shape {matrix.shape} inconsistent with {len(self.ids)} ids"
+            )
+        self.matrix = matrix if normalized else np.asarray(M.l2_normalize(matrix))
+        self.timestamps = (
+            np.asarray(timestamps, dtype=np.float64) if timestamps is not None else None
+        )
+        self.embed_fn = embed_fn
+        self._row_of_id: Dict[int, int] = {int(i): r for r, i in enumerate(self.ids)}
+        self.dim = self.matrix.shape[1]
+
+    # -- id <-> row helpers --------------------------------------------------
+
+    def rows_for_ids(self, chunk_ids: Sequence[int]) -> np.ndarray:
+        rows = [self._row_of_id[int(i)] for i in chunk_ids if int(i) in self._row_of_id]
+        return np.asarray(rows, dtype=np.int64)
+
+    def embeddings_for_ids(self, chunk_ids: Sequence[int]) -> np.ndarray:
+        rows = self.rows_for_ids(chunk_ids)
+        if rows.size == 0:
+            raise grammar.GrammarError(
+                f"centroid: none of the ids {list(chunk_ids)[:5]}... exist in the cache"
+            )
+        return self.matrix[rows]
+
+    # -- the search entry point ----------------------------------------------
+
+    def search(
+        self,
+        tokens: str,
+        candidate_ids: Optional[Sequence[int]] = None,
+        *,
+        now: Optional[float] = None,
+        engine: str = "reference",
+        embed_fn: Optional[grammar.EmbedFn] = None,
+    ) -> List[Tuple[int, float]]:
+        """Run Phase 2: parse tokens, score candidates, select top-pool.
+
+        ``candidate_ids`` is the Phase-1 pre-filter output (None = full
+        corpus, the paper's fallback for unstructured corpora). Returns
+        ``[(chunk_id, score), ...]`` sorted by descending score — exactly the
+        rows the materializer writes to the temp table.
+        """
+        embedder = embed_fn or self.embed_fn
+        if embedder is None:
+            raise ValueError("VectorCache.search requires an embed function")
+        plan = grammar.parse(tokens, embedder, self.embeddings_for_ids)
+        return self.search_plan(plan, candidate_ids, now=now, engine=engine)
+
+    def search_full(
+        self,
+        tokens: str,
+        candidate_ids: Optional[Sequence[int]] = None,
+        *,
+        now: Optional[float] = None,
+        engine: str = "reference",
+    ):
+        """Like :meth:`search` but also computes the §3.2 STRUCTURAL
+        operators (`cluster:K`, `central`) over the selected candidates.
+        Returns (column_names, rows) — the materializer's temp-table shape.
+        """
+        if self.embed_fn is None:
+            raise ValueError("VectorCache.search_full requires an embed function")
+        plan = grammar.parse(tokens, self.embed_fn, self.embeddings_for_ids)
+        base = self.search_plan(plan, candidate_ids, now=now, engine=engine)
+        cols = ["id", "score"]
+        if plan.cluster is not None:
+            cols.append("cluster")
+        if plan.central:
+            cols.append("central")
+        if (plan.cluster is None and not plan.central) or not base:
+            return cols, base
+        cols = ["id", "score"]
+        from repro.core import structural
+
+        sel_rows = self.rows_for_ids([i for i, _ in base])
+        embeds = self.matrix[sel_rows]
+        extra = []
+        if plan.cluster is not None:
+            cols.append("cluster")
+            extra.append(structural.kmeans_labels(embeds, plan.cluster))
+        if plan.central:
+            cols.append("central")
+            extra.append(structural.centrality(embeds))
+        rows = [
+            tuple(r) + tuple(float(e[i]) if e.dtype.kind == "f" else int(e[i])
+                             for e in extra)
+            for i, r in enumerate(base)
+        ]
+        return cols, rows
+
+    def search_plan(
+        self,
+        plan: M.ModulationPlan,
+        candidate_ids: Optional[Sequence[int]] = None,
+        *,
+        now: Optional[float] = None,
+        engine: str = "reference",
+    ) -> List[Tuple[int, float]]:
+        sub_rows: Optional[np.ndarray] = None
+        if candidate_ids is not None:
+            sub_rows = self.rows_for_ids(candidate_ids)
+            if sub_rows.size == 0:
+                return []
+            matrix = self.matrix[sub_rows]
+            ids = self.ids[sub_rows]
+        else:
+            matrix = self.matrix
+            ids = self.ids
+
+        days_ago = None
+        if plan.decay is not None:
+            if self.timestamps is None:
+                raise ValueError("decay: requires timestamps in the cache")
+            ts = self.timestamps if sub_rows is None else self.timestamps[sub_rows]
+            ref = time.time() if now is None else now
+            days_ago = np.maximum((ref - ts) / SECONDS_PER_DAY, 0.0).astype(np.float32)
+
+        if engine == "fused":
+            scores = np.asarray(M.fused_modulate_scores(matrix, days_ago, plan))
+        elif engine == "reference":
+            scores = np.asarray(M.modulate_scores(matrix, days_ago, plan))
+        else:
+            raise ValueError(f"unknown engine {engine!r}")
+
+        k = min(plan.pool, scores.shape[0])
+        if plan.diverse is not None:
+            over = min(plan.diverse.oversample * k, scores.shape[0])
+            pool_idx = _top_idx(scores, over)
+            sel = M.mmr_select_np(
+                matrix[pool_idx], scores[pool_idx], k, plan.diverse.lam
+            )
+            chosen = pool_idx[sel]
+            # MMR output order IS the ranking (iterative argmax), but the
+            # materializer contract is (id, score) rows; keep MMR order by
+            # re-ranking on the original modulated score like the paper's
+            # temp table does (ORDER BY v.score DESC in Phase 3).
+            return [(int(ids[i]), float(scores[i])) for i in chosen]
+        top = _top_idx(scores, k)
+        return [(int(ids[i]), float(scores[i])) for i in top]
+
+
+def _top_idx(scores: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the top-k scores, sorted descending (argpartition+sort)."""
+    if k >= scores.shape[0]:
+        return np.argsort(-scores, kind="stable")
+    part = np.argpartition(-scores, k)[:k]
+    return part[np.argsort(-scores[part], kind="stable")]

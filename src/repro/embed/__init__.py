@@ -1,0 +1,3 @@
+from repro.embed.hashing import HashEmbedder
+
+__all__ = ["HashEmbedder"]

@@ -1,0 +1,4 @@
+# Performance-critical compute of the paper: modulated scoring (the Phase-2
+# matmul + modulation epilogue), top-K selection, and MMR diverse selection.
+# Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# public wrapper with padding/layout), ref.py (pure-jnp oracle).

@@ -1,0 +1,88 @@
+"""MMR diverse-selection Pallas kernel (TPU target).
+
+`diverse` is the paper's only modulation with data-dependent control flow:
+k iterations of (argmax over pool) -> (rank-1 similarity update). Pool sizes
+are small (3x oversample of K=500 -> n <= 4096), so the WHOLE pool lives in
+VMEM and the loop never touches HBM:
+
+* pool embeddings tile  (n x d)  : <= 4096 x 128 x 4B = 2MB VMEM
+* the selected row e[j] is extracted MXU-style with a one-hot matmul
+  (onehot(j) @ E), avoiding dynamic gather which TPUs dislike;
+* similarity update  E @ e[j]  is a (n x d)x(d,) matvec on the MXU;
+* running state (max_sim, taken) stays in VMEM scratch across iterations.
+
+Grid: one program per query (fully parallel across the serving batch).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _mmr_kernel(e_ref, rel_ref, idx_out, val_out, *, k: int, lam: float):
+    e = e_ref[0].astype(jnp.float32)          # (n, d)
+    rel = rel_ref[...].astype(jnp.float32)    # (1, n)
+    n = rel.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+
+    def body(i, carry):
+        max_sim, taken = carry                # (1, n), (1, n) bool
+        penalty = jnp.where(max_sim <= NEG * 0.5, 0.0, max_sim)
+        mmr = lam * rel - (1.0 - lam) * penalty
+        mmr = jnp.where(taken, NEG, mmr)
+        j = jnp.argmax(mmr[0]).astype(jnp.int32)
+        chosen = iota == j                    # (1, n) one-hot row mask
+        # e[j] without dynamic gather: onehot(j) @ E -> (1, d) on the MXU.
+        ej = jnp.dot(chosen.astype(jnp.float32), e,
+                     preferred_element_type=jnp.float32)
+        sim_j = jnp.dot(e, ej[0], preferred_element_type=jnp.float32)  # (n,)
+        max_sim = jnp.maximum(max_sim, sim_j[None, :])
+        taken = jnp.logical_or(taken, chosen)
+        idx_out[0, i] = j
+        val_out[0, i] = jnp.max(mmr[0])
+        return max_sim, taken
+
+    init = (jnp.full((1, n), NEG, jnp.float32), jnp.zeros((1, n), bool))
+    jax.lax.fori_loop(0, k, body, init)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "lam", "interpret"))
+def mmr_pallas(
+    embeds: jnp.ndarray,  # (B, n, d)
+    rel: jnp.ndarray,     # (B, n)
+    k: int,
+    lam: float = 0.7,
+    *,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, n, d = embeds.shape
+    kern = functools.partial(_mmr_kernel, k=k, lam=lam)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+        name="mmr_select",
+    )(embeds, rel)

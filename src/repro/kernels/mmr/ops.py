@@ -1,0 +1,43 @@
+"""Public jit'd wrapper for MMR selection: pool padding + masking."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mmr.kernel import NEG, mmr_pallas
+from repro.kernels.mmr.ref import mmr_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("k", "lam", "interpret", "use_kernel"))
+def mmr_select(
+    embeds: jnp.ndarray,  # (B, n, d) pool embeddings (L2-normalized)
+    rel: jnp.ndarray,     # (B, n) relevance scores
+    k: int,
+    lam: float = 0.7,
+    *,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MMR-select k of n (selection order) -> (indices int32, mmr scores)."""
+    b, n, d = embeds.shape
+    assert k <= n, (k, n)
+    if not use_kernel:
+        return mmr_ref(embeds, rel, k, lam)
+    n_pad = _round_up(n, 128)
+    d_pad = _round_up(d, 128)
+    if (n_pad, d_pad) != (n, d):
+        embeds = jnp.pad(embeds, ((0, 0), (0, n_pad - n), (0, d_pad - d)))
+        # Padded rows: rel = NEG so they are never argmaxed while k <= n.
+        rel = jnp.pad(rel, ((0, 0), (0, n_pad - n)), constant_values=NEG)
+    return mmr_pallas(
+        embeds.astype(jnp.float32), rel.astype(jnp.float32), k, lam,
+        interpret=interpret,
+    )

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for MMR iterative selection (paper Table 1, `diverse`).
+
+    score_i = lam * rel_i - (1 - lam) * max_{j in selected} sim(i, j)
+
+Iteratively argmax over the unselected pool; first pick is pure relevance
+(empty-selection max_sim contributes 0, matching `mmr_select_np`).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def mmr_ref(
+    embeds: jnp.ndarray,   # (B, n, d) L2-normalized pool embeddings
+    rel: jnp.ndarray,      # (B, n)    relevance (modulated scores)
+    k: int,
+    lam: float = 0.7,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (indices (B, k) int32 in selection order, mmr scores (B, k))."""
+
+    def one(e, r):
+        n = r.shape[0]
+
+        def body(i, carry):
+            max_sim, taken, out_idx, out_val = carry
+            # Empty-selection sentinel contributes 0 penalty; a genuinely
+            # negative max_sim is kept (diversity bonus), matching
+            # modulations.mmr_select_np exactly.
+            penalty = jnp.where(max_sim <= NEG * 0.5, 0.0, max_sim)
+            mmr = lam * r - (1.0 - lam) * penalty
+            mmr = jnp.where(taken, NEG, mmr)
+            j = jnp.argmax(mmr)
+            sim_j = e @ e[j]
+            max_sim = jnp.maximum(max_sim, sim_j)
+            taken = taken.at[j].set(True)
+            out_idx = out_idx.at[i].set(j.astype(jnp.int32))
+            out_val = out_val.at[i].set(mmr[j])
+            return max_sim, taken, out_idx, out_val
+
+        init = (
+            jnp.full((n,), NEG, jnp.float32),
+            jnp.zeros((n,), bool),
+            jnp.zeros((k,), jnp.int32),
+            jnp.zeros((k,), jnp.float32),
+        )
+        _, _, idx, val = jax.lax.fori_loop(0, k, body, init)
+        return idx, val
+
+    return jax.vmap(one)(embeds.astype(jnp.float32), rel.astype(jnp.float32))

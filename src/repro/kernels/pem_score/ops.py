@@ -1,0 +1,95 @@
+"""Public jit'd wrapper for the fused PEM scoring kernel.
+
+Handles: folding a :class:`~repro.core.modulations.ModulationPlan` batch into
+the two effective vectors, padding (N -> block_n multiple, B -> block_b
+multiple), dtype policy (bf16 corpus matrix, f32 accumulation), and the
+interpret switch for CPU validation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import modulations as M
+from repro.kernels.pem_score.kernel import BLOCK_B, BLOCK_N, pem_score_pallas
+from repro.kernels.pem_score.ref import pem_score_ref
+
+
+def fold_plan(plan: M.ModulationPlan) -> Tuple[np.ndarray, np.ndarray]:
+    """Fold one plan's directions into (q_pre, q_sup), each (d,).
+
+    Linearity (DESIGN.md §2.1): trajectory and suppress are linear in the
+    score array, so
+        q_pre = (1-blend)*q_centroid_shifted + blend*direction_traj
+        q_sup = -sum_i w_i * x_i
+    and  scores = decay * (M @ q_pre) + M @ q_sup  reproduces the fixed-order
+    pipeline exactly.
+    """
+    q = np.asarray(M.effective_query(plan), dtype=np.float32)
+    if plan.trajectory is not None:
+        b = plan.trajectory.blend
+        q_pre = (1.0 - b) * q + b * np.asarray(plan.trajectory.direction, np.float32)
+    else:
+        q_pre = q
+    d = q.shape[-1]
+    q_sup = np.zeros(d, dtype=np.float32)
+    for spec in plan.suppress:
+        q_sup -= spec.weight * np.asarray(spec.direction, np.float32)
+    return q_pre, q_sup
+
+
+def fold_plans(plans: Sequence[M.ModulationPlan]) -> Tuple[np.ndarray, np.ndarray]:
+    """Batch of plans -> (q_pre (d,B), q_sup (d,B)) panels."""
+    pres, sups = zip(*(fold_plan(p) for p in plans))
+    return np.stack(pres, axis=1), np.stack(sups, axis=1)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_b", "interpret", "use_kernel"))
+def pem_score(
+    matrix: jnp.ndarray,          # (N, d)
+    q_pre: jnp.ndarray,           # (d, B)
+    q_sup: jnp.ndarray,           # (d, B)
+    decay: Optional[jnp.ndarray] = None,   # (N,) or None
+    *,
+    block_n: int = BLOCK_N,
+    block_b: int = BLOCK_B,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Batched modulated scores (N, B), padding-safe public entry point."""
+    n, d = matrix.shape
+    b = q_pre.shape[1]
+    if decay is None:
+        decay = jnp.ones((n,), jnp.float32)
+    if not use_kernel:
+        return pem_score_ref(matrix, q_pre, q_sup, decay)
+
+    n_pad = _round_up(n, block_n)
+    b_pad = _round_up(b, block_b)
+    if n_pad != n:
+        matrix = jnp.pad(matrix, ((0, n_pad - n), (0, 0)))
+        decay = jnp.pad(decay, (0, n_pad - n))
+    if b_pad != b:
+        q_pre = jnp.pad(q_pre, ((0, 0), (0, b_pad - b)))
+        q_sup = jnp.pad(q_sup, ((0, 0), (0, b_pad - b)))
+    out = pem_score_pallas(
+        matrix, q_pre, q_sup, decay,
+        block_n=block_n, block_b=block_b, interpret=interpret,
+    )
+    return out[:n, :b]
+
+
+def decay_factor(days_ago: jnp.ndarray, half_life: Optional[float]) -> jnp.ndarray:
+    """Reciprocal decay (paper Table 1); ones when decay is off."""
+    if half_life is None:
+        return jnp.ones_like(days_ago, dtype=jnp.float32)
+    return (1.0 / (1.0 + days_ago / half_life)).astype(jnp.float32)

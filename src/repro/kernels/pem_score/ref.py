@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused PEM scoring kernel.
+
+Semantics (batched generalization of paper Table 1, fixed order):
+
+    scores[n, b] = decay[n] * (M[n] . q_pre[:, b]) + (M[n] . q_sup[:, b])
+
+where, per query b,
+    q_pre = (1-blend)*query + blend*trajectory_direction   (post-centroid)
+    q_sup = -sum_i w_i * suppress_direction_i
+are the two *effective vectors* that the linearity of trajectory/suppress
+allows us to fold all directions into (see DESIGN.md §2.1). ``decay`` is the
+reciprocal temporal factor 1/(1 + days/half_life), or ones.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pem_score_ref(
+    matrix: jnp.ndarray,   # (N, d)  corpus embeddings (any float dtype)
+    q_pre: jnp.ndarray,    # (d, B)  pre-decay effective vectors
+    q_sup: jnp.ndarray,    # (d, B)  post-decay (suppress) effective vectors
+    decay: jnp.ndarray,    # (N,)    temporal factor (ones if no decay)
+) -> jnp.ndarray:          # (N, B)  float32 scores
+    m = matrix.astype(jnp.float32)
+    pre = m @ q_pre.astype(jnp.float32)
+    sup = m @ q_sup.astype(jnp.float32)
+    return decay.astype(jnp.float32)[:, None] * pre + sup

@@ -1,0 +1,86 @@
+"""Streaming top-K Pallas kernel (TPU target).
+
+The paper's engine materializes all N scores in memory and argpartitions.
+On TPU we never spill the (B, N) score panel back to HBM: the scoring grid
+streams blocks of N, and this kernel keeps a per-query running top-K buffer
+in VMEM scratch, merging each incoming block with ``lax.top_k`` over the
+(K + BLOCK_N) concatenation. HBM sees only the final (B, K) candidates.
+
+Grid: (B blocks [parallel], N blocks [arbitrary/sequential innermost]).
+Scratch persists across the sequential N dimension; it is initialized at
+n==0 and flushed to the output block at the last N step (standard Pallas
+accumulator pattern, cf. flash-attention).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_B = 8      # queries per tile (sublane-friendly)
+BLOCK_N = 2048   # corpus scores per tile (lane multiple)
+
+
+def _topk_kernel(s_ref, vals_out, idx_out, vals_s, idx_s, *, k: int, block_n: int):
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        vals_s[...] = jnp.full_like(vals_s, -jnp.inf)
+        idx_s[...] = jnp.full_like(idx_s, -1)
+
+    block = s_ref[...]                                        # (bb, bn)
+    base = ni * block_n
+    iota = jax.lax.broadcasted_iota(jnp.int32, block.shape, 1) + base
+    cand_v = jnp.concatenate([vals_s[...], block], axis=1)    # (bb, k+bn)
+    cand_i = jnp.concatenate([idx_s[...], iota], axis=1)
+    v, sel = jax.lax.top_k(cand_v, k)                         # merge step
+    vals_s[...] = v
+    idx_s[...] = jnp.take_along_axis(cand_i, sel, axis=1)
+
+    @pl.when(ni == pl.num_programs(1) - 1)
+    def _flush():
+        vals_out[...] = vals_s[...]
+        idx_out[...] = idx_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b", "block_n", "interpret"))
+def topk_pallas(
+    scores: jnp.ndarray,  # (B, N) float32, B % block_b == 0, N % block_n == 0
+    k: int,
+    *,
+    block_b: int = BLOCK_B,
+    block_n: int = BLOCK_N,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, n = scores.shape
+    assert b % block_b == 0 and n % block_n == 0, (b, n, block_b, block_n)
+    grid = (b // block_b, n // block_n)
+    kern = functools.partial(_topk_kernel, k=k, block_n=block_n)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, block_n), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, k), jnp.float32),
+            pltpu.VMEM((block_b, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="streaming_topk",
+    )(scores)

@@ -1,0 +1,41 @@
+"""Public jit'd wrapper for streaming top-K: padding + tie/pad safety."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk.kernel import BLOCK_B, BLOCK_N, topk_pallas
+from repro.kernels.topk.ref import topk_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b", "block_n", "interpret", "use_kernel"))
+def topk(
+    scores: jnp.ndarray,  # (B, N)
+    k: int,
+    *,
+    block_b: int = BLOCK_B,
+    block_n: int = BLOCK_N,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-wise top-k of a score panel; (values desc, int32 indices)."""
+    b, n = scores.shape
+    if not use_kernel:
+        return topk_ref(scores, k)
+    b_pad = _round_up(b, block_b)
+    n_pad = _round_up(max(n, k), block_n)
+    padded = jnp.full((b_pad, n_pad), -jnp.inf, scores.dtype)
+    padded = padded.at[:b, :n].set(scores)
+    v, i = topk_pallas(
+        padded.astype(jnp.float32), k,
+        block_b=block_b, block_n=block_n, interpret=interpret,
+    )
+    return v[:b], i[:b]

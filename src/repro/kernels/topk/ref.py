@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the streaming top-K kernel: row-wise lax.top_k."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_ref(scores: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """scores (B, N) -> (values (B, k) desc, indices (B, k) int32)."""
+    v, i = jax.lax.top_k(scores, k)
+    return v, i.astype(jnp.int32)

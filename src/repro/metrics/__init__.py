@@ -1,0 +1,3 @@
+from repro.metrics.ranking import rbo, ils, ndcg_at_k, centroid_similarity
+
+__all__ = ["rbo", "ils", "ndcg_at_k", "centroid_similarity"]

@@ -1,0 +1,289 @@
+"""Shared transformer layers: RMSNorm, RoPE, chunked GQA attention, MLP/MoE.
+
+Pure-functional (params are pytrees of arrays); sharding is expressed through
+logical-axis constraints (dist/sharding.py) so the same code runs on 1 CPU
+device (smoke tests) and the 512-chip production mesh (dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules, constrain
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    # decode (S==1): merge single-token groups into groups of this many
+    # tokens before routing — capacity slots shrink by the same factor
+    # (E*C per 1-token group is ~E/k x waste; §Perf qwen3-2).
+    decode_group: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    mlp_type: str = "swiglu"          # swiglu | gelu | relu2
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16         # activation/weight compute dtype
+    q_chunk: int = 1024               # attention query-chunk (memory ceiling)
+    remat: bool = True                # checkpoint each layer in train_step
+    remat_policy: str = "full"        # full | dots  (§Perf granite-1)
+    tie_embeddings: bool = False
+    scan_unroll: int = 1              # lax.scan unroll (cost-analysis runs
+                                      # set unroll=n_layers: see dryrun.py)
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND model-FLOPs accounting)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        attn = d * self.n_heads * self.head_dim * 2 \
+            + d * self.n_kv_heads * self.head_dim * 2
+        n_mats = 3 if self.mlp_type == "swiglu" else 2
+        if self.moe is not None:
+            mlp = self.moe.n_experts * n_mats * d * f + d * self.moe.n_experts
+        else:
+            mlp = n_mats * d * f
+        embed = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + mlp + 2 * d) + embed + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k experts only)."""
+        if self.moe is None:
+            return self.n_params
+        d, f = self.d_model, self.d_ff
+        n_mats = 3 if self.mlp_type == "swiglu" else 2
+        dense_total = self.n_params - self.n_layers * self.moe.n_experts * n_mats * d * f
+        return dense_total + self.n_layers * self.moe.top_k * n_mats * d * f
+
+
+# ---------------------------------------------------------------------------
+# Basic ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def _mlp_act(cfg: LMConfig, wi_out: jnp.ndarray, wg_out: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if cfg.mlp_type == "swiglu":
+        return jax.nn.silu(wg_out) * wi_out
+    if cfg.mlp_type == "gelu":
+        return jax.nn.gelu(wi_out)
+    if cfg.mlp_type == "relu2":
+        r = jax.nn.relu(wi_out)
+        return r * r
+    raise ValueError(cfg.mlp_type)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + RoPE), query-chunked for long-context memory control
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jnp.ndarray,              # (B, S, H, hd) post-RoPE
+    k: jnp.ndarray,              # (B, T, K, hd) post-RoPE
+    v: jnp.ndarray,              # (B, T, K, hd)
+    *,
+    q_offset: jnp.ndarray,       # scalar: absolute position of q[:, 0]
+    kv_len: Optional[jnp.ndarray] = None,  # valid cache length (decode)
+    causal: bool = True,
+    q_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Chunked softmax attention: scans query chunks so the live score
+    block is (B, K, G, C, T) instead of (B, H, S, T) — the memory ceiling
+    that makes prefill_32k lowerable. FLOPs identical to full attention."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    kv_pos = jnp.arange(T)
+    kv_valid = kv_pos < (kv_len if kv_len is not None else T)
+
+    def one_chunk(qc: jnp.ndarray, c0: jnp.ndarray) -> jnp.ndarray:
+        # qc: (B, C, H, hd); c0: absolute position of qc[:, 0]
+        C = qc.shape[1]
+        qg = qc.reshape(B, C, K, G, hd)
+        s = jnp.einsum("bckgh,btkh->bkgct", qg, k).astype(jnp.float32) * scale
+        q_pos = c0 + jnp.arange(C)
+        mask = kv_valid[None, :]
+        if causal:
+            mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bkgct,btkh->bckgh", p, v)
+        return o.reshape(B, C, H, hd)
+
+    if S <= q_chunk:
+        return one_chunk(q, q_offset)
+    assert S % q_chunk == 0, (S, q_chunk)
+    n_chunks = S // q_chunk
+    qs = q.reshape(B, n_chunks, q_chunk, H, hd)
+
+    def body(i, _):
+        return one_chunk(qs[:, i], q_offset + i * q_chunk)
+
+    out = jax.lax.map(lambda i: body(i, None), jnp.arange(n_chunks))  # (n, B, C, H, hd)
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+
+def attention_block(
+    x: jnp.ndarray,              # (B, S, D)
+    p: Params,                   # wq, wk, wv, wo, attn_norm
+    cfg: LMConfig,
+    rules: ShardingRules,
+    *,
+    positions: jnp.ndarray,      # (S,) absolute positions
+    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # (k,v) (B,T,K,hd)
+    cache_len: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Pre-norm attention with optional KV cache. Returns (out, new_kv)."""
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    kx = (h @ p["wk"]).reshape(B, S, K, hd)
+    vx = (h @ p["wv"]).reshape(B, S, K, hd)
+    q = rope(q, positions[None, :], cfg.rope_theta)
+    kx = rope(kx, positions[None, :], cfg.rope_theta)
+    q = constrain(q, rules, "batch", None,
+                  rules.if_divisible("heads", H), None)
+    kx = constrain(kx, rules, "batch", rules.if_divisible("seq", S),
+                   rules.if_divisible("kv_heads", K), None)
+
+    if cache is not None:
+        ck, cv = cache
+        start = cache_len if cache_len is not None else 0
+        ck = jax.lax.dynamic_update_slice(ck, kx, (0, start, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vx, (0, start, 0, 0))
+        kv_len = (cache_len if cache_len is not None else 0) + S
+        o = attention(
+            q, ck, cv, q_offset=positions[0], kv_len=kv_len,
+            causal=True, q_chunk=cfg.q_chunk,
+        )
+        new_kv = (ck, cv)
+    else:
+        o = attention(q, kx, vx, q_offset=positions[0], causal=True,
+                      q_chunk=cfg.q_chunk)
+        new_kv = (kx, vx)
+
+    out = o.reshape(B, S, H * hd) @ p["wo"]
+    return constrain(out, rules, "batch", "seq", "act_embed"), new_kv
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP and MoE (scatter-dispatch, capacity-dropped, EP over 'expert')
+# ---------------------------------------------------------------------------
+
+
+def dense_mlp(x: jnp.ndarray, p: Params, cfg: LMConfig, rules: ShardingRules) -> jnp.ndarray:
+    h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    wi_out = h @ p["wi"]
+    wg_out = h @ p["wg"] if cfg.mlp_type == "swiglu" else None
+    act = _mlp_act(cfg, wi_out, wg_out)
+    act = constrain(act, rules, "batch", "seq", "ff")
+    return act @ p["wo_mlp"]
+
+
+def moe_mlp(x: jnp.ndarray, p: Params, cfg: LMConfig, rules: ShardingRules) -> jnp.ndarray:
+    """Token-choice top-k MoE with per-GROUP capacity (GShard/T5X grouping).
+
+    Tokens are grouped by batch row; routing positions are a cumsum over the
+    group's S*k slots only — local to the 'batch' shard, so no cross-device
+    prefix sum (a flat cumsum over all B*S*k slots was measured at ~200x
+    useful FLOPs under SPMD; see EXPERIMENTS.md §Perf, iteration qwen3-0).
+    Dispatch is a vmapped scatter-add into (E, C, D) slots; combine is a
+    gather. Expert GEMMs run as einsums with E sharded over 'model' (EP) and
+    groups over 'batch' — the dispatch boundary is where the all-to-all the
+    roofline's collective term accounts for appears.
+    """
+    assert cfg.moe is not None
+    B, S, D = x.shape
+    orig_shape = (B, S, D)
+    g = cfg.moe.decode_group
+    if S == 1 and g > 1 and B % g == 0:
+        x = x.reshape(B // g, g, D)   # (G groups, g tokens) — slots /g
+        B, S = B // g, g
+    E, topk = cfg.moe.n_experts, cfg.moe.top_k
+    h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+
+    router_logits = jnp.einsum(
+        "bsd,de->bse", h.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)          # (B, S, E)
+    gates, eidx = jax.lax.top_k(probs, topk)                # (B, S, k)
+    gates = (gates / (gates.sum(-1, keepdims=True) + 1e-9)).astype(x.dtype)
+
+    C = max(topk, int(cfg.moe.capacity_factor * S * topk / E))
+    eflat = eidx.reshape(B, S * topk)                       # token-major slots
+    onehot = jax.nn.one_hot(eflat, E, dtype=jnp.int32)      # (B, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                    # rank within group
+    pos = jnp.take_along_axis(pos, eflat[..., None], axis=2)[..., 0]
+    keep = pos < C
+    slot = jnp.where(keep, eflat * C + pos, E * C)          # E*C = drop slot
+
+    trep = jnp.repeat(h, topk, axis=1)                      # (B, S*k, D)
+
+    def scatter_group(slots, tok):
+        return jnp.zeros((E * C + 1, D), x.dtype).at[slots].add(tok)
+
+    buf = jax.vmap(scatter_group)(slot, trep)               # (B, E*C+1, D)
+    xe = buf[:, : E * C].reshape(B, E, C, D)
+    xe = constrain(xe, rules, "batch", "expert", None, None)
+
+    wi_out = jnp.einsum("becd,edf->becf", xe, p["wi"])
+    wg_out = jnp.einsum("becd,edf->becf", xe, p["wg"]) if cfg.mlp_type == "swiglu" else None
+    act = _mlp_act(cfg, wi_out, wg_out)
+    ye = jnp.einsum("becf,efd->becd", act, p["wo_mlp"])
+    ye = constrain(ye, rules, "batch", "expert", None, None)
+
+    out_slots = jnp.concatenate(
+        [ye.reshape(B, E * C, D), jnp.zeros((B, 1, D), x.dtype)], axis=1
+    )
+    y = jnp.take_along_axis(out_slots, slot[..., None], axis=1)  # (B, S*k, D)
+    y = (y.reshape(B, S, topk, D) * gates[..., None]).sum(axis=2)
+    return y.reshape(orig_shape)
+
+
+def mlp_block(x: jnp.ndarray, p: Params, cfg: LMConfig, rules: ShardingRules) -> jnp.ndarray:
+    if cfg.moe is not None:
+        return moe_mlp(x, p, cfg, rules)
+    return dense_mlp(x, p, cfg, rules)

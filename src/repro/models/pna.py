@@ -1,0 +1,139 @@
+"""PNA — Principal Neighbourhood Aggregation [arXiv:2004.05718].
+
+Multi-aggregator message passing: per node, the in-neighbor messages are
+reduced with {mean, max, min, std} and each aggregate is scaled by
+{identity, amplification, attenuation} degree scalers — 12 aggregate blocks
+per layer, concatenated with the node state and mixed by a linear update.
+
+JAX sparse is BCOO-only, so message passing is built directly on
+``jax.ops.segment_sum/max/min`` over the edge index (kernel taxonomy §GNN)
+— this IS the system's GNN substrate, not a stub. Padded edges point at a
+sink node (data/graph.py), so static shapes jit cleanly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules, constrain
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_feat: int = 128
+    n_classes: int = 16
+    task: str = "node"            # node | graph
+    n_graphs: int = 1             # graph task: graphs per batch (static)
+    delta: float = 2.5            # mean log-degree normalizer (PNA eq. 5)
+    dtype: Any = jnp.float32
+
+
+AGGS = ("mean", "max", "min", "std")
+N_SCALERS = 3  # identity, amplification, attenuation
+
+
+def init_params(cfg: PNAConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, cfg.n_layers * 2 + 2)
+    d = cfg.d_hidden
+
+    def w(k, fan_in, fan_out):
+        s = (2.0 / fan_in) ** 0.5
+        return (jax.random.normal(k, (fan_in, fan_out), jnp.float32) * s).astype(cfg.dtype)
+
+    params: Params = {
+        "embed_w": w(keys[0], cfg.d_feat, d),
+        "embed_b": jnp.zeros((d,), cfg.dtype),
+        "layers": [],
+        "readout_w": w(keys[1], d, cfg.n_classes),
+        "readout_b": jnp.zeros((cfg.n_classes,), cfg.dtype),
+    }
+    for i in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                # message MLP over (h_src || h_dst)
+                "msg_w": w(keys[2 + 2 * i], 2 * d, d),
+                "msg_b": jnp.zeros((d,), cfg.dtype),
+                # update over (h || 12 aggregate blocks)
+                "upd_w": w(keys[3 + 2 * i], d + len(AGGS) * N_SCALERS * d, d),
+                "upd_b": jnp.zeros((d,), cfg.dtype),
+            }
+        )
+    return params
+
+
+def _segment_reduce(msgs, dst, n_nodes, edge_w):
+    """All four PNA aggregators in one pass over the edge list."""
+    msgs = msgs * edge_w[:, None]
+    s = jax.ops.segment_sum(msgs, dst, n_nodes)
+    cnt = jax.ops.segment_sum(edge_w, dst, n_nodes)
+    deg = jnp.maximum(cnt, 1.0)[:, None]
+    mean = s / deg
+    sq = jax.ops.segment_sum(msgs * msgs, dst, n_nodes) / deg
+    std = jnp.sqrt(jax.nn.relu(sq - mean * mean) + 1e-5)
+    # max/min: mask padded edges to +/- inf sentinels, then clean empties
+    big = jnp.float32(1e30)
+    mx = jax.ops.segment_max(jnp.where(edge_w[:, None] > 0, msgs, -big), dst, n_nodes)
+    mn = jax.ops.segment_min(jnp.where(edge_w[:, None] > 0, msgs, big), dst, n_nodes)
+    empty = (cnt < 0.5)[:, None]
+    mx = jnp.where(empty | (mx <= -big), 0.0, mx)
+    mn = jnp.where(empty | (mn >= big), 0.0, mn)
+    return mean, mx, mn, std, cnt
+
+
+def pna_layer(h, lp, edge_src, edge_dst, edge_w, cfg: PNAConfig):
+    n = h.shape[0]
+    m_in = jnp.concatenate([h[edge_src], h[edge_dst]], axis=-1)   # (E, 2d)
+    msgs = jax.nn.relu(m_in @ lp["msg_w"] + lp["msg_b"])          # (E, d)
+    mean, mx, mn, std, cnt = _segment_reduce(msgs, edge_dst, n, edge_w)
+    agg = jnp.concatenate([mean, mx, mn, std], axis=-1)           # (N, 4d)
+    logd = jnp.log1p(cnt)[:, None]
+    amp = logd / cfg.delta
+    att = cfg.delta / jnp.maximum(logd, 1e-5)
+    scaled = jnp.concatenate([agg, agg * amp, agg * att], axis=-1)  # (N, 12d)
+    upd_in = jnp.concatenate([h, scaled], axis=-1)
+    return jax.nn.relu(upd_in @ lp["upd_w"] + lp["upd_b"]) + h    # residual
+
+
+def forward(
+    params: Params,
+    batch: Dict[str, jnp.ndarray],
+    cfg: PNAConfig,
+    rules: ShardingRules,
+) -> jnp.ndarray:
+    feats = batch["feats"].astype(cfg.dtype)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    edge_w = batch["edge_mask"].astype(cfg.dtype)
+    h = jax.nn.relu(feats @ params["embed_w"] + params["embed_b"])
+    h = constrain(h, rules, "nodes", None)
+    for lp in params["layers"]:
+        h = pna_layer(h, lp, src, dst, edge_w, cfg)
+        h = constrain(h, rules, "nodes", None)
+    if cfg.task == "graph":
+        gid = batch["graph_ids"]
+        w = batch["node_mask"].astype(cfg.dtype)[:, None]
+        pooled = jax.ops.segment_sum(h * w, gid, cfg.n_graphs)
+        cnt = jax.ops.segment_sum(w, gid, cfg.n_graphs)
+        pooled = pooled / jnp.maximum(cnt, 1.0)                     # mean pool
+        return pooled @ params["readout_w"] + params["readout_b"]   # (G, C)
+    return h @ params["readout_w"] + params["readout_b"]           # (N, C)
+
+
+def loss_fn(params, batch, cfg: PNAConfig, rules: ShardingRules) -> jnp.ndarray:
+    logits = forward(params, batch, cfg, rules).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    ce = logz - gold
+    if cfg.task == "graph":
+        return jnp.mean(ce)
+    w = batch["node_mask"].astype(jnp.float32)
+    return jnp.sum(ce * w) / jnp.maximum(jnp.sum(w), 1.0)

@@ -1,0 +1,388 @@
+"""RecSys model family: DLRM, BST, AutoInt, Two-Tower retrieval.
+
+Substrate built here (JAX has neither nn.EmbeddingBag nor CSR sparse):
+* ``embedding_bag`` — ragged multi-hot lookup via ``jnp.take`` +
+  masked segment reduction (sum/mean), per kernel taxonomy §B.6/§B.11.
+* Row-sharded embedding tables: big tables (Criteo 1TB / MLPerf: ~188M rows,
+  ~24B embedding params) shard over every mesh axis via 'table_rows'.
+
+The Two-Tower ``retrieval_cand`` path scores 1M candidates for one query —
+exactly the paper's PEM setting — and routes through the fused
+``pem_score`` + streaming ``topk`` kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules, constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Embedding substrate
+# ---------------------------------------------------------------------------
+
+
+def embedding_lookup(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Single-value lookup: (V, D) x (B,) -> (B, D)."""
+    return jnp.take(table, idx, axis=0)
+
+
+def embedding_bag(
+    table: jnp.ndarray,       # (V, D)
+    idx: jnp.ndarray,         # (B, L) int32, padded with -1
+    mode: str = "sum",
+) -> jnp.ndarray:
+    """Manual EmbeddingBag: gather + masked reduce over the bag dim."""
+    mask = (idx >= 0).astype(table.dtype)               # (B, L)
+    safe = jnp.maximum(idx, 0)
+    vecs = jnp.take(table, safe, axis=0)                # (B, L, D)
+    s = jnp.sum(vecs * mask[..., None], axis=1)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        return s / jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    raise ValueError(mode)
+
+
+def mlp(x: jnp.ndarray, ws: Sequence[jnp.ndarray], bs: Sequence[jnp.ndarray],
+        final_act: bool = False) -> jnp.ndarray:
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        x = x @ w + b
+        if i < len(ws) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _init_mlp(key, dims: Sequence[int], dtype) -> Tuple[List, List]:
+    ws, bs = [], []
+    keys = jax.random.split(key, len(dims) - 1)
+    for i in range(len(dims) - 1):
+        s = (2.0 / dims[i]) ** 0.5
+        ws.append((jax.random.normal(keys[i], (dims[i], dims[i + 1]), jnp.float32) * s).astype(dtype))
+        bs.append(jnp.zeros((dims[i + 1],), dtype))
+    return ws, bs
+
+
+def bce_with_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(
+        jax.nn.softplus(logits) - labels * logits
+    )
+
+
+# ---------------------------------------------------------------------------
+# DLRM (MLPerf config) [arXiv:1906.00091]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    n_dense: int = 13
+    embed_dim: int = 128
+    vocab_sizes: Tuple[int, ...] = ()
+    bot_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def padded_vocab_sizes(self) -> Tuple[int, ...]:
+        """Row counts padded to 512 so row-sharded tables split evenly on
+        any production mesh (standard embedding-table padding); lookups
+        only ever index < the published vocab size."""
+        return tuple((v + 511) // 512 * 512 for v in self.vocab_sizes)
+
+
+# tables smaller than this are replicated instead of row-sharded
+_SHARD_MIN_ROWS = 4096
+
+
+def dlrm_init(cfg: DLRMConfig, key: jax.Array) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    tables = []
+    tkeys = jax.random.split(k1, cfg.n_sparse)
+    for i, v in enumerate(cfg.padded_vocab_sizes):
+        s = 1.0 / (v ** 0.5)
+        tables.append(
+            (jax.random.uniform(tkeys[i], (v, cfg.embed_dim), jnp.float32, -s, s)).astype(cfg.dtype)
+        )
+    n_int = cfg.n_sparse + 1
+    d_inter = (n_int * (n_int - 1)) // 2
+    bw, bb = _init_mlp(k2, (cfg.n_dense,) + cfg.bot_mlp, cfg.dtype)
+    tw, tb = _init_mlp(k3, (cfg.bot_mlp[-1] + d_inter,) + cfg.top_mlp, cfg.dtype)
+    return {"tables": tables, "bot_w": bw, "bot_b": bb, "top_w": tw, "top_b": tb}
+
+
+def dlrm_shardings(cfg: DLRMConfig, rules: ShardingRules) -> Params:
+    s = rules.spec
+    return {
+        "tables": [
+            s("table_rows" if v >= _SHARD_MIN_ROWS else None, None)
+            for v in cfg.padded_vocab_sizes
+        ],
+        "bot_w": [s(None, None)] * len(cfg.bot_mlp),
+        "bot_b": [s(None)] * len(cfg.bot_mlp),
+        "top_w": [s(None, None)] * len(cfg.top_mlp),
+        "top_b": [s(None)] * len(cfg.top_mlp),
+    }
+
+
+def dlrm_forward(params: Params, batch: Dict[str, jnp.ndarray],
+                 cfg: DLRMConfig, rules: ShardingRules) -> jnp.ndarray:
+    dense = batch["dense"].astype(cfg.dtype)             # (B, 13)
+    sparse = batch["sparse"]                             # (B, 26) int32
+    x = mlp(dense, params["bot_w"], params["bot_b"], final_act=True)  # (B, D)
+    embs = [embedding_lookup(t, sparse[:, i]) for i, t in enumerate(params["tables"])]
+    z = jnp.stack([x] + embs, axis=1)                    # (B, 27, D)
+    z = constrain(z, rules, "batch", None, None)
+    inter = jnp.einsum("bnd,bmd->bnm", z, z)             # pairwise dots
+    n_int = z.shape[1]
+    iu, ju = jnp.triu_indices(n_int, k=1)
+    flat = inter[:, iu, ju]                              # (B, n(n-1)/2)
+    top_in = jnp.concatenate([x, flat], axis=1)
+    return mlp(top_in, params["top_w"], params["top_b"])[:, 0]   # (B,)
+
+
+def dlrm_loss(params, batch, cfg: DLRMConfig, rules) -> jnp.ndarray:
+    return bce_with_logits(dlrm_forward(params, batch, cfg, rules), batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# BST — Behavior Sequence Transformer [arXiv:1905.06874]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str
+    vocab_items: int = 2_000_000
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    d_ff: int = 128
+    mlp_dims: Tuple[int, ...] = (1024, 512, 256, 1)
+    n_other_feats: int = 8
+    dtype: Any = jnp.float32
+
+
+def bst_init(cfg: BSTConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, 4 + 6 * cfg.n_blocks)
+    D = cfg.embed_dim
+    s = 1.0 / (cfg.vocab_items ** 0.5)
+    p: Params = {
+        "item_table": (jax.random.uniform(keys[0], (cfg.vocab_items, D), jnp.float32, -s, s)).astype(cfg.dtype),
+        "pos_table": (jax.random.normal(keys[1], (cfg.seq_len + 1, D), jnp.float32) * 0.02).astype(cfg.dtype),
+        "blocks": [],
+    }
+    for i in range(cfg.n_blocks):
+        kq, kk, kv, ko, k1, k2 = jax.random.split(keys[2 + i], 6)
+
+        def w(k, a, b):
+            return (jax.random.normal(k, (a, b), jnp.float32) * (2.0 / a) ** 0.5).astype(cfg.dtype)
+
+        p["blocks"].append({
+            "wq": w(kq, D, D), "wk": w(kk, D, D), "wv": w(kv, D, D), "wo": w(ko, D, D),
+            "ff1": w(k1, D, cfg.d_ff), "ff2": w(k2, cfg.d_ff, D),
+            "ln1": jnp.ones((D,), cfg.dtype), "ln2": jnp.ones((D,), cfg.dtype),
+        })
+    flat_in = (cfg.seq_len + 1) * D + cfg.n_other_feats
+    mw, mb = _init_mlp(keys[-1], (flat_in,) + cfg.mlp_dims, cfg.dtype)
+    p["mlp_w"], p["mlp_b"] = mw, mb
+    return p
+
+
+def _ln(x, scale):
+    m = x.mean(-1, keepdims=True)
+    v = ((x - m) ** 2).mean(-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-6) * scale
+
+
+def bst_forward(params: Params, batch: Dict[str, jnp.ndarray],
+                cfg: BSTConfig, rules: ShardingRules) -> jnp.ndarray:
+    hist = batch["hist"]                                  # (B, S) int32
+    target = batch["target"]                              # (B,) int32
+    other = batch["other"].astype(cfg.dtype)              # (B, n_other)
+    B = hist.shape[0]
+    seq = jnp.concatenate([hist, target[:, None]], axis=1)  # (B, S+1)
+    x = embedding_lookup(params["item_table"], seq.reshape(-1)).reshape(B, cfg.seq_len + 1, -1)
+    x = x + params["pos_table"][None]
+    x = constrain(x, rules, "batch", None, None)
+    H, D = cfg.n_heads, cfg.embed_dim
+    hd = D // H
+    for blk in params["blocks"]:
+        h = _ln(x, blk["ln1"])
+        q = (h @ blk["wq"]).reshape(B, -1, H, hd)
+        k = (h @ blk["wk"]).reshape(B, -1, H, hd)
+        v = (h @ blk["wv"]).reshape(B, -1, H, hd)
+        sc = jnp.einsum("bshd,bthd->bhst", q, k) * (hd ** -0.5)
+        a = jax.nn.softmax(sc.astype(jnp.float32), axis=-1).astype(cfg.dtype)
+        o = jnp.einsum("bhst,bthd->bshd", a, v).reshape(B, -1, D)
+        x = x + o @ blk["wo"]
+        h = _ln(x, blk["ln2"])
+        x = x + jax.nn.relu(h @ blk["ff1"]) @ blk["ff2"]
+    flat = jnp.concatenate([x.reshape(B, -1), other], axis=1)
+    return mlp(flat, params["mlp_w"], params["mlp_b"])[:, 0]
+
+
+def bst_loss(params, batch, cfg: BSTConfig, rules) -> jnp.ndarray:
+    return bce_with_logits(bst_forward(params, batch, cfg, rules), batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# AutoInt [arXiv:1810.11921]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str
+    n_fields: int = 39
+    vocab_per_field: int = 100_000
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    dtype: Any = jnp.float32
+
+
+def autoint_init(cfg: AutoIntConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, 2 + cfg.n_attn_layers)
+    s = 1.0 / (cfg.vocab_per_field ** 0.5)
+    p: Params = {
+        "table": (jax.random.uniform(
+            keys[0], (cfg.n_fields * cfg.vocab_per_field, cfg.embed_dim),
+            jnp.float32, -s, s)).astype(cfg.dtype),
+        "layers": [],
+    }
+    d_in = cfg.embed_dim
+    for i in range(cfg.n_attn_layers):
+        kq, kk, kv, kr = jax.random.split(keys[1 + i], 4)
+
+        def w(k, a, b):
+            return (jax.random.normal(k, (a, b), jnp.float32) * (2.0 / a) ** 0.5).astype(cfg.dtype)
+
+        p["layers"].append({
+            "wq": w(kq, d_in, cfg.n_heads * cfg.d_attn),
+            "wk": w(kk, d_in, cfg.n_heads * cfg.d_attn),
+            "wv": w(kv, d_in, cfg.n_heads * cfg.d_attn),
+            "wres": w(kr, d_in, cfg.n_heads * cfg.d_attn),
+        })
+        d_in = cfg.n_heads * cfg.d_attn
+    kf = jax.random.split(keys[-1], 1)[0]
+    p["out_w"] = (jax.random.normal(kf, (cfg.n_fields * d_in, 1), jnp.float32) * 0.02).astype(cfg.dtype)
+    p["out_b"] = jnp.zeros((1,), cfg.dtype)
+    return p
+
+
+def autoint_forward(params: Params, batch: Dict[str, jnp.ndarray],
+                    cfg: AutoIntConfig, rules: ShardingRules) -> jnp.ndarray:
+    sparse = batch["sparse"]                               # (B, F) int32
+    B, F = sparse.shape
+    offset = jnp.arange(F, dtype=sparse.dtype) * cfg.vocab_per_field
+    x = embedding_lookup(params["table"], (sparse + offset[None]).reshape(-1))
+    x = x.reshape(B, F, cfg.embed_dim)
+    x = constrain(x, rules, "batch", None, None)
+    H, da = cfg.n_heads, cfg.d_attn
+    for lp in params["layers"]:
+        q = (x @ lp["wq"]).reshape(B, F, H, da)
+        k = (x @ lp["wk"]).reshape(B, F, H, da)
+        v = (x @ lp["wv"]).reshape(B, F, H, da)
+        sc = jnp.einsum("bfhd,bghd->bhfg", q, k) * (da ** -0.5)
+        a = jax.nn.softmax(sc.astype(jnp.float32), axis=-1).astype(cfg.dtype)
+        o = jnp.einsum("bhfg,bghd->bfhd", a, v).reshape(B, F, H * da)
+        x = jax.nn.relu(o + x @ lp["wres"])
+    return (x.reshape(B, -1) @ params["out_w"] + params["out_b"])[:, 0]
+
+
+def autoint_loss(params, batch, cfg: AutoIntConfig, rules) -> jnp.ndarray:
+    return bce_with_logits(autoint_forward(params, batch, cfg, rules), batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Two-Tower retrieval [Yi et al., RecSys'19]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str
+    vocab_user: int = 5_000_000
+    vocab_item: int = 10_000_000
+    hist_len: int = 20
+    embed_dim: int = 256
+    tower_mlp: Tuple[int, ...] = (1024, 512, 256)
+    dtype: Any = jnp.float32
+
+
+def twotower_init(cfg: TwoTowerConfig, key: jax.Array) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    su = 1.0 / (cfg.vocab_user ** 0.5)
+    si = 1.0 / (cfg.vocab_item ** 0.5)
+    uw, ub = _init_mlp(k3, (2 * cfg.embed_dim,) + cfg.tower_mlp, cfg.dtype)
+    iw, ib = _init_mlp(k4, (cfg.embed_dim,) + cfg.tower_mlp, cfg.dtype)
+    return {
+        "user_table": (jax.random.uniform(k1, (cfg.vocab_user, cfg.embed_dim), jnp.float32, -su, su)).astype(cfg.dtype),
+        "item_table": (jax.random.uniform(k2, (cfg.vocab_item, cfg.embed_dim), jnp.float32, -si, si)).astype(cfg.dtype),
+        "user_w": uw, "user_b": ub, "item_w": iw, "item_b": ib,
+    }
+
+
+def user_tower(params: Params, batch, cfg: TwoTowerConfig, rules) -> jnp.ndarray:
+    uid = batch["user_id"]                                  # (B,)
+    hist = batch["hist"]                                    # (B, L) item ids, -1 pad
+    ue = embedding_lookup(params["user_table"], uid)
+    he = embedding_bag(params["item_table"], hist, mode="mean")
+    x = jnp.concatenate([ue, he], axis=1)
+    u = mlp(x, params["user_w"], params["user_b"])
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+
+
+def item_tower(params: Params, item_ids: jnp.ndarray, cfg: TwoTowerConfig, rules) -> jnp.ndarray:
+    ie = embedding_lookup(params["item_table"], item_ids)
+    v = mlp(ie, params["item_w"], params["item_b"])
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def twotower_loss(params, batch, cfg: TwoTowerConfig, rules) -> jnp.ndarray:
+    """In-batch sampled softmax with logQ correction."""
+    u = user_tower(params, batch, cfg, rules)               # (B, D)
+    v = item_tower(params, batch["pos_item"], cfg, rules)   # (B, D)
+    logits = (u @ v.T) / 0.05                               # temperature
+    logq = batch.get("logq")
+    if logq is not None:
+        logits = logits - logq[None, :]
+    labels = jnp.arange(u.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def retrieval_scores(
+    params: Params,
+    batch,
+    candidate_matrix: jnp.ndarray,   # (N_cand, D) PRECOMPUTED item-tower out
+    cfg: TwoTowerConfig,
+    rules: ShardingRules,
+) -> jnp.ndarray:
+    """Score one/few queries against the full candidate corpus.
+
+    This is the paper's Phase-2 surface: the candidate matrix is the corpus,
+    the user vector is the query; PEM modulations compose on the resulting
+    scores (serve/retrieval.py wires suppress/decay/MMR through the fused
+    kernels on this exact path)."""
+    u = user_tower(params, batch, cfg, rules)               # (B, D)
+    cand = constrain(candidate_matrix, rules, "candidates", None)
+    return cand @ u.T                                       # (N_cand, B)

@@ -1,0 +1,256 @@
+"""Decoder-only LM family (dense + MoE, GQA), shared by all 5 LM archs.
+
+Layers are scan-stacked (params carry a leading (L, ...) dim) so 88-94-layer
+configs lower as one rolled loop — compile time stays flat across depths and
+remat policy applies to the scan body.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules, constrain
+from repro.models.layers import (
+    LMConfig,
+    Params,
+    attention_block,
+    mlp_block,
+    rms_norm,
+)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (shape-only compatible: wrap with jax.eval_shape for dry-run)
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, K, L = cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    keys = jax.random.split(key, 12)
+    dt = cfg.dtype
+
+    def norm_init(*shape):
+        return jnp.ones(shape, dt)
+
+    def w(key, *shape, scale=0.02):
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dt)
+
+    layers: Dict[str, jnp.ndarray] = {
+        "attn_norm": norm_init(L, d),
+        "mlp_norm": norm_init(L, d),
+        "wq": w(keys[0], L, d, H * hd),
+        "wk": w(keys[1], L, d, K * hd),
+        "wv": w(keys[2], L, d, K * hd),
+        "wo": w(keys[3], L, H * hd, d),
+    }
+    if cfg.moe is not None:
+        E = cfg.moe.n_experts
+        layers["router"] = w(keys[4], L, d, E)
+        layers["wi"] = w(keys[5], L, E, d, cfg.d_ff)
+        if cfg.mlp_type == "swiglu":
+            layers["wg"] = w(keys[6], L, E, d, cfg.d_ff)
+        layers["wo_mlp"] = w(keys[7], L, E, cfg.d_ff, d)
+    else:
+        layers["wi"] = w(keys[5], L, d, cfg.d_ff)
+        if cfg.mlp_type == "swiglu":
+            layers["wg"] = w(keys[6], L, d, cfg.d_ff)
+        layers["wo_mlp"] = w(keys[7], L, cfg.d_ff, d)
+
+    params: Params = {
+        "embed": w(keys[8], cfg.vocab, d),
+        "final_norm": norm_init(d),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = w(keys[9], d, cfg.vocab)
+    return params
+
+
+def param_shardings(cfg: LMConfig, rules: ShardingRules) -> Params:
+    """PartitionSpec pytree matching init_params (2-D FSDP x TP layout).
+
+    Every sharded dim is divisibility-guarded: input shardings require the
+    dim to split evenly (e.g. granite-moe's vocab 49155 cannot shard over
+    16 — it replicates instead; all headline weight dims do divide)."""
+    s = rules.spec
+    d = rules.if_divisible
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    qdim = cfg.n_heads * cfg.head_dim
+    kdim = cfg.n_kv_heads * cfg.head_dim
+    emb_d = d("embed", D)
+    layers = {
+        "attn_norm": s("stack", None),
+        "mlp_norm": s("stack", None),
+        "wq": s("stack", emb_d, d("heads", qdim)),
+        "wk": s("stack", emb_d, d("kv_heads", kdim)),
+        "wv": s("stack", emb_d, d("kv_heads", kdim)),
+        "wo": s("stack", d("heads", qdim), emb_d),
+    }
+    if cfg.moe is not None:
+        # 'moe_ff' maps expert-FFN columns; default None (pure EP + FSDP on
+        # d_model). The 'serve_weights' variant maps it to 'data' so serving
+        # weights are FULLY resident (EPxTP) — no per-step FSDP all-gather
+        # (§Perf qwen3-decode-1).
+        moe_f = d("moe_ff", F)
+        layers["router"] = s("stack", emb_d, None)
+        layers["wi"] = s("stack", d("expert", cfg.moe.n_experts), emb_d, moe_f)
+        if cfg.mlp_type == "swiglu":
+            layers["wg"] = s("stack", d("expert", cfg.moe.n_experts), emb_d, moe_f)
+        layers["wo_mlp"] = s("stack", d("expert", cfg.moe.n_experts), moe_f, emb_d)
+    else:
+        layers["wi"] = s("stack", emb_d, d("ff", F))
+        if cfg.mlp_type == "swiglu":
+            layers["wg"] = s("stack", emb_d, d("ff", F))
+        layers["wo_mlp"] = s("stack", d("ff", F), emb_d)
+    out: Params = {
+        "embed": s(d("vocab", V), emb_d),
+        "final_norm": s(None),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        out["unembed"] = s(emb_d, d("vocab", V))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _layer_fn(cfg: LMConfig, rules: ShardingRules, positions, cache_len, collect: bool):
+    def fn(x, inputs):
+        if len(inputs) == 3:  # with cache
+            lp, ck, cv = inputs
+            a, (nk, nv) = attention_block(
+                x, lp, cfg, rules, positions=positions,
+                cache=(ck, cv), cache_len=cache_len,
+            )
+        else:
+            (lp,) = inputs
+            a, (nk, nv) = attention_block(
+                x, lp, cfg, rules, positions=positions,
+            )
+        x = x + a
+        x = x + mlp_block(x, lp, cfg, rules)
+        x = constrain(x, rules, "batch",
+                      rules.if_divisible("seq", x.shape[1]), "act_embed")
+        # Only materialize the stacked KV output when the caller needs a
+        # cache — train_step must not pay (L,B,S,K,hd) HBM for nothing.
+        return x, ((nk, nv) if collect else None)
+
+    return fn
+
+
+def forward(
+    params: Params,
+    tokens: jnp.ndarray,                 # (B, S) int32
+    cfg: LMConfig,
+    rules: ShardingRules,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # (L,B,T,K,hd) x2
+    cache_len: Optional[jnp.ndarray] = None,
+    return_cache: bool = False,
+):
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    seq_ax = rules.if_divisible("seq", S)
+    x = constrain(x, rules, "batch", seq_ax, "act_embed")
+
+    fn = _layer_fn(cfg, rules, positions, cache_len, return_cache)
+    if cfg.remat:
+        # 'full' recomputes the whole layer in bwd (min memory, +1/3 flops);
+        # 'dots' saves matmul outputs and recomputes only elementwise ops
+        # (≈0 extra matmul flops, modest activation memory) — §Perf granite-1.
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        fn = jax.checkpoint(fn, prevent_cse=False, policy=policy)
+
+    if cache is not None:
+        xs = (params["layers"], cache[0], cache[1])
+    else:
+        xs = (params["layers"],)
+    x, new_cache = jax.lax.scan(fn, x, xs, unroll=cfg.scan_unroll)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = x @ unembed.astype(cfg.dtype)                   # (B, S, V)
+    logits = constrain(logits, rules, "batch", seq_ax,
+                       rules.if_divisible("vocab", cfg.vocab))
+    if return_cache:
+        return logits, new_cache
+    return logits
+
+
+def lm_loss(
+    params: Params,
+    batch: Dict[str, jnp.ndarray],        # tokens (B,S), labels (B,S)
+    cfg: LMConfig,
+    rules: ShardingRules,
+) -> jnp.ndarray:
+    logits = forward(params, batch["tokens"], cfg, rules).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def prefill_step(
+    params: Params,
+    tokens: jnp.ndarray,                  # (B, S) the prompt
+    cfg: LMConfig,
+    rules: ShardingRules,
+):
+    """Prompt pass: returns (last-position logits, KV cache (L,B,S,K,hd))."""
+    logits, cache = forward(params, tokens, cfg, rules, return_cache=True)
+    return logits[:, -1], cache
+
+
+def decode_step(
+    params: Params,
+    token: jnp.ndarray,                   # (B, 1) newest token
+    cache: Tuple[jnp.ndarray, jnp.ndarray],  # (L,B,T,K,hd) x2, T = max ctx
+    cache_len: jnp.ndarray,               # scalar int32: current cache fill
+    cfg: LMConfig,
+    rules: ShardingRules,
+):
+    """One autoregressive step against a pre-filled KV cache.
+
+    Cost is O(T·d) per token — linear in context, which is why the
+    long_500k *decode* cells remain runnable for full-attention archs
+    (DESIGN.md §3.5) even though 500k *training* would be quadratic.
+    """
+    positions = cache_len + jnp.arange(1)
+    logits, new_cache = forward(
+        params, token, cfg, rules,
+        positions=positions, cache=cache, cache_len=cache_len,
+        return_cache=True,
+    )
+    return logits[:, -1], new_cache
+
+
+def make_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    """Empty KV cache pytree (L, B, T, K, hd) x 2."""
+    dt = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return jnp.zeros(shape, dt), jnp.zeros(shape, dt)
+
+
+def cache_shardings(cfg: LMConfig, rules: ShardingRules):
+    spec = rules.spec("stack", "batch", "seq",
+                      rules.if_divisible("kv_heads", cfg.n_kv_heads), None)
+    return spec, spec

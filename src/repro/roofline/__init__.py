@@ -1,0 +1,3 @@
+from repro.roofline.analysis import RooflineReport, analyze, HW
+
+__all__ = ["RooflineReport", "analyze", "HW"]

@@ -1,0 +1,133 @@
+"""Batched serving engine: request micro-batching over the PEM kernel.
+
+The paper serves one agent query at a time (desktop MCP). At fleet scale,
+queries are MICRO-BATCHED so the corpus matrix is streamed once per batch
+(pem_score's (d, B) query panel): the scoring cost is amortized B ways —
+the arithmetic-intensity argument in DESIGN.md §2.1.
+
+The engine is synchronous-core with a thread-safe front door: requests
+accumulate until `max_batch` or `max_wait_ms`, then one fused scoring pass
+answers all of them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import modulations as M
+from repro.core.grammar import parse
+from repro.core.vectorcache import VectorCache
+from repro.kernels.pem_score.ops import fold_plans
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: str
+    k: int = 10
+    _event: threading.Event = dataclasses.field(default_factory=threading.Event)
+    _result: Optional[List[Tuple[int, float]]] = None
+    enqueued_at: float = dataclasses.field(default_factory=time.time)
+    latency_ms: float = 0.0
+
+
+class BatchedRetrievalEngine:
+    def __init__(
+        self,
+        cache: VectorCache,
+        max_batch: int = 32,
+        max_wait_ms: float = 2.0,
+        now: Optional[float] = None,
+    ):
+        self.cache = cache
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self.now = now
+        self._q: "queue.Queue[Request]" = queue.Queue()
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self.batches_served = 0
+        self.requests_served = 0
+        self._worker.start()
+
+    # -- public API --------------------------------------------------------
+
+    def search(self, tokens: str, k: int = 10, timeout: float = 30.0):
+        req = Request(tokens=tokens, k=k)
+        self._q.put(req)
+        if not req._event.wait(timeout):
+            raise TimeoutError("retrieval request timed out")
+        return req._result
+
+    def close(self) -> None:
+        self._stop.set()
+        self._worker.join(timeout=2.0)
+
+    # -- batching core -------------------------------------------------------
+
+    def _collect(self) -> List[Request]:
+        try:
+            first = self._q.get(timeout=0.1)
+        except queue.Empty:
+            return []
+        batch = [first]
+        deadline = time.time() + self.max_wait_ms / 1e3
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.time()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self._q.get(timeout=remaining))
+            except queue.Empty:
+                break
+        return batch
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            batch = self._collect()
+            if not batch:
+                continue
+            self._serve(batch)
+
+    def _serve(self, batch: List[Request]) -> None:
+        """One fused pass: fold every request's plan into the (d, B) panels,
+        score the corpus ONCE, then per-request selection."""
+        plans = [
+            parse(r.tokens, self.cache.embed_fn, self.cache.embeddings_for_ids)
+            for r in batch
+        ]
+        q_pre, q_sup = fold_plans(plans)                      # (d, B) x 2
+        matrix = self.cache.matrix
+        # shared decay column per request (half-life may differ per plan)
+        ref = self.now if self.now is not None else time.time()
+        days = None
+        if self.cache.timestamps is not None:
+            days = np.maximum((ref - self.cache.timestamps) / 86400.0, 0.0)
+        base = matrix @ q_pre                                 # ONE pass (N, B)
+        sup = matrix @ q_sup
+        for j, (req, plan) in enumerate(zip(batch, plans)):
+            col = base[:, j]
+            if plan.decay is not None:
+                col = col * (1.0 / (1.0 + days / plan.decay.half_life_days))
+            col = col + sup[:, j]
+            k = min(req.k, col.shape[0])
+            if plan.diverse is not None:
+                over = min(plan.diverse.oversample * max(k, plan.pool), col.shape[0])
+                pool_idx = np.argpartition(-col, over - 1)[:over]
+                pool_idx = pool_idx[np.argsort(-col[pool_idx])]
+                sel = M.mmr_select_np(matrix[pool_idx], col[pool_idx], k,
+                                      plan.diverse.lam)
+                top = pool_idx[sel]
+            else:
+                top = np.argpartition(-col, k - 1)[:k]
+                top = top[np.argsort(-col[top])]
+            req._result = [(int(self.cache.ids[i]), float(col[i])) for i in top]
+            req.latency_ms = (time.time() - req.enqueued_at) * 1e3
+            req._event.set()
+        self.batches_served += 1
+        self.requests_served += len(batch)

@@ -1,0 +1,75 @@
+"""RetrievalService — the agent-facing surface (paper: FLEX via MCP).
+
+One endpoint, two parameters (paper Appendix B): ``flex_search(query)``
+where query is SQL (routed through the materializer) or an ``@preset``.
+Errors come back as explicit structured failures so the agent can rewrite
+and retry — never silent misexecution (paper §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sqlite3
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.materializer import MaterializeError, Materializer
+from repro.core.vectorcache import VectorCache
+from repro.embed import HashEmbedder
+from repro.sqlio.presets import run_preset
+from repro.sqlio.schema import load_embedding_matrix
+
+
+@dataclasses.dataclass
+class SearchResult:
+    ok: bool
+    columns: List[str] = dataclasses.field(default_factory=list)
+    rows: List[tuple] = dataclasses.field(default_factory=list)
+    error: Optional[str] = None
+    latency_ms: float = 0.0
+
+
+class RetrievalService:
+    """SQLite + VectorCache + Materializer behind one search call."""
+
+    def __init__(
+        self,
+        conn: sqlite3.Connection,
+        dim: int = 128,
+        embedder: Optional[HashEmbedder] = None,
+        now: Optional[float] = None,
+        engine: str = "reference",
+    ):
+        self.conn = conn
+        self.embedder = embedder or HashEmbedder(dim)
+        ids, matrix, ts = load_embedding_matrix(conn, dim)
+        self.cache = VectorCache(ids, matrix, ts, self.embedder)
+        self.now = now
+        self.engine = engine
+        self.query_count = 0
+        self.error_count = 0
+
+    def flex_search(self, query: str) -> SearchResult:
+        """SQL or @preset -> rows. The agent's single endpoint."""
+        t0 = time.time()
+        self.query_count += 1
+        try:
+            if query.strip().startswith("@"):
+                name = query.strip().split()[0]
+                out = run_preset(self.conn, name)
+                rows: List[tuple] = []
+                cols = ["section", "data"]
+                for key, (c, r) in out.items():
+                    rows.append((key, {"columns": c, "rows": r}))
+                return SearchResult(True, cols, rows,
+                                    latency_ms=(time.time() - t0) * 1e3)
+            mz = Materializer(self.conn, self.cache, now=self.now,
+                              engine=self.engine)
+            cols, rows = mz.execute(query)
+            return SearchResult(True, cols, rows,
+                                latency_ms=(time.time() - t0) * 1e3)
+        except (MaterializeError, sqlite3.Error, KeyError) as e:
+            # explicit failure -> the agent rewrites and retries (paper §7)
+            self.error_count += 1
+            return SearchResult(False, error=f"{type(e).__name__}: {e}",
+                                latency_ms=(time.time() - t0) * 1e3)

@@ -1,0 +1,10 @@
+from repro.sqlio.schema import build_schema, load_embedding_matrix, insert_chunks
+from repro.sqlio.presets import run_preset, PRESETS
+
+__all__ = [
+    "build_schema",
+    "load_embedding_matrix",
+    "insert_chunks",
+    "run_preset",
+    "PRESETS",
+]

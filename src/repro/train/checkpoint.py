@@ -1,0 +1,162 @@
+"""Checkpointing: atomic, resharding-agnostic, async-capable.
+
+* Pytrees are flattened to path-keyed arrays in an .npz + JSON metadata
+  (step, data-iterator state, config fingerprint).
+* Writes go to a temp file then os.replace() — a crash mid-save never
+  corrupts the latest checkpoint (fault tolerance).
+* Arrays are saved UNSHARDED (host-gathered): a restart may use a different
+  device count/mesh — restore() re-places onto whatever shardings the new
+  mesh dictates (elastic scaling).
+* ``AsyncCheckpointer`` offloads serialization to a background thread so the
+  train loop never blocks on I/O.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(
+    ckpt_dir: str | Path,
+    step: int,
+    tree: Any,
+    extra: Optional[Dict[str, Any]] = None,
+) -> Path:
+    """Atomic checkpoint write -> <dir>/ckpt_<step>.npz (+ .json)."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    tmp = ckpt_dir / f".tmp_ckpt_{step}.npz"
+    final = ckpt_dir / f"ckpt_{step}.npz"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    meta = {"step": step, "extra": extra or {}, "keys": sorted(flat)}
+    tmp_meta = ckpt_dir / f".tmp_ckpt_{step}.json"
+    tmp_meta.write_text(json.dumps(meta))
+    os.replace(tmp, final)                       # atomic on POSIX
+    os.replace(tmp_meta, ckpt_dir / f"ckpt_{step}.json")
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for p in ckpt_dir.glob("ckpt_*.npz"):
+        m = re.match(r"ckpt_(\d+)\.npz", p.name)
+        if m and (ckpt_dir / f"ckpt_{m.group(1)}.json").exists():
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str | Path,
+    like: Any,
+    step: Optional[int] = None,
+    shardings: Any = None,
+) -> Tuple[Any, int, Dict[str, Any]]:
+    """Restore into the structure of ``like``; optionally re-place onto
+    ``shardings`` (a matching pytree of NamedSharding) — this is the elastic
+    path: the mesh at restore time may differ from the one at save time."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    data = np.load(ckpt_dir / f"ckpt_{step}.npz")
+    meta = json.loads((ckpt_dir / f"ckpt_{step}.json").read_text())
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(_path_str(p) for p in path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        expect = np.asarray(leaf)
+        if tuple(arr.shape) != tuple(expect.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {expect.shape}")
+        leaves.append(arr.astype(expect.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, step, meta.get("extra", {})
+
+
+def prune(ckpt_dir: str | Path, keep: int = 3) -> None:
+    """Keep the newest `keep` checkpoints (bounded disk on long runs)."""
+    ckpt_dir = Path(ckpt_dir)
+    steps = sorted(
+        int(re.match(r"ckpt_(\d+)\.npz", p.name).group(1))
+        for p in ckpt_dir.glob("ckpt_*.npz")
+        if re.match(r"ckpt_(\d+)\.npz", p.name)
+    )
+    for s in steps[:-keep]:
+        for suffix in (".npz", ".json"):
+            try:
+                (ckpt_dir / f"ckpt_{s}{suffix}").unlink()
+            except FileNotFoundError:
+                pass
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer: snapshot on the caller thread
+    (device -> host copy), serialize/write off-thread."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot now
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, extra)
+                prune(self.ckpt_dir, self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,5 @@
+import os
+
+# Tests must see the real single CPU device — the 512-device flag belongs
+# ONLY to launch/dryrun.py (never set globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,105 @@
+"""Data substrates: corpora, BEIR-like datasets, graphs, neighbor sampler."""
+
+import numpy as np
+import pytest
+
+from repro.data.beir import DATASET_SPECS, make_dataset
+from repro.data.corpus import generate_corpus
+from repro.data.graph import (
+    CSRGraph,
+    GraphBatch,
+    _max_edges,
+    _max_nodes,
+    make_graph,
+    make_molecule_batch,
+    sample_subgraph,
+)
+from repro.data.recsys import CRITEO_1TB_VOCAB_SIZES, dlrm_batch, twotower_batch
+
+
+def test_corpus_structure():
+    chunks = generate_corpus(n_chunks=2000, n_sessions=50, seed=0)
+    assert len(chunks) == 2000
+    clusters = {c.cluster for c in chunks}
+    assert clusters == {"descriptive", "implementation", "neutral"}
+    n_desc = sum(c.cluster == "descriptive" for c in chunks)
+    n_impl = sum(c.cluster == "implementation" for c in chunks)
+    assert n_desc > 2 * n_impl          # descriptive cluster dominates (§5.1)
+    types = {c.type for c in chunks}
+    assert types <= {"user_prompt", "assistant", "tool_call", "file"}
+    assert len({c.session_id for c in chunks}) == 50
+
+
+def test_corpus_deterministic():
+    a = generate_corpus(n_chunks=100, n_sessions=5, seed=9)
+    b = generate_corpus(n_chunks=100, n_sessions=5, seed=9)
+    assert [c.content for c in a] == [c.content for c in b]
+
+
+@pytest.mark.parametrize("name", sorted(DATASET_SPECS))
+def test_beir_like_datasets(name):
+    ds = make_dataset(name)
+    n_docs = DATASET_SPECS[name][0]
+    assert len(ds.doc_texts) == n_docs
+    assert len(ds.queries) >= 30                      # paper: 30 queries/set
+    assert all(q for q in ds.queries)
+    assert all(len(r) > 0 for r in ds.qrels)
+    # synthetic 90-day uniform timestamps (paper Appendix A caveat)
+    spread = (ds.now - ds.timestamps) / 86400.0
+    assert spread.min() >= 0 and spread.max() <= 90.0
+
+
+def test_csr_and_sampler():
+    g = make_graph(300, 1500, 16, seed=0)
+    csr = CSRGraph(300, g.edge_src, g.edge_dst)
+    assert csr.indptr[-1] == 1500
+    rng = np.random.default_rng(0)
+    seeds = np.arange(20)
+    sub = sample_subgraph(g, csr, seeds, [4, 3], rng)
+    max_n = _max_nodes(20, [4, 3]) + 1
+    max_e = _max_edges(20, [4, 3])
+    assert sub.feats.shape == (max_n, 16)             # STATIC shapes
+    assert sub.edge_src.shape == (max_e,)
+    # real edges reference in-range nodes; padded edges hit the sink
+    sink = max_n - 1
+    assert (sub.edge_src[~sub.edge_mask] == sink).all()
+    assert (sub.edge_src[sub.edge_mask] < max_n).all()
+    # only seeds supervised
+    assert sub.node_mask.sum() == len(seeds)
+    # features of sampled nodes match the parent graph
+    real = sub.feats[: sub.node_mask.shape[0]][~np.isclose(sub.feats, 0).all(1)]
+    assert real.shape[0] >= len(seeds)
+
+
+def test_sampler_isolated_nodes_self_loop():
+    g = GraphBatch(
+        feats=np.eye(4, dtype=np.float32),
+        edge_src=np.array([0], np.int32), edge_dst=np.array([1], np.int32),
+        labels=np.zeros(4, np.int32),
+        node_mask=np.ones(4, bool), edge_mask=np.ones(1, bool),
+    )
+    csr = CSRGraph(4, g.edge_src, g.edge_dst)
+    nbrs = csr.sample_neighbors(np.array([3]), 4, np.random.default_rng(0))
+    assert (nbrs == 3).all()                          # self-loop fallback
+
+
+def test_molecule_batch_block_diagonal():
+    mol = make_molecule_batch(8, 10, 20, 6, seed=0)
+    gid_src = mol.graph_ids[mol.edge_src]
+    gid_dst = mol.graph_ids[mol.edge_dst]
+    assert (gid_src == gid_dst).all()                 # no cross-graph edges
+
+
+def test_criteo_vocab_published_sizes():
+    assert len(CRITEO_1TB_VOCAB_SIZES) == 26
+    assert sum(CRITEO_1TB_VOCAB_SIZES) > 1.8e8        # ~188M rows total
+    assert max(CRITEO_1TB_VOCAB_SIZES) < 4.1e7        # MLPerf 40M row cap
+
+
+def test_recsys_batches_within_vocab():
+    b = dlrm_batch(64, 13, CRITEO_1TB_VOCAB_SIZES[:5], seed=0)
+    for i, v in enumerate(CRITEO_1TB_VOCAB_SIZES[:5]):
+        assert b["sparse"][:, i].max() < v
+    t = twotower_batch(32, 100, 200, 8, seed=0)
+    assert t["hist"].min() >= -1                       # -1 = bag padding
+    assert (t["pos_item"] < 200).all()

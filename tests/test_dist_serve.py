@@ -1,0 +1,114 @@
+"""Distributed PEM (shard_map) + serving engine + retrieval service."""
+
+import concurrent.futures as cf
+import sqlite3
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.vectorcache import VectorCache
+from repro.data.corpus import build_database, generate_corpus
+from repro.dist.pem_sharded import make_pem_topk, pem_topk_reference
+from repro.dist.sharding import default_rules
+from repro.embed import HashEmbedder
+from repro.serve.engine import BatchedRetrievalEngine
+from repro.serve.retrieval import RetrievalService
+
+
+def test_pem_sharded_matches_reference_single_device():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = default_rules(mesh)
+    rng = np.random.default_rng(0)
+    corpus = jnp.asarray(rng.standard_normal((512, 64)).astype(np.float32))
+    days = jnp.asarray(rng.uniform(0, 60, 512).astype(np.float32))
+    qp = jnp.asarray(rng.standard_normal((64, 3)).astype(np.float32))
+    qs = jnp.asarray(rng.standard_normal((64, 3)).astype(np.float32))
+    i1, v1 = make_pem_topk(mesh, rules, 25)(corpus, days, qp, qs)
+    i2, v2 = pem_topk_reference(corpus, days, qp, qs, 25)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+
+def test_pem_sharded_multi_device_subprocess():
+    """True multi-shard correctness: run on 8 forced host devices in a
+    subprocess (the flag must never leak into this process)."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist.pem_sharded import make_pem_topk, pem_topk_reference
+        from repro.dist.sharding import default_rules
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rules = default_rules(mesh)
+        rng = np.random.default_rng(1)
+        corpus = jnp.asarray(rng.standard_normal((1024, 32)).astype(np.float32))
+        days = jnp.asarray(rng.uniform(0, 60, 1024).astype(np.float32))
+        qp = jnp.asarray(rng.standard_normal((32, 4)).astype(np.float32))
+        qs = jnp.asarray(rng.standard_normal((32, 4)).astype(np.float32))
+        i1, v1 = make_pem_topk(mesh, rules, 50)(corpus, days, qp, qs)
+        i2, v2 = pem_topk_reference(corpus, days, qp, qs, 50)
+        # values: fp-identical up to fusion reassociation; indices: exact
+        assert np.allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5), "values diverge"
+        assert (np.asarray(i1) == np.asarray(i2)).all(), "indices diverge"
+        print("MULTI_DEVICE_OK", jax.device_count())
+    """)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "MULTI_DEVICE_OK 8" in r.stdout
+
+
+@pytest.fixture(scope="module")
+def small_service():
+    emb = HashEmbedder(64)
+    chunks = generate_corpus(n_chunks=500, n_sessions=25, seed=11)
+    conn = sqlite3.connect(":memory:", check_same_thread=False)
+    build_database(conn, chunks, emb)
+    return RetrievalService(conn, dim=64, embedder=emb, now=1_770_000_000.0)
+
+
+def test_flex_search_sql(small_service):
+    res = small_service.flex_search(
+        "SELECT v.id, v.score FROM vec_ops('similar:server lifecycle pool:10') v "
+        "ORDER BY v.score DESC LIMIT 5")
+    assert res.ok and len(res.rows) == 5
+    assert res.latency_ms > 0
+
+
+def test_flex_search_preset(small_service):
+    res = small_service.flex_search("@orient")
+    assert res.ok
+    sections = {r[0] for r in res.rows}
+    assert {"now", "about", "shape", "query_surface", "presets"} <= sections
+
+
+def test_flex_search_error_then_retry(small_service):
+    bad = small_service.flex_search("SELECT v.id FROM vec_ops('decay:zzz') v")
+    assert not bad.ok and "decay" in bad.error
+    good = small_service.flex_search(
+        "SELECT v.id FROM vec_ops('similar:x decay:7') v LIMIT 3")
+    assert good.ok                       # the agent's retry path
+    assert small_service.error_count == 1
+
+
+def test_batched_engine_matches_direct():
+    emb = HashEmbedder(64)
+    texts = [f"item group {i % 9} tail {i}" for i in range(400)]
+    vc = VectorCache(np.arange(400), emb.embed_batch(texts),
+                     np.linspace(0, 89 * 86400, 400), emb)
+    eng = BatchedRetrievalEngine(vc, max_batch=16, now=90 * 86400.0)
+    try:
+        tokens = [f"similar:group {i % 9} tail decay:14" for i in range(24)]
+        with cf.ThreadPoolExecutor(12) as ex:
+            batched = list(ex.map(lambda t: eng.search(t, 5), tokens))
+        direct = [vc.search(t, now=90 * 86400.0)[:5] for t in tokens]
+        for b, d in zip(batched, direct):
+            assert [i for i, _ in b] == [i for i, _ in d]
+        assert eng.batches_served < len(tokens)   # batching actually batched
+    finally:
+        eng.close()

@@ -1,0 +1,90 @@
+"""Token grammar parser (paper §3.4.2)."""
+
+import numpy as np
+import pytest
+
+from repro.core import modulations as M
+from repro.core.grammar import GrammarError, build_plan, parse, tokenize
+from repro.embed import HashEmbedder
+
+EMB = HashEmbedder(64)
+
+
+def test_multiword_clauses():
+    p = tokenize(
+        "similar:how the system works architecture diverse "
+        "suppress:website landing page design tagline "
+        "suppress:documentation readme community post"
+    )
+    assert p.similar == "how the system works architecture"
+    assert p.suppress == [
+        "website landing page design tagline",
+        "documentation readme community post",
+    ]
+    assert p.diverse
+
+
+def test_any_order_same_plan():
+    a = tokenize("similar:auth tokens diverse suppress:jwt decay:7 pool:100")
+    b = tokenize("decay:7 pool:100 suppress:jwt similar:auth tokens diverse")
+    assert a == b
+
+
+def test_defaults():
+    p = tokenize("similar:x")
+    assert p.pool == M.DEFAULT_POOL and p.decay is None and not p.diverse
+    plan = build_plan(p, EMB)
+    assert plan.pool == 500 and plan.diverse is None
+
+
+def test_bare_words_are_similar():
+    p = tokenize("auth tokens diverse")
+    assert p.similar == "auth tokens" and p.diverse
+
+
+def test_decay_value_and_default():
+    assert tokenize("similar:x decay:14").decay == 14.0
+    assert tokenize("similar:x decay:").decay == M.DEFAULT_DECAY_HALF_LIFE
+
+
+def test_centroid_ids():
+    p = tokenize("similar:x centroid:3,5,9")
+    assert p.centroid_ids == [3, 5, 9]
+
+
+def test_from_to():
+    p = tokenize("from:prototype idea to:production system")
+    assert p.from_text == "prototype idea" and p.to_text == "production system"
+    plan = build_plan(p, EMB)
+    assert plan.trajectory is not None
+    assert np.allclose(
+        plan.trajectory.direction,
+        M.l2_normalize(EMB("production system")) - M.l2_normalize(EMB("prototype idea")),
+    )
+
+
+@pytest.mark.parametrize("bad", [
+    "",                       # no query at all
+    "diverse",                # keyword only
+    "similar:x decay:abc",    # non-numeric decay
+    "similar:x decay:-5",     # negative half-life
+    "similar:x pool:0",       # zero pool
+    "similar:x centroid:a,b", # non-integer ids
+    "from:a",                 # from without to
+    "to:b",                   # to without from
+    "suppress: similar:x",    # empty suppress text
+])
+def test_errors_are_explicit(bad):
+    with pytest.raises(GrammarError):
+        build_plan(tokenize(bad), EMB)
+
+
+def test_plan_binding():
+    plan = parse("similar:alpha suppress:beta suppress:gamma decay:3 diverse pool:42",
+                 EMB)
+    assert plan.pool == 42
+    assert len(plan.suppress) == 2
+    assert plan.decay.half_life_days == 3.0
+    assert plan.diverse.lam == M.DEFAULT_MMR_LAMBDA
+    assert plan.n_directions == 3
+    assert abs(float(np.linalg.norm(plan.query)) - 1.0) < 1e-5

@@ -1,0 +1,148 @@
+"""Query materializer: scanning, rewriting, dispatch, failure modes."""
+
+import sqlite3
+
+import numpy as np
+import pytest
+
+from repro.core.materializer import (
+    MaterializeError,
+    Materializer,
+    _scan_calls,
+    _split_args,
+)
+from repro.core.vectorcache import VectorCache
+from repro.data.corpus import build_database, generate_corpus
+from repro.embed import HashEmbedder
+from repro.sqlio.schema import load_embedding_matrix
+
+
+@pytest.fixture(scope="module")
+def db():
+    emb = HashEmbedder(64)
+    chunks = generate_corpus(n_chunks=600, n_sessions=30, seed=7)
+    conn = sqlite3.connect(":memory:", check_same_thread=False)
+    build_database(conn, chunks, emb)
+    ids, matrix, ts = load_embedding_matrix(conn, 64)
+    cache = VectorCache(ids, matrix, ts, emb)
+    return conn, cache
+
+
+def _mz(db):
+    conn, cache = db
+    return Materializer(conn, cache, now=1_770_000_000.0)
+
+
+# -- scanner ----------------------------------------------------------------
+
+
+def test_scan_finds_calls_with_quoted_sql():
+    sql = ("SELECT * FROM vec_ops('similar:x', 'SELECT id FROM m "
+           "WHERE t = ''assistant''') v JOIN keyword('term.x') k ON v.id=k.id")
+    calls = _scan_calls(sql)
+    assert [c.func for c in calls] == ["vec_ops", "keyword"]
+    assert calls[0].args[1] == "SELECT id FROM m WHERE t = 'assistant'"
+    assert calls[1].args == ["term.x"]
+
+
+def test_scan_ignores_names_inside_strings():
+    calls = _scan_calls("SELECT 'vec_ops(1)' AS lit FROM t")
+    assert calls == []
+
+
+def test_scan_word_boundary():
+    assert _scan_calls("SELECT myvec_ops('x') FROM t") == []
+
+
+def test_unbalanced_parens_explicit_error():
+    with pytest.raises(MaterializeError):
+        _scan_calls("SELECT * FROM vec_ops('x' ")
+
+
+def test_split_args_rejects_non_literal():
+    with pytest.raises(MaterializeError):
+        _split_args("foo, 'bar'")
+
+
+# -- execution ---------------------------------------------------------------
+
+
+def test_three_phase_query(db):
+    mz = _mz(db)
+    cols, rows = mz.execute(
+        "SELECT v.id, v.score, m.content FROM vec_ops("
+        "'similar:server lifecycle debugging pool:20',"
+        "'SELECT id FROM messages WHERE type = ''assistant''') v "
+        "JOIN messages m ON v.id = m.id ORDER BY v.score DESC LIMIT 5"
+    )
+    assert cols == ["id", "score", "content"]
+    assert 0 < len(rows) <= 5
+    scores = [r[1] for r in rows]
+    assert scores == sorted(scores, reverse=True)
+
+
+def test_prefilter_restricts_candidates(db):
+    conn, cache = db
+    mz = _mz(db)
+    _, rows = mz.execute(
+        "SELECT v.id FROM vec_ops('similar:anything pool:500',"
+        "'SELECT id FROM chunks WHERE type = ''file''') v"
+    )
+    types = {
+        conn.execute("SELECT type FROM chunks WHERE id=?", (r[0],)).fetchone()[0]
+        for r in rows
+    }
+    assert types == {"file"}
+
+
+def test_empty_prefilter_returns_empty_not_crash(db):
+    mz = _mz(db)
+    _, rows = mz.execute(
+        "SELECT v.id FROM vec_ops('similar:x', "
+        "'SELECT id FROM chunks WHERE type = ''no_such_type''') v"
+    )
+    assert rows == []
+
+
+def test_keyword_and_hybrid(db):
+    mz = _mz(db)
+    _, rows = mz.execute("SELECT k.id, k.rank, k.snippet FROM keyword('server') k "
+                         "ORDER BY k.rank DESC LIMIT 5")
+    assert rows and all(r[1] > 0 for r in rows)   # rank positive, higher=better
+    _, hybrid = mz.execute(
+        "SELECT k.id, k.rank, v.score FROM keyword('server') k "
+        "JOIN vec_ops('similar:server lifecycle') v ON k.id = v.id "
+        "ORDER BY v.score DESC LIMIT 5"
+    )
+    assert hybrid
+
+
+def test_keyword_fallback_quoting(db):
+    mz = _mz(db)
+    # dots/special chars break FTS5 syntax -> automatic fallback quoting
+    _, rows = mz.execute("SELECT k.id FROM keyword('server.lifecycle') k")
+    assert isinstance(rows, list)
+
+
+def test_write_statements_rejected(db):
+    mz = _mz(db)
+    with pytest.raises(MaterializeError):
+        mz.execute("DELETE FROM _raw_chunks")
+    with pytest.raises(MaterializeError):
+        mz.execute("SELECT v.id FROM vec_ops('similar:x', "
+                   "'DELETE FROM _raw_chunks') v")
+
+
+def test_grammar_error_is_explicit(db):
+    mz = _mz(db)
+    with pytest.raises(MaterializeError):
+        mz.execute("SELECT v.id FROM vec_ops('decay:oops') v")
+
+
+def test_engines_agree(db):
+    conn, cache = db
+    sql = ("SELECT v.id FROM vec_ops('similar:background worker failure "
+           "suppress:website landing page decay:30 pool:50') v ORDER BY v.score DESC")
+    ref = Materializer(conn, cache, now=1_770_000_000.0, engine="reference").execute(sql)[1]
+    fus = Materializer(conn, cache, now=1_770_000_000.0, engine="fused").execute(sql)[1]
+    assert [r[0] for r in ref] == [r[0] for r in fus]

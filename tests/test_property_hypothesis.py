@@ -1,0 +1,149 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import modulations as M
+from repro.core.grammar import tokenize
+from repro.metrics.ranking import ils, ndcg_at_k, rbo
+
+SET = settings(max_examples=40, deadline=None)
+
+vecs = hnp.arrays(np.float32, st.integers(8, 64),
+                  elements=st.floats(-5, 5, width=32)).filter(
+    lambda v: np.linalg.norm(v) > 1e-3)
+
+
+@SET
+@given(vecs)
+def test_l2_normalize_unit_and_idempotent(v):
+    n1 = np.asarray(M.l2_normalize(v))
+    assert abs(np.linalg.norm(n1) - 1.0) < 1e-4
+    np.testing.assert_allclose(np.asarray(M.l2_normalize(n1)), n1, atol=1e-5)
+
+
+def _corpus_and_plan(draw):
+    d = draw(st.sampled_from([16, 32]))
+    n = draw(st.integers(20, 120))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    mat = rng.standard_normal((n, d)).astype(np.float32)
+    mat /= np.linalg.norm(mat, axis=1, keepdims=True)
+    days = rng.uniform(0, 90, n).astype(np.float32)
+    q = mat[0] + 0.1 * rng.standard_normal(d).astype(np.float32)
+    q = np.asarray(M.l2_normalize(q))
+    n_sup = draw(st.integers(0, 3))
+    sups = tuple(
+        M.SuppressSpec(
+            direction=np.asarray(M.l2_normalize(
+                rng.standard_normal(d).astype(np.float32))),
+            weight=draw(st.floats(0.1, 1.0)),
+        ) for _ in range(n_sup)
+    )
+    traj = None
+    if draw(st.booleans()):
+        traj = M.TrajectorySpec(direction=np.asarray(M.l2_normalize(
+            rng.standard_normal(d).astype(np.float32))))
+    decay = M.DecaySpec(draw(st.floats(1.0, 60.0))) if draw(st.booleans()) else None
+    plan = M.ModulationPlan(query=q, trajectory=traj, decay=decay, suppress=sups)
+    return mat, days, plan
+
+
+plans = st.composite(_corpus_and_plan)()
+
+
+@SET
+@given(plans)
+def test_fused_equals_reference_for_any_plan(args):
+    """The one-GEMM folded execution == the paper's sequential pipeline,
+    for arbitrary modulation combinations (composability invariant)."""
+    mat, days, plan = args
+    ref = np.asarray(M.modulate_scores(mat, days, plan))
+    fused = np.asarray(M.fused_modulate_scores(mat, days, plan))
+    np.testing.assert_allclose(fused, ref, atol=1e-4)
+
+
+@SET
+@given(plans)
+def test_suppress_stacks_additively(args):
+    mat, days, plan = args
+    if not plan.suppress:
+        return
+    base = M.ModulationPlan(query=plan.query, trajectory=plan.trajectory,
+                            decay=plan.decay, suppress=())
+    s0 = np.asarray(M.modulate_scores(mat, days, base))
+    s1 = np.asarray(M.modulate_scores(mat, days, plan))
+    manual = s0.copy()
+    for spec in plan.suppress:
+        manual -= spec.weight * (mat @ spec.direction)
+    np.testing.assert_allclose(s1, manual, atol=1e-4)
+
+
+@SET
+@given(st.integers(0, 10_000), st.floats(1.0, 60.0))
+def test_decay_monotone_in_age(seed, hl):
+    rng = np.random.default_rng(seed)
+    days = np.sort(rng.uniform(0, 120, 50)).astype(np.float32)
+    s = np.ones(50, np.float32)
+    out = np.asarray(M.apply_decay(s, days, M.DecaySpec(hl)))
+    assert (np.diff(out) <= 1e-7).all()          # older -> never higher
+    assert (out > 0).all() and (out <= 1.0).all()
+
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.integers(2, 30), st.integers(31, 80))
+def test_mmr_invariants(seed, k, n):
+    rng = np.random.default_rng(seed)
+    e = rng.standard_normal((n, 16)).astype(np.float32)
+    e /= np.linalg.norm(e, axis=1, keepdims=True)
+    rel = rng.standard_normal(n).astype(np.float32)
+    sel = M.mmr_select_np(e, rel, k)
+    assert len(sel) == k
+    assert len(set(sel.tolist())) == k            # no duplicates
+    assert (sel >= 0).all() and (sel < n).all()   # within pool
+    assert sel[0] == int(np.argmax(rel))          # first pick = pure relevance
+
+
+@SET
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=25, unique=True),
+       st.lists(st.integers(0, 50), min_size=1, max_size=25, unique=True))
+def test_rbo_bounds_and_identity(a, b):
+    r = rbo(a, b)
+    assert -1e-9 <= r <= 1.0 + 1e-9
+    assert abs(rbo(a, a) - 1.0) < 1e-9
+    assert abs(rbo(a, b) - rbo(b, a)) < 1e-9      # symmetry
+
+
+@SET
+@given(st.integers(0, 10_000))
+def test_ils_bounds(seed):
+    rng = np.random.default_rng(seed)
+    e = rng.standard_normal((10, 8)).astype(np.float32)
+    v = ils(e)
+    assert -1.0 - 1e-6 <= v <= 1.0 + 1e-6
+    same = np.tile(e[:1], (5, 1))
+    assert ils(same) > 0.999                      # duplicates -> max ILS
+
+
+@SET
+@given(st.integers(0, 10_000))
+def test_ndcg_perfect_ranking_is_one(seed):
+    rng = np.random.default_rng(seed)
+    docs = list(range(20))
+    qrels = {d: int(rng.integers(0, 3)) for d in docs}
+    if not any(qrels.values()):
+        qrels[0] = 1
+    ranked = sorted(docs, key=lambda d: -qrels[d])
+    assert abs(ndcg_at_k(ranked, qrels, 10) - 1.0) < 1e-9
+    assert 0.0 <= ndcg_at_k(list(rng.permutation(docs)), qrels, 10) <= 1.0
+
+
+@SET
+@given(st.permutations(["similar:alpha beta", "decay:7", "suppress:gamma delta",
+                        "diverse", "pool:50"]))
+def test_token_order_irrelevant(parts):
+    """Tokens in any order produce the identical parse (paper §3.4.2)."""
+    p = tokenize(" ".join(parts))
+    q = tokenize("similar:alpha beta decay:7 suppress:gamma delta diverse pool:50")
+    assert p == q

@@ -1,0 +1,80 @@
+"""Roofline machinery: HLO collective-byte parsing + three-term math."""
+
+import numpy as np
+
+from repro.roofline.analysis import (
+    HW,
+    RooflineReport,
+    analyze,
+    collective_bytes_from_hlo,
+)
+
+HLO_SAMPLE = """
+HloModule jit_step
+  %ar = f32[1024,128]{1,0} all-reduce(f32[1024,128]{1,0} %x), replica_groups={}
+  %ag.1 = bf16[2048,64]{1,0} all-gather(bf16[128,64]{1,0} %y), dimensions={0}
+  %aa = f32[16,256]{1,0} all-to-all(f32[16,256]{1,0} %z), dimensions={1}
+  %cp = u32[8]{0} collective-permute(u32[8]{0} %w), source_target_pairs={{0,1}}
+  %rs = f32[64,64]{1,0} reduce-scatter(f32[512,64]{1,0} %v), dimensions={0}
+  %dot = f32[64,64]{1,0} dot(f32[64,128]{1,0} %a, f32[128,64]{1,0} %b)
+  %ar2 = f32[100]{0} all-reduce-done(f32[100]{0} %h)
+"""
+
+
+def test_collective_parse():
+    total, per_op = collective_bytes_from_hlo(HLO_SAMPLE)
+    expect = {
+        "all-reduce": 1024 * 128 * 4,
+        "all-gather": 128 * 64 * 2,
+        "all-to-all": 16 * 256 * 4,
+        "collective-permute": 8 * 4,
+        "reduce-scatter": 512 * 64 * 4,
+    }
+    for op, b in expect.items():
+        assert per_op[op] == b, (op, per_op.get(op), b)
+    assert total == sum(expect.values())
+
+
+def test_collective_parse_ignores_dots_and_done():
+    total, per_op = collective_bytes_from_hlo(
+        "%dot = f32[4096,4096]{1,0} dot(f32[4096,128]{1,0} %a, f32[128,4096]{1,0} %b)")
+    assert total == 0 and per_op == {}
+
+
+def test_three_terms_and_bottleneck():
+    rep = RooflineReport(
+        arch="x", shape="y", mesh="16x16", chips=256,
+        hlo_flops=256 * HW.peak_flops,        # exactly 1s of compute
+        hlo_bytes=256 * HW.hbm_bw * 0.5,      # 0.5s of memory
+        collective_bytes=256 * HW.link_bw * 0.25,
+        collective_by_op={}, model_flops=256 * HW.peak_flops * 0.8,
+    )
+    assert abs(rep.t_compute - 1.0) < 1e-9
+    assert abs(rep.t_memory - 0.5) < 1e-9
+    assert abs(rep.t_collective - 0.25) < 1e-9
+    assert rep.bottleneck == "compute"
+    assert abs(rep.useful_flops_ratio - 0.8) < 1e-9
+    assert abs(rep.roofline_fraction - 0.8) < 1e-9
+
+
+def test_analyze_scales_per_device_to_fleet():
+    rep = analyze("a", "s", "16x16", 256, {"flops": 10.0, "bytes accessed": 20.0},
+                  HLO_SAMPLE, model_flops=1000.0)
+    assert rep.hlo_flops == 10.0 * 256
+    assert rep.hlo_bytes == 20.0 * 256
+    assert rep.collective_bytes > 0
+
+
+def test_report_rendering(tmp_path):
+    import json
+
+    from repro.roofline.report import load_cells, roofline_table
+
+    cell = analyze("a", "s", "16x16", 256, {"flops": 1e9, "bytes accessed": 1e9},
+                   "", model_flops=1e11).to_dict()
+    cell.update({"rules": "default", "compile_s": 1.0})
+    (tmp_path / "a__s__16x16.json").write_text(json.dumps(cell))
+    cells = load_cells(tmp_path)
+    assert len(cells) == 1
+    table = roofline_table(cells)
+    assert "| a | s |" in table and "compute" in table or "memory" in table

@@ -1,0 +1,111 @@
+"""Structural operators (paper §3.2): cluster:K and central columns."""
+
+import sqlite3
+
+import numpy as np
+import pytest
+
+from repro.core.materializer import Materializer
+from repro.core.structural import centrality, kmeans_labels
+from repro.core.vectorcache import VectorCache
+from repro.data.corpus import build_database, generate_corpus
+from repro.embed import HashEmbedder
+from repro.sqlio.schema import load_embedding_matrix
+
+
+def _clustered_embeds(n_per=20, k=3, d=32, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((k, d)).astype(np.float32) * 4
+    e = np.concatenate(
+        [centers[i] + 0.2 * rng.standard_normal((n_per, d)).astype(np.float32)
+         for i in range(k)])
+    return e / np.linalg.norm(e, axis=1, keepdims=True)
+
+
+def test_kmeans_recovers_planted_clusters():
+    e = _clustered_embeds()
+    labels = kmeans_labels(e, 3)
+    assert set(labels.tolist()) <= {0, 1, 2}
+    # every planted cluster maps to exactly one label
+    for i in range(3):
+        block = labels[i * 20:(i + 1) * 20]
+        assert len(set(block.tolist())) == 1
+    assert len({labels[0], labels[20], labels[40]}) == 3
+
+
+def test_kmeans_deterministic_and_bounded():
+    e = _clustered_embeds(seed=3)
+    a = kmeans_labels(e, 5)
+    b = kmeans_labels(e, 5)
+    np.testing.assert_array_equal(a, b)
+    assert kmeans_labels(e[:2], 10).max() <= 1   # k clamped to n
+
+
+def test_centrality_bounds_and_ordering():
+    e = _clustered_embeds(n_per=30, k=2, seed=1)
+    c = centrality(e)
+    assert c.shape == (60,)
+    assert (c >= -1 - 1e-6).all() and (c <= 1 + 1e-6).all()
+    # a duplicate-heavy pool: the duplicated point is most central
+    dup = np.concatenate([np.tile(e[:1], (10, 1)), e[30:35]])
+    cd = centrality(dup)
+    assert cd[:10].mean() > cd[10:].mean()
+    assert centrality(e[:1]).tolist() == [0.0]
+
+
+@pytest.fixture(scope="module")
+def db():
+    emb = HashEmbedder(64)
+    chunks = generate_corpus(n_chunks=800, n_sessions=40, seed=5)
+    conn = sqlite3.connect(":memory:", check_same_thread=False)
+    build_database(conn, chunks, emb)
+    ids, matrix, ts = load_embedding_matrix(conn, 64)
+    return conn, VectorCache(ids, matrix, ts, emb)
+
+
+def test_cluster_column_via_sql(db):
+    conn, cache = db
+    mz = Materializer(conn, cache, now=1_770_000_000.0)
+    cols, rows = mz.execute(
+        "SELECT v.cluster, COUNT(*) AS n, AVG(v.score) AS mean_score "
+        "FROM vec_ops('similar:server lifecycle cluster:4 pool:40') v "
+        "GROUP BY v.cluster ORDER BY n DESC"
+    )
+    assert cols == ["cluster", "n", "mean_score"]
+    assert 1 <= len(rows) <= 4
+    assert sum(r[1] for r in rows) == 40
+
+
+def test_central_column_via_sql(db):
+    conn, cache = db
+    mz = Materializer(conn, cache, now=1_770_000_000.0)
+    cols, rows = mz.execute(
+        "SELECT v.id, v.score, v.central FROM "
+        "vec_ops('similar:identity provenance central pool:20') v "
+        "ORDER BY v.central DESC LIMIT 5"
+    )
+    assert cols == ["id", "score", "central"]
+    assert len(rows) == 5
+    cents = [r[2] for r in rows]
+    assert cents == sorted(cents, reverse=True)
+    assert all(-1.0 <= c <= 1.0 for c in cents)
+
+
+def test_structural_composes_with_modulations(db):
+    conn, cache = db
+    mz = Materializer(conn, cache, now=1_770_000_000.0)
+    cols, rows = mz.execute(
+        "SELECT v.id, v.cluster, v.central FROM vec_ops("
+        "'similar:server lifecycle diverse decay:30 suppress:website page "
+        "cluster:3 central pool:30') v"
+    )
+    assert cols == ["id", "cluster", "central"]
+    assert len(rows) == 30
+
+
+def test_plain_vec_ops_unchanged(db):
+    conn, cache = db
+    mz = Materializer(conn, cache, now=1_770_000_000.0)
+    cols, rows = mz.execute(
+        "SELECT * FROM vec_ops('similar:server pool:5') v")
+    assert cols == ["id", "score"]
