@@ -1,0 +1,80 @@
+"""PEM latency snapshot -> BENCH_pem.json (the perf-trajectory anchor).
+
+Times the Phase-2 hot path (composed-plan scoring + top-k selection)
+through every cheap ExecutionBackend at the paper's headline corpus scale
+(``FLEX_BENCH_SCALE`` shrinks it for smoke runs), and writes a JSON
+snapshot at the repo root so successive PRs can diff the trajectory:
+
+    PYTHONPATH=src python -m benchmarks.run pem
+
+The ``pallas`` backend is skipped off-TPU (interpret mode measures the
+emulator, not the kernel).
+"""
+
+from __future__ import annotations
+
+import json
+import platform
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import DIM, NOW, SCALE, emit, production_db, timed
+from repro.core.backends import get_backend, list_backends, select_candidates
+from repro.core.grammar import parse
+
+SNAPSHOT_PATH = Path(__file__).resolve().parents[1] / "BENCH_pem.json"
+
+TOKENS = (
+    "similar:how the system works architecture "
+    "suppress:website landing page design "
+    "from:prototype sketch to:production deployment "
+    "decay:30 diverse pool:500"
+)
+
+
+def _bench_backends():
+    import jax
+
+    conn, cache, chunks, emb = production_db()
+    plan = parse(TOKENS, emb, cache.embeddings_for_ids)
+    n = cache.matrix.shape[0]
+    days = np.maximum((NOW - cache.timestamps) / 86400.0, 0.0).astype(np.float32)
+
+    on_tpu = jax.default_backend() == "tpu"
+    rows = {}
+    for name in list_backends():
+        if name == "pallas" and not on_tpu:
+            continue
+        backend = get_backend(name)
+
+        t_score = timed(lambda: backend.score(cache.matrix, days, plan))
+        emit(f"pem/score_{name}", t_score, f"n={n} composed-3mods")
+
+        scores = backend.score(cache.matrix, days, plan)
+        t_select = timed(
+            lambda: select_candidates(cache.matrix, scores, plan.pool, plan)
+        )
+        emit(f"pem/select_{name}", t_select, f"pool={plan.pool} mmr")
+
+        rows[name] = {
+            "score_us": round(t_score * 1e6, 1),
+            "select_us": round(t_select * 1e6, 1),
+            "total_ms": round((t_score + t_select) * 1e3, 3),
+        }
+    return n, rows
+
+
+def run() -> None:
+    n, rows = _bench_backends()
+    snapshot = {
+        "bench": "pem_phase2_composed",
+        "tokens": TOKENS,
+        "corpus_chunks": n,
+        "scale": SCALE,
+        "dim": DIM,
+        "platform": platform.machine(),
+        "backends": rows,
+    }
+    SNAPSHOT_PATH.write_text(json.dumps(snapshot, indent=2) + "\n")
+    print(f"# wrote {SNAPSHOT_PATH}", flush=True)

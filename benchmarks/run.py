@@ -12,7 +12,8 @@ import time
 
 
 def main() -> None:
-    from benchmarks import behavioral, case_study, kernel_bench, latency, prefilter, scaling
+    from benchmarks import (behavioral, case_study, kernel_bench, latency,
+                            pem_snapshot, prefilter, scaling)
 
     suites = {
         "table2": latency.run,
@@ -21,6 +22,7 @@ def main() -> None:
         "table5+6": behavioral.run,
         "table7": case_study.run,
         "kernel": kernel_bench.run,
+        "pem": pem_snapshot.run,
     }
     want = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

@@ -45,8 +45,15 @@ def main() -> None:
     t_warm = time.time() - t0
 
     idx_r, val_r = pem_topk_reference(corpus, days, q_pre, q_sup, K)
-    ok = bool((np.asarray(idx_s) == np.asarray(idx_r)).all())
-    print(f"== sharded == unsharded oracle: {ok}")
+    # per-shard vs full-matrix matmul reassociation leaves ~1e-7 score noise;
+    # at 262k rows that can swap ADJACENT ranks of fp-tied scores, so compare
+    # the candidate sets + values, not the exact order
+    idx_s_np, idx_r_np = np.asarray(idx_s), np.asarray(idx_r)
+    sets_ok = all(set(idx_s_np[b]) == set(idx_r_np[b]) for b in range(B))
+    vals_ok = np.allclose(np.asarray(val_s), np.asarray(val_r), rtol=1e-5)
+    ok = sets_ok and vals_ok
+    print(f"== sharded == unsharded oracle: {ok} "
+          f"(candidate sets equal: {sets_ok}, values rtol=1e-5: {vals_ok})")
     print(f"   first call {t_first*1e3:.1f} ms (compile), warm {t_warm*1e3:.1f} ms")
 
     shards = 4  # corpus axis = 'data'

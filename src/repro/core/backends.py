@@ -1,0 +1,380 @@
+"""ExecutionBackend — the single engine-dispatch seam (all Phase-2 paths).
+
+Before this module, engine selection was three divergent mechanisms:
+string dispatch inside ``VectorCache.search_plan``, hand-rolled fused
+matmuls in ``BatchedRetrievalEngine._serve``, and pass-through strings in
+``Materializer``/``RetrievalService``.  Now every consumer resolves a
+backend from ONE registry and calls the same two primitives:
+
+    score(matrix, days_ago, plan)         -> (N,)   one request
+    score_panel(matrix, days_ago, plans)  -> (N, B) a micro-batch
+
+plus the shared :func:`select_candidates` (top-k / MMR oversample) so the
+batched and direct paths rank identically.  Registered backends:
+
+    reference-numpy  paper-faithful, one matvec per direction (Table 1)
+    fused-numpy      folded two-matvec formulation (one corpus stream)
+    jit-jax          the fused formulation jitted through XLA
+    pallas           the fused TPU kernel (interpret mode off-TPU)
+    sharded          shard_map row-sharded scoring over the local devices
+
+All are algebraically identical on the composed plan grammar; the
+equivalence suite (tests/test_backends.py) pins each against the
+reference oracle.  Later scaling PRs (multi-host, async, cache tiering)
+plug in here via :func:`register_backend`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import modulations as M
+
+__all__ = [
+    "ExecutionBackend",
+    "get_backend",
+    "register_backend",
+    "list_backends",
+    "select_candidates",
+]
+
+
+def _require_days(plan: M.ModulationPlan, days_ago: Optional[np.ndarray]) -> None:
+    if plan.decay is not None and days_ago is None:
+        raise ValueError("decay: modulation requires per-chunk timestamps")
+
+
+def _decay_column(days_ago: np.ndarray, half_life: float) -> np.ndarray:
+    return 1.0 / (1.0 + days_ago / half_life)
+
+
+class ExecutionBackend:
+    """One Phase-2 scoring implementation.
+
+    Subclasses implement :meth:`score_panel`; :meth:`score` defaults to the
+    single-column case.  Scores are returned as host numpy arrays — the
+    selection stage (top-k / MMR) is host-side in every serving path.
+    """
+
+    name: str = "?"
+
+    def score(
+        self,
+        matrix: np.ndarray,
+        days_ago: Optional[np.ndarray],
+        plan: M.ModulationPlan,
+    ) -> np.ndarray:
+        return self.score_panel(matrix, days_ago, [plan])[:, 0]
+
+    def score_panel(
+        self,
+        matrix: np.ndarray,
+        days_ago: Optional[np.ndarray],
+        plans: Sequence[M.ModulationPlan],
+    ) -> np.ndarray:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<ExecutionBackend {self.name}>"
+
+
+class ReferenceNumpyBackend(ExecutionBackend):
+    """Paper-faithful: one matvec per direction, exactly Table 1."""
+
+    name = "reference-numpy"
+
+    def score(self, matrix, days_ago, plan):
+        return np.asarray(M.modulate_scores(matrix, days_ago, plan))
+
+    def score_panel(self, matrix, days_ago, plans):
+        cols = [self.score(matrix, days_ago, p) for p in plans]
+        return np.stack(cols, axis=1)
+
+
+class FusedNumpyBackend(ExecutionBackend):
+    """Folded two-matvec formulation: the corpus matrix streams once.
+
+    scores[:, j] = decay_j * (M @ q_pre[:, j]) + M @ q_sup[:, j]
+    with per-request decay half-lives applied column-wise.
+    """
+
+    name = "fused-numpy"
+
+    def score(self, matrix, days_ago, plan):
+        return np.asarray(M.fused_modulate_scores(matrix, days_ago, plan))
+
+    def score_panel(self, matrix, days_ago, plans):
+        for p in plans:
+            _require_days(p, days_ago)
+        q_pre, q_sup = M.fold_plans(plans)
+        base = matrix @ q_pre                           # ONE pass (N, B)
+        sup = matrix @ q_sup
+        out = np.empty_like(base)
+        for j, plan in enumerate(plans):
+            col = base[:, j]
+            if plan.decay is not None:
+                col = col * _decay_column(days_ago, plan.decay.half_life_days)
+            out[:, j] = col + sup[:, j]
+        return out
+
+
+class JitJaxBackend(ExecutionBackend):
+    """The fused formulation jitted through XLA (CPU/GPU/TPU portable).
+
+    Per-request decay folds into a (N, B) factor panel; half_life=inf makes
+    the factor exactly 1.0 for no-decay columns, so one jitted graph serves
+    every plan mix without recompiling on plan structure.
+    """
+
+    name = "jit-jax"
+
+    def __init__(self) -> None:
+        self._fn = None
+        self._mat_src: Optional[np.ndarray] = None
+        self._mat_dev = None
+
+    def _device_matrix(self, matrix: np.ndarray):
+        """Cache the device-resident corpus (it is immutable across calls;
+        re-uploading ~123 MB per micro-batch would dominate the matmul)."""
+        if self._mat_src is not matrix:
+            import jax.numpy as jnp
+
+            self._mat_dev = jnp.asarray(matrix, jnp.float32)
+            self._mat_src = matrix
+        return self._mat_dev
+
+    def _build(self):
+        import jax
+
+        @jax.jit
+        def fused(matrix, q_pre, q_sup, days, half_lives):
+            decay = 1.0 / (1.0 + days[:, None] / half_lives[None, :])
+            return decay * (matrix @ q_pre) + matrix @ q_sup
+
+        return fused
+
+    def score_panel(self, matrix, days_ago, plans):
+        for p in plans:
+            _require_days(p, days_ago)
+        if self._fn is None:
+            self._fn = self._build()
+        q_pre, q_sup = M.fold_plans(plans)
+        half = np.asarray(
+            [p.decay.half_life_days if p.decay is not None else np.inf
+             for p in plans],
+            dtype=np.float32,
+        )
+        n = matrix.shape[0]
+        days = (np.zeros(n, np.float32) if days_ago is None
+                else np.asarray(days_ago, np.float32))
+        return np.asarray(
+            self._fn(self._device_matrix(matrix), q_pre, q_sup, days, half)
+        )
+
+
+class PallasBackend(ExecutionBackend):
+    """The fused TPU kernel (``repro.kernels.pem_score``).
+
+    Off-TPU the kernel runs in Pallas interpret mode (the same path the
+    kernel tests validate).  The kernel takes one decay column per call, so
+    requests group by half-life and each group scores in one kernel launch.
+    """
+
+    name = "pallas"
+
+    def score_panel(self, matrix, days_ago, plans):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.pem_score.ops import pem_score
+
+        for p in plans:
+            _require_days(p, days_ago)
+        q_pre, q_sup = M.fold_plans(plans)
+        interpret = jax.default_backend() != "tpu"
+        mat = jnp.asarray(matrix, jnp.float32)
+        out = np.empty((matrix.shape[0], len(plans)), np.float32)
+
+        groups: Dict[Optional[float], List[int]] = {}
+        for j, plan in enumerate(plans):
+            hl = plan.decay.half_life_days if plan.decay is not None else None
+            groups.setdefault(hl, []).append(j)
+        for hl, cols in groups.items():
+            decay = None
+            if hl is not None:
+                decay = jnp.asarray(_decay_column(days_ago, hl), jnp.float32)
+            res = pem_score(
+                mat,
+                jnp.asarray(q_pre[:, cols]),
+                jnp.asarray(q_sup[:, cols]),
+                decay,
+                interpret=interpret,
+            )
+            out[:, cols] = np.asarray(res)
+        return out
+
+
+class ShardedBackend(ExecutionBackend):
+    """shard_map row-sharded scoring over every locally visible device.
+
+    The corpus rows split across a 1-D device mesh; each shard computes its
+    slice of the fused score panel and the sharded output reassembles on
+    the host.  On one device this degenerates to the jit path; on a real
+    mesh it is the scoring stage of ``repro.dist.pem_sharded`` (which adds
+    the local-top-k union merge for the selection side).
+    """
+
+    name = "sharded"
+
+    def __init__(self) -> None:
+        self._fn = None
+        self._n_shards = None
+        self._mat_src: Optional[np.ndarray] = None
+        self._mat_dev = None
+
+    def _build(self):
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        n_dev = len(jax.devices())
+        mesh = jax.make_mesh((n_dev,), ("shards",))
+
+        def local(matrix, q_pre, q_sup, days, half_lives):
+            decay = 1.0 / (1.0 + days[:, None] / half_lives[None, :])
+            return decay * (matrix @ q_pre) + matrix @ q_sup
+
+        fn = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P("shards", None), P(None, None), P(None, None),
+                      P("shards"), P(None)),
+            out_specs=P("shards", None),
+            check_rep=False,
+        )
+        return jax.jit(fn), n_dev
+
+    def _device_matrix(self, matrix: np.ndarray, pad: int):
+        """Cache the padded device-resident corpus across calls (the matrix
+        is immutable; padding depends only on the fixed shard count)."""
+        if self._mat_src is not matrix:
+            import jax.numpy as jnp
+
+            mat = np.asarray(matrix, np.float32)
+            if pad:
+                mat = np.pad(mat, ((0, pad), (0, 0)))
+            self._mat_dev = jnp.asarray(mat)
+            self._mat_src = matrix
+        return self._mat_dev
+
+    def score_panel(self, matrix, days_ago, plans):
+        for p in plans:
+            _require_days(p, days_ago)
+        if self._fn is None:
+            # other threads key on _fn: set _n_shards FIRST so no caller can
+            # observe _fn non-None with _n_shards still unset
+            fn, n_shards = self._build()
+            self._n_shards = n_shards
+            self._fn = fn
+        q_pre, q_sup = M.fold_plans(plans)
+        half = np.asarray(
+            [p.decay.half_life_days if p.decay is not None else np.inf
+             for p in plans],
+            dtype=np.float32,
+        )
+        n = matrix.shape[0]
+        days = (np.zeros(n, np.float32) if days_ago is None
+                else np.asarray(days_ago, np.float32))
+        # pad the row grid to the shard count, slice the panel back
+        pad = (-n) % self._n_shards
+        mat = self._device_matrix(matrix, pad)
+        if pad:
+            days = np.pad(days, (0, pad))
+        out = np.asarray(self._fn(mat, q_pre, q_sup, days, half))
+        return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ExecutionBackend] = {}
+_ALIASES = {
+    # the seed's public engine strings keep working
+    "reference": "reference-numpy",
+    "fused": "fused-numpy",
+    "jax": "jit-jax",
+}
+
+
+def register_backend(backend: ExecutionBackend) -> ExecutionBackend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+register_backend(ReferenceNumpyBackend())
+register_backend(FusedNumpyBackend())
+register_backend(JitJaxBackend())
+register_backend(PallasBackend())
+register_backend(ShardedBackend())
+
+
+def list_backends() -> List[str]:
+    """Canonical names of every registered backend."""
+    return sorted(_REGISTRY)
+
+
+def get_backend(engine: Union[str, ExecutionBackend]) -> ExecutionBackend:
+    """Resolve an engine name (or pass an ExecutionBackend through)."""
+    if isinstance(engine, ExecutionBackend):
+        return engine
+    name = _ALIASES.get(engine, engine)
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {engine!r}; known: {list_backends()} "
+            f"(aliases: {sorted(_ALIASES)})"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Shared selection (identical ranking on batched and direct paths)
+# ---------------------------------------------------------------------------
+
+
+def top_idx(scores: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the top-k scores, sorted descending (argpartition+sort)."""
+    if k >= scores.shape[0]:
+        return np.argsort(-scores, kind="stable")
+    part = np.argpartition(-scores, k)[:k]
+    return part[np.argsort(-scores[part], kind="stable")]
+
+
+def select_candidates(
+    matrix: np.ndarray,
+    scores: np.ndarray,
+    k: int,
+    plan: M.ModulationPlan,
+) -> np.ndarray:
+    """Top-k (or MMR-diverse) row selection over scored candidates.
+
+    The MMR pool oversamples ``oversample * max(k, plan.pool)`` so a
+    small-k request (batched path) and a pool-sized request (direct path)
+    draw from the same pool — MMR's greedy selection is prefix-consistent,
+    so their rankings agree.
+    """
+    n = scores.shape[0]
+    k = min(k, n)
+    if k <= 0:
+        return np.empty(0, dtype=np.int64)
+    if plan.diverse is not None:
+        over = min(plan.diverse.oversample * max(k, plan.pool), n)
+        pool_idx = top_idx(scores, over)
+        sel = M.mmr_select_np(
+            matrix[pool_idx], scores[pool_idx], k, plan.diverse.lam
+        )
+        return pool_idx[sel]
+    return top_idx(scores, k)

@@ -22,12 +22,13 @@ import itertools
 import re
 import sqlite3
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 # Monotonic across all Materializer instances sharing a connection: temp
 # tables live on the CONNECTION, so names must be process-unique.
 _TEMP_IDS = itertools.count(1)
 
+from repro.core.backends import ExecutionBackend, get_backend
 from repro.core.vectorcache import VectorCache
 
 _PSEUDO_FUNCS = ("vec_ops", "keyword")
@@ -174,13 +175,15 @@ class Materializer:
         *,
         fts_table: str = "chunks_fts",
         now: Optional[float] = None,
-        engine: str = "reference",
+        engine: Union[str, ExecutionBackend] = "reference",
     ) -> None:
         self.conn = conn
         self.cache = cache
         self.fts_table = fts_table
         self.now = now
-        self.engine = engine
+        # resolve through the shared backend registry up front so an unknown
+        # engine fails at construction, not mid-rewrite
+        self.engine = get_backend(engine)
 
     # -- public API ----------------------------------------------------------
 

@@ -249,6 +249,35 @@ def stacked_directions(plan: ModulationPlan) -> Tuple[Array, Array]:
     return panel, w
 
 
+def fold_plan(plan: ModulationPlan) -> Tuple[np.ndarray, np.ndarray]:
+    """Fold one plan's directions into (q_pre, q_sup), each (d,).
+
+    Linearity (DESIGN.md §2.1): trajectory and suppress are linear in the
+    score array, so
+        q_pre = (1-blend)*q_centroid_shifted + blend*direction_traj
+        q_sup = -sum_i w_i * x_i
+    and  scores = decay * (M @ q_pre) + M @ q_sup  reproduces the fixed-order
+    pipeline exactly.
+    """
+    q = np.asarray(effective_query(plan), dtype=np.float32)
+    if plan.trajectory is not None:
+        b = plan.trajectory.blend
+        q_pre = (1.0 - b) * q + b * np.asarray(plan.trajectory.direction, np.float32)
+    else:
+        q_pre = q
+    d = q.shape[-1]
+    q_sup = np.zeros(d, dtype=np.float32)
+    for spec in plan.suppress:
+        q_sup -= spec.weight * np.asarray(spec.direction, np.float32)
+    return q_pre, q_sup
+
+
+def fold_plans(plans: Sequence[ModulationPlan]) -> Tuple[np.ndarray, np.ndarray]:
+    """Batch of plans -> (q_pre (d,B), q_sup (d,B)) panels."""
+    pres, sups = zip(*(fold_plan(p) for p in plans))
+    return np.stack(pres, axis=1), np.stack(sups, axis=1)
+
+
 def fused_modulate_scores(
     matrix: Array,
     days_ago: Optional[Array],

@@ -4,25 +4,27 @@ Holds the corpus embedding matrix in memory (the paper's core requirement),
 parses the token grammar, runs the fixed-order modulation pipeline, and
 returns the top-``pool`` scored candidates for Phase 3 composition.
 
-Two execution paths, algebraically identical (tested against each other):
-
-* ``engine="reference"`` — paper-faithful: one matvec per direction
-  (base + each suppress + trajectory), exactly Table 1.
-* ``engine="fused"``     — beyond-paper: all directions stacked into one
-  skinny GEMM so the corpus matrix is streamed once (see
-  ``modulations.fused_modulate_scores``; on TPU this is the Pallas kernel
-  ``repro.kernels.pem_score``).
+Execution is dispatched through the :mod:`repro.core.backends` registry —
+``engine`` accepts any registered backend name (``reference-numpy``,
+``fused-numpy``, ``jit-jax``, ``pallas``, ``sharded``; the seed's
+``"reference"``/``"fused"`` aliases keep working) or an
+:class:`~repro.core.backends.ExecutionBackend` instance.  All backends are
+algebraically identical (tested against each other in
+tests/test_backends.py).
 """
 
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import grammar
 from repro.core import modulations as M
+from repro.core.backends import ExecutionBackend, get_backend, select_candidates
+
+Engine = Union[str, ExecutionBackend]
 
 SECONDS_PER_DAY = 86400.0
 
@@ -75,7 +77,7 @@ class VectorCache:
         candidate_ids: Optional[Sequence[int]] = None,
         *,
         now: Optional[float] = None,
-        engine: str = "reference",
+        engine: Engine = "reference",
         embed_fn: Optional[grammar.EmbedFn] = None,
     ) -> List[Tuple[int, float]]:
         """Run Phase 2: parse tokens, score candidates, select top-pool.
@@ -97,7 +99,7 @@ class VectorCache:
         candidate_ids: Optional[Sequence[int]] = None,
         *,
         now: Optional[float] = None,
-        engine: str = "reference",
+        engine: Engine = "reference",
     ):
         """Like :meth:`search` but also computes the §3.2 STRUCTURAL
         operators (`cluster:K`, `central`) over the selected candidates.
@@ -139,7 +141,7 @@ class VectorCache:
         candidate_ids: Optional[Sequence[int]] = None,
         *,
         now: Optional[float] = None,
-        engine: str = "reference",
+        engine: Engine = "reference",
     ) -> List[Tuple[int, float]]:
         sub_rows: Optional[np.ndarray] = None
         if candidate_ids is not None:
@@ -160,33 +162,12 @@ class VectorCache:
             ref = time.time() if now is None else now
             days_ago = np.maximum((ref - ts) / SECONDS_PER_DAY, 0.0).astype(np.float32)
 
-        if engine == "fused":
-            scores = np.asarray(M.fused_modulate_scores(matrix, days_ago, plan))
-        elif engine == "reference":
-            scores = np.asarray(M.modulate_scores(matrix, days_ago, plan))
-        else:
-            raise ValueError(f"unknown engine {engine!r}")
+        scores = get_backend(engine).score(matrix, days_ago, plan)
 
+        # MMR output order IS the ranking (iterative argmax), but the
+        # materializer contract is (id, score) rows; keep MMR order by
+        # re-ranking on the original modulated score like the paper's
+        # temp table does (ORDER BY v.score DESC in Phase 3).
         k = min(plan.pool, scores.shape[0])
-        if plan.diverse is not None:
-            over = min(plan.diverse.oversample * k, scores.shape[0])
-            pool_idx = _top_idx(scores, over)
-            sel = M.mmr_select_np(
-                matrix[pool_idx], scores[pool_idx], k, plan.diverse.lam
-            )
-            chosen = pool_idx[sel]
-            # MMR output order IS the ranking (iterative argmax), but the
-            # materializer contract is (id, score) rows; keep MMR order by
-            # re-ranking on the original modulated score like the paper's
-            # temp table does (ORDER BY v.score DESC in Phase 3).
-            return [(int(ids[i]), float(scores[i])) for i in chosen]
-        top = _top_idx(scores, k)
-        return [(int(ids[i]), float(scores[i])) for i in top]
-
-
-def _top_idx(scores: np.ndarray, k: int) -> np.ndarray:
-    """Indices of the top-k scores, sorted descending (argpartition+sort)."""
-    if k >= scores.shape[0]:
-        return np.argsort(-scores, kind="stable")
-    part = np.argpartition(-scores, k)[:k]
-    return part[np.argsort(-scores[part], kind="stable")]
+        chosen = select_candidates(matrix, scores, k, plan)
+        return [(int(ids[i]), float(scores[i])) for i in chosen]

@@ -1,0 +1,7 @@
+"""Distributed execution: logical-axis sharding rules + sharded PEM top-k.
+
+``sharding`` maps LOGICAL axis names (batch, heads, corpus, ...) to mesh
+axes so model code never hard-codes a mesh layout; ``pem_sharded`` is the
+two-stage (local top-k + union merge) distributed retrieval path;
+``tuned`` holds the named rule variants the perf hillclimb selects.
+"""

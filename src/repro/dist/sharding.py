@@ -1,0 +1,120 @@
+"""Logical-axis sharding rules (GSPMD layer).
+
+Model/config code names LOGICAL axes ("batch", "heads", "corpus", ...);
+a :class:`ShardingRules` maps each logical axis to zero or more MESH axes.
+The same model code then runs unchanged on a 1x1 CPU mesh (smoke tests),
+the 16x16 single-pod mesh, or the 2x16x16 multi-pod mesh — only the rules
+change.  This is the minformer/scaling-book idiom: specs are *derived*,
+never written inline at call sites.
+
+Vocabulary (every logical axis any spec in the tree may name):
+
+    batch, seq, stack, embed, act_embed, heads, kv_heads, ff, moe_ff,
+    expert, vocab            — LM family (FSDP x TP layout)
+    nodes, edges             — GNN row sharding
+    candidates, table_rows   — recsys corpus / embedding tables
+    corpus                   — flexvec retrieval row sharding
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# A logical axis maps to: no mesh axis (replicate), one mesh axis, or a
+# tuple of mesh axes (the dim is divided over their product, major-first).
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mesh + {logical axis -> mesh axes} mapping."""
+
+    mesh: Mesh
+    rules: Dict[str, MeshAxes]
+
+    # -- lookup ------------------------------------------------------------
+
+    def _axes(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        if name not in self.rules:
+            raise KeyError(
+                f"unknown logical axis {name!r}; known: {sorted(self.rules)}"
+            )
+        return self.rules[name]
+
+    def spec(self, *names: Optional[str]) -> PartitionSpec:
+        """PartitionSpec for a tensor whose dims carry these logical names.
+
+        ``spec()`` (no args) is fully replicated; ``None`` entries are
+        replicated dims.  Passing ``if_divisible(...)`` results is the
+        idiomatic divisibility-guarded form.
+        """
+        return PartitionSpec(*(self._axes(n) for n in names))
+
+    def size_of(self, name: Optional[str]) -> int:
+        """Number of shards the logical axis is divided into (1 = replicated)."""
+        axes = self._axes(name)
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def if_divisible(self, name: str, dim: int) -> Optional[str]:
+        """``name`` if ``dim`` splits evenly over its mesh axes, else None.
+
+        Input shardings require exact divisibility (e.g. a 49155-row vocab
+        cannot shard over 16 — it replicates instead).
+        """
+        return name if dim % self.size_of(name) == 0 else None
+
+
+def constrain(x: jax.Array, rules: ShardingRules, *names: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` via logical names (no-op on a 1x1 mesh)."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec(*names))
+    )
+
+
+def default_rules(mesh: Mesh) -> ShardingRules:
+    """The baseline layout: FSDP over the data axes x TP over the model axis.
+
+    On the multi-pod mesh the 'pod' axis joins the data group, so batch and
+    FSDP-sharded weight dims divide over pod*data.  The corpus maps to
+    'data' only (16 shards on the production mesh) — the hillclimb's
+    ``corpus_all`` variant (dist/tuned.py) spreads it over every chip.
+    """
+    data: MeshAxes = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    return ShardingRules(
+        mesh=mesh,
+        rules={
+            # LM family --------------------------------------------------
+            "batch": data,        # activations: data parallel
+            "seq": None,          # decode fallback remaps this (configs/lm.py)
+            "stack": None,        # the scanned layer-stack dim
+            "embed": data,        # weights: FSDP on d_model
+            "act_embed": "model",  # activations: TP on d_model
+            "heads": "model",
+            "kv_heads": "model",
+            "ff": "model",
+            "moe_ff": None,       # pure EP+FSDP; 'serve_weights' maps to data
+            "expert": "model",
+            "vocab": "model",
+            # GNN ---------------------------------------------------------
+            "nodes": data,
+            "edges": data,
+            # recsys ------------------------------------------------------
+            "candidates": data,
+            "table_rows": "model",
+            # flexvec retrieval -------------------------------------------
+            "corpus": "data",
+        },
+    )

@@ -1,0 +1,38 @@
+"""Named sharding-rule variants (the perf hillclimb's tuning axis).
+
+``default``       — FSDP x TP baseline (dist/sharding.py).
+``corpus_all``    — flexvec corpus rows over EVERY mesh axis, not just
+                    'data': scoring runs on all 256 chips instead of 16
+                    (§Perf flexvec-1; 67M chunks -> 134 MB/chip).
+``serve_weights`` — MoE expert-FFN columns over 'data' so serving weights
+                    are fully resident (EP x TP), eliminating the per-step
+                    FSDP all-gather during decode (§Perf qwen3-1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from jax.sharding import Mesh
+
+from repro.dist.sharding import ShardingRules, default_rules
+
+
+def get_rules(name: str, mesh: Mesh) -> ShardingRules:
+    """Resolve a rules variant by name for the given mesh."""
+    base = default_rules(mesh)
+    if name == "default":
+        return base
+    if name == "corpus_all":
+        return _replace(base, corpus=tuple(mesh.axis_names))
+    if name == "serve_weights":
+        return _replace(base, moe_ff="data")
+    raise KeyError(
+        f"unknown rules variant {name!r}; known: default, corpus_all, serve_weights"
+    )
+
+
+def _replace(rules: ShardingRules, **updates) -> ShardingRules:
+    merged = dict(rules.rules)
+    merged.update(updates)
+    return dataclasses.replace(rules, rules=merged)

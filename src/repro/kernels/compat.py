@@ -1,0 +1,19 @@
+"""Pallas API compatibility across JAX versions.
+
+The TPU compiler-params dataclass was renamed: older releases expose
+``pltpu.TPUCompilerParams``, newer ones ``pltpu.CompilerParams``.  Kernels
+import :func:`tpu_compiler_params` so they build under either name.
+"""
+
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU CompilerParams object under whichever name exists."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

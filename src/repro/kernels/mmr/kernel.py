@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 NEG = -1e30
 
 
@@ -80,7 +82,7 @@ def mmr_pallas(
             jax.ShapeDtypeStruct((b, k), jnp.int32),
             jax.ShapeDtypeStruct((b, k), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 BLOCK_N = 1024   # corpus rows per tile (multiple of 8 sublanes)
 BLOCK_B = 128    # query columns per tile (multiple of 128 lanes)
 
@@ -67,7 +69,7 @@ def pem_score_pallas(
         ],
         out_specs=pl.BlockSpec((block_n, block_b), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -9,44 +9,15 @@ interpret switch for CPU validation.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import modulations as M
+from repro.core.modulations import fold_plan, fold_plans  # noqa: F401  (re-export)
 from repro.kernels.pem_score.kernel import BLOCK_B, BLOCK_N, pem_score_pallas
 from repro.kernels.pem_score.ref import pem_score_ref
-
-
-def fold_plan(plan: M.ModulationPlan) -> Tuple[np.ndarray, np.ndarray]:
-    """Fold one plan's directions into (q_pre, q_sup), each (d,).
-
-    Linearity (DESIGN.md §2.1): trajectory and suppress are linear in the
-    score array, so
-        q_pre = (1-blend)*q_centroid_shifted + blend*direction_traj
-        q_sup = -sum_i w_i * x_i
-    and  scores = decay * (M @ q_pre) + M @ q_sup  reproduces the fixed-order
-    pipeline exactly.
-    """
-    q = np.asarray(M.effective_query(plan), dtype=np.float32)
-    if plan.trajectory is not None:
-        b = plan.trajectory.blend
-        q_pre = (1.0 - b) * q + b * np.asarray(plan.trajectory.direction, np.float32)
-    else:
-        q_pre = q
-    d = q.shape[-1]
-    q_sup = np.zeros(d, dtype=np.float32)
-    for spec in plan.suppress:
-        q_sup -= spec.weight * np.asarray(spec.direction, np.float32)
-    return q_pre, q_sup
-
-
-def fold_plans(plans: Sequence[M.ModulationPlan]) -> Tuple[np.ndarray, np.ndarray]:
-    """Batch of plans -> (q_pre (d,B), q_sup (d,B)) panels."""
-    pres, sups = zip(*(fold_plan(p) for p in plans))
-    return np.stack(pres, axis=1), np.stack(sups, axis=1)
 
 
 def _round_up(x: int, m: int) -> int:

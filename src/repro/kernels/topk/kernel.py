@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 BLOCK_B = 8      # queries per tile (sublane-friendly)
 BLOCK_N = 2048   # corpus scores per tile (lane multiple)
 
@@ -78,7 +80,7 @@ def topk_pallas(
             pltpu.VMEM((block_b, k), jnp.float32),
             pltpu.VMEM((block_b, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

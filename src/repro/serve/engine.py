@@ -6,8 +6,14 @@ queries are MICRO-BATCHED so the corpus matrix is streamed once per batch
 the arithmetic-intensity argument in DESIGN.md §2.1.
 
 The engine is synchronous-core with a thread-safe front door: requests
-accumulate until `max_batch` or `max_wait_ms`, then one fused scoring pass
-answers all of them.
+accumulate until `max_batch` or `max_wait_ms`, then one backend scoring
+pass answers all of them.  Scoring and selection route through the shared
+:mod:`repro.core.backends` dispatch — the same code path as the direct
+``VectorCache`` engine, so batched and direct rankings are identical.
+
+Failure isolation: a bad request (grammar error, decay without
+timestamps) fails ONLY that request — its error re-raises from ``search``
+— while the rest of the batch is served normally.
 """
 
 from __future__ import annotations
@@ -16,14 +22,13 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core import modulations as M
+from repro.core.backends import ExecutionBackend, get_backend, select_candidates
 from repro.core.grammar import parse
 from repro.core.vectorcache import VectorCache
-from repro.kernels.pem_score.ops import fold_plans
 
 
 @dataclasses.dataclass
@@ -32,6 +37,7 @@ class Request:
     k: int = 10
     _event: threading.Event = dataclasses.field(default_factory=threading.Event)
     _result: Optional[List[Tuple[int, float]]] = None
+    _error: Optional[Exception] = None
     enqueued_at: float = dataclasses.field(default_factory=time.time)
     latency_ms: float = 0.0
 
@@ -43,11 +49,13 @@ class BatchedRetrievalEngine:
         max_batch: int = 32,
         max_wait_ms: float = 2.0,
         now: Optional[float] = None,
+        engine: Union[str, ExecutionBackend] = "fused",
     ):
         self.cache = cache
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
         self.now = now
+        self.backend = get_backend(engine)
         self._q: "queue.Queue[Request]" = queue.Queue()
         self._stop = threading.Event()
         self._worker = threading.Thread(target=self._loop, daemon=True)
@@ -62,6 +70,8 @@ class BatchedRetrievalEngine:
         self._q.put(req)
         if not req._event.wait(timeout):
             raise TimeoutError("retrieval request timed out")
+        if req._error is not None:
+            raise req._error
         return req._result
 
     def close(self) -> None:
@@ -94,40 +104,59 @@ class BatchedRetrievalEngine:
                 continue
             self._serve(batch)
 
+    def _fail(self, req: Request, err: Exception) -> None:
+        req._error = err
+        req.latency_ms = (time.time() - req.enqueued_at) * 1e3
+        req._event.set()
+
+    def _finish(self, req: Request, result: List[Tuple[int, float]]) -> None:
+        req._result = result
+        req.latency_ms = (time.time() - req.enqueued_at) * 1e3
+        req._event.set()
+        self.requests_served += 1
+
     def _serve(self, batch: List[Request]) -> None:
-        """One fused pass: fold every request's plan into the (d, B) panels,
-        score the corpus ONCE, then per-request selection."""
-        plans = [
-            parse(r.tokens, self.cache.embed_fn, self.cache.embeddings_for_ids)
-            for r in batch
-        ]
-        q_pre, q_sup = fold_plans(plans)                      # (d, B) x 2
+        """One backend pass: fold every live request's plan into the (d, B)
+        panels, score the corpus ONCE, then per-request selection."""
+        live: List[Request] = []
+        plans = []
+        for req in batch:
+            try:
+                plan = parse(req.tokens, self.cache.embed_fn,
+                             self.cache.embeddings_for_ids)
+                if plan.decay is not None and self.cache.timestamps is None:
+                    raise ValueError("decay: requires timestamps in the cache")
+            except Exception as e:  # bad request: fail it, keep the batch
+                self._fail(req, e)
+                continue
+            live.append(req)
+            plans.append(plan)
+
+        self.batches_served += 1
+        if not live:
+            return
+
         matrix = self.cache.matrix
-        # shared decay column per request (half-life may differ per plan)
         ref = self.now if self.now is not None else time.time()
         days = None
         if self.cache.timestamps is not None:
             days = np.maximum((ref - self.cache.timestamps) / 86400.0, 0.0)
-        base = matrix @ q_pre                                 # ONE pass (N, B)
-        sup = matrix @ q_sup
-        for j, (req, plan) in enumerate(zip(batch, plans)):
-            col = base[:, j]
-            if plan.decay is not None:
-                col = col * (1.0 / (1.0 + days / plan.decay.half_life_days))
-            col = col + sup[:, j]
-            k = min(req.k, col.shape[0])
-            if plan.diverse is not None:
-                over = min(plan.diverse.oversample * max(k, plan.pool), col.shape[0])
-                pool_idx = np.argpartition(-col, over - 1)[:over]
-                pool_idx = pool_idx[np.argsort(-col[pool_idx])]
-                sel = M.mmr_select_np(matrix[pool_idx], col[pool_idx], k,
-                                      plan.diverse.lam)
-                top = pool_idx[sel]
-            else:
-                top = np.argpartition(-col, k - 1)[:k]
-                top = top[np.argsort(-col[top])]
-            req._result = [(int(self.cache.ids[i]), float(col[i])) for i in top]
-            req.latency_ms = (time.time() - req.enqueued_at) * 1e3
-            req._event.set()
-        self.batches_served += 1
-        self.requests_served += len(batch)
+
+        try:
+            scores = self.backend.score_panel(matrix, days, plans)  # (N, B)
+        except Exception as e:  # backend failure: fail the whole batch loudly
+            for req in live:
+                self._fail(req, e)
+            return
+
+        for j, (req, plan) in enumerate(zip(live, plans)):
+            try:
+                col = scores[:, j]
+                k = min(req.k, col.shape[0])
+                top = select_candidates(matrix, col, k, plan)
+                self._finish(
+                    req,
+                    [(int(self.cache.ids[i]), float(col[i])) for i in top],
+                )
+            except Exception as e:
+                self._fail(req, e)

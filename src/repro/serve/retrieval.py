@@ -11,8 +11,9 @@ from __future__ import annotations
 import dataclasses
 import sqlite3
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
+from repro.core.backends import ExecutionBackend, get_backend
 from repro.core.materializer import MaterializeError, Materializer
 from repro.core.vectorcache import VectorCache
 from repro.embed import HashEmbedder
@@ -38,14 +39,16 @@ class RetrievalService:
         dim: int = 128,
         embedder: Optional[HashEmbedder] = None,
         now: Optional[float] = None,
-        engine: str = "reference",
+        engine: Union[str, ExecutionBackend] = "reference",
     ):
         self.conn = conn
         self.embedder = embedder or HashEmbedder(dim)
         ids, matrix, ts = load_embedding_matrix(conn, dim)
         self.cache = VectorCache(ids, matrix, ts, self.embedder)
         self.now = now
-        self.engine = engine
+        # one registry resolve for the service lifetime; every Materializer
+        # this service builds shares the same backend instance
+        self.engine = get_backend(engine)
         self.query_count = 0
         self.error_count = 0
 

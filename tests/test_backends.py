@@ -1,0 +1,213 @@
+"""ExecutionBackend equivalence: every registered backend vs the oracle.
+
+The registry (repro/core/backends.py) is the single engine-dispatch seam;
+these tests pin each backend to the paper-faithful reference pipeline on
+fully composed plans (suppress + decay + trajectory + centroid + diverse),
+including the empty-candidate and no-timestamps edge cases, and assert the
+batched engine and the direct VectorCache path rank identically through
+the shared selection helper.
+"""
+
+import concurrent.futures as cf
+
+import numpy as np
+import pytest
+
+from repro.core import modulations as M
+from repro.core.backends import get_backend, list_backends, select_candidates
+from repro.core.grammar import GrammarError
+from repro.core.vectorcache import VectorCache
+from repro.embed import HashEmbedder
+
+BACKENDS = list_backends()
+NOW = 90 * 86400.0
+
+EMB = HashEmbedder(32)
+
+
+def _corpus(n=160, d=32, seed=3):
+    rng = np.random.default_rng(seed)
+    mat = rng.standard_normal((n, d)).astype(np.float32)
+    mat /= np.linalg.norm(mat, axis=1, keepdims=True)
+    days = rng.uniform(0.0, 60.0, n).astype(np.float32)
+    return mat, days
+
+
+def _composed_plan(mat, *, diverse=True, decay=True):
+    """suppress + decay + trajectory + centroid (+ diverse): every modulation."""
+    q = M.l2_normalize(EMB("how the retrieval system works"))
+    a = M.l2_normalize(EMB("prototype sketch"))
+    b = M.l2_normalize(EMB("production deployment"))
+    x1 = M.l2_normalize(EMB("website landing page"))
+    x2 = M.l2_normalize(EMB("marketing tagline"))
+    return M.ModulationPlan(
+        query=q,
+        centroid=M.CentroidSpec(examples=mat[:4]),
+        trajectory=M.TrajectorySpec(direction=b - a),
+        decay=M.DecaySpec(half_life_days=14.0) if decay else None,
+        suppress=(M.SuppressSpec(direction=x1),
+                  M.SuppressSpec(direction=x2, weight=0.3)),
+        diverse=M.DiverseSpec() if diverse else None,
+        pool=25,
+    )
+
+
+def test_registry_contains_all_five():
+    assert {"reference-numpy", "fused-numpy", "jit-jax", "pallas",
+            "sharded"} <= set(BACKENDS)
+    # seed aliases resolve to the same instances
+    assert get_backend("reference") is get_backend("reference-numpy")
+    assert get_backend("fused") is get_backend("fused-numpy")
+    with pytest.raises(ValueError):
+        get_backend("no-such-engine")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_scores_match_oracle_composed(backend):
+    mat, days = _corpus()
+    plan = _composed_plan(mat)
+    oracle = np.asarray(M.modulate_scores(mat, days, plan))
+    got = get_backend(backend).score(mat, days, plan)
+    np.testing.assert_allclose(got, oracle, atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_panel_matches_oracle_mixed_batch(backend):
+    """A micro-batch mixing decay half-lives and no-decay plans."""
+    mat, days = _corpus(seed=5)
+    plans = [
+        _composed_plan(mat, diverse=False),
+        _composed_plan(mat, diverse=False, decay=False),
+        M.ModulationPlan(query=M.l2_normalize(EMB("plain query")),
+                         decay=M.DecaySpec(half_life_days=30.0)),
+    ]
+    panel = get_backend(backend).score_panel(mat, days, plans)
+    assert panel.shape == (mat.shape[0], len(plans))
+    for j, plan in enumerate(plans):
+        oracle = np.asarray(M.modulate_scores(mat, days, plan))
+        np.testing.assert_allclose(panel[:, j], oracle, atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_ranking_matches_reference_through_vectorcache(backend):
+    """End-to-end search_plan: identical candidate ids for every backend,
+    on a composed plan INCLUDING diverse (MMR runs on the shared helper)."""
+    mat, days = _corpus(seed=7)
+    ts = NOW - days.astype(np.float64) * 86400.0
+    vc = VectorCache(np.arange(mat.shape[0]), mat, ts, EMB, normalized=True)
+    plan = _composed_plan(vc.matrix)
+    ref = vc.search_plan(plan, now=NOW, engine="reference-numpy")
+    got = vc.search_plan(plan, now=NOW, engine=backend)
+    assert [i for i, _ in got] == [i for i, _ in ref]
+    np.testing.assert_allclose([s for _, s in got], [s for _, s in ref],
+                               atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_empty_candidates(backend):
+    """Phase-1 pre-filters that match nothing yield an empty result."""
+    mat, days = _corpus()
+    ts = NOW - days.astype(np.float64) * 86400.0
+    vc = VectorCache(np.arange(mat.shape[0]), mat, ts, EMB, normalized=True)
+    plan = _composed_plan(vc.matrix)
+    assert vc.search_plan(plan, candidate_ids=[99999], now=NOW,
+                          engine=backend) == []
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_no_timestamps(backend):
+    """Without timestamps: non-decay plans work, decay plans raise."""
+    mat, _ = _corpus()
+    vc = VectorCache(np.arange(mat.shape[0]), mat, None, EMB,
+                     normalized=True)
+    ok_plan = _composed_plan(vc.matrix, decay=False)
+    res = vc.search_plan(ok_plan, now=NOW, engine=backend)
+    assert len(res) == min(ok_plan.pool, mat.shape[0])
+    bad_plan = _composed_plan(vc.matrix, decay=True)
+    with pytest.raises(ValueError, match="decay"):
+        vc.search_plan(bad_plan, now=NOW, engine=backend)
+    # panel path enforces the same contract per-plan
+    with pytest.raises(ValueError, match="decay"):
+        get_backend(backend).score_panel(mat, None, [bad_plan])
+
+
+def test_selection_oversample_alignment():
+    """Direct (k=pool) and batched (small k) draw from the same MMR pool, so
+    the batched ranking is a prefix of the direct one (satellite: the
+    engine.py / vectorcache.py oversample semantics are now shared)."""
+    mat, days = _corpus(seed=11)
+    plan = _composed_plan(mat)
+    scores = np.asarray(M.modulate_scores(mat, days, plan))
+    direct = select_candidates(mat, scores, min(plan.pool, len(scores)), plan)
+    batched = select_candidates(mat, scores, 5, plan)
+    assert list(batched) == list(direct[:5])
+
+
+def test_batched_engine_isolates_bad_request():
+    """A GrammarError in one request fails ONLY that request; the rest of
+    the batch is served (no batch-wide timeout)."""
+    emb = HashEmbedder(64)
+    texts = [f"item group {i % 7} tail {i}" for i in range(200)]
+    vc = VectorCache(np.arange(200), emb.embed_batch(texts),
+                     np.linspace(0, 89 * 86400, 200), emb)
+    from repro.serve.engine import BatchedRetrievalEngine
+
+    eng = BatchedRetrievalEngine(vc, max_batch=8, now=NOW)
+    try:
+        tokens = ["similar:group 1 tail decay:7",
+                  "similar:group 2 tail decay:not_a_number",   # bad
+                  "similar:group 3 tail"]
+        with cf.ThreadPoolExecutor(3) as ex:
+            futs = [ex.submit(eng.search, t, 5, 10.0) for t in tokens]
+            results = []
+            for f in futs:
+                try:
+                    results.append(f.result())
+                except GrammarError as e:
+                    results.append(e)
+        assert isinstance(results[1], GrammarError)
+        assert len(results[0]) == 5 and len(results[2]) == 5
+        direct = vc.search(tokens[0], now=NOW)[:5]
+        assert [i for i, _ in results[0]] == [i for i, _ in direct]
+    finally:
+        eng.close()
+
+
+def test_batched_engine_isolates_decay_without_timestamps():
+    """decay on a timestamp-less cache fails that request, not the batch."""
+    emb = HashEmbedder(64)
+    texts = [f"item group {i % 7} tail {i}" for i in range(100)]
+    vc = VectorCache(np.arange(100), emb.embed_batch(texts), None, emb)
+    from repro.serve.engine import BatchedRetrievalEngine
+
+    eng = BatchedRetrievalEngine(vc, max_batch=4, now=NOW)
+    try:
+        with cf.ThreadPoolExecutor(2) as ex:
+            good = ex.submit(eng.search, "similar:group 1 tail", 5, 10.0)
+            bad = ex.submit(eng.search, "similar:group 2 decay:7", 5, 10.0)
+            assert len(good.result()) == 5
+            with pytest.raises(ValueError, match="decay"):
+                bad.result()
+    finally:
+        eng.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_engine_any_backend_matches_direct(backend):
+    """The engine serves identically through every registered backend."""
+    emb = HashEmbedder(64)
+    texts = [f"item group {i % 5} tail {i}" for i in range(150)]
+    vc = VectorCache(np.arange(150), emb.embed_batch(texts),
+                     np.linspace(0, 89 * 86400, 150), emb)
+    from repro.serve.engine import BatchedRetrievalEngine
+
+    eng = BatchedRetrievalEngine(vc, max_batch=8, now=NOW, engine=backend)
+    try:
+        tokens = [f"similar:group {i % 5} tail decay:14" for i in range(6)]
+        with cf.ThreadPoolExecutor(6) as ex:
+            batched = list(ex.map(lambda t: eng.search(t, 5), tokens))
+        for t, b in zip(tokens, batched):
+            direct = vc.search(t, now=NOW)[:5]
+            assert [i for i, _ in b] == [i for i, _ in direct]
+    finally:
+        eng.close()

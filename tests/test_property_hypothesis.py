@@ -1,6 +1,11 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment"
+)
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 
