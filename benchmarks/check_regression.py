@@ -1,0 +1,131 @@
+"""CI bench-regression gate: diff fresh PEM snapshot(s) against a baseline.
+
+    FLEX_BENCH_SCALE=0.02 FLEX_BENCH_OUT=/tmp/BENCH_pem.new.json \
+        PYTHONPATH=src python -m benchmarks.run pem
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        /tmp/BENCH_pem.new.json BENCH_pem.smoke.json
+
+Several fresh snapshots may be passed (baseline last); the gate takes the
+per-backend MINIMUM ``total_ms`` across them.  Latency noise on shared CI
+runners is one-sided — a contended run only ever reads slow — so CI runs
+the smoke bench twice and a single noisy window cannot fail the gate,
+while a real regression shows up in every run.
+
+Per-backend ``total_ms`` (the fused score->select end-to-end latency) is
+compared against the committed ``BENCH_pem.smoke.json`` baseline; the gate
+fails on a > ``FLEX_BENCH_TOL`` (default 1.5) ratio for ANY backend that
+is not recorded as skipped in the baseline.  A backend present in the
+baseline but MISSING from the new snapshot fails too — silent omission is
+exactly the failure mode ``{"skipped": ...}`` recording exists to prevent
+— and so does a baseline-measured backend that starts reporting
+``skipped`` (its perf trajectory would otherwise end without a signal;
+regenerate the baseline if the skip is intentional).
+
+The gate compares ABSOLUTE milliseconds, so the committed baseline must
+come from the same platform class CI runs on (x86 CPU); the tolerance is
+deliberately loose to absorb runner jitter, and the ``FLEX_BENCH_TOL``
+env var overrides it when a PR intentionally trades latency or a runner
+generation shifts the floor.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+DEFAULT_TOL = 1.5
+
+
+def compare(
+    new: Dict, baseline: Dict, tol: float
+) -> Tuple[List[str], List[str]]:
+    """Diff two snapshot dicts. Returns (failures, notes)."""
+    failures: List[str] = []
+    notes: List[str] = []
+    new_backends = new.get("backends", {})
+    for name, base_row in sorted(baseline.get("backends", {}).items()):
+        new_row = new_backends.get(name)
+        if new_row is None:
+            failures.append(
+                f"{name}: present in baseline but MISSING from the new "
+                f"snapshot (skipped backends must be recorded as "
+                f'{{"skipped": "<reason>"}})'
+            )
+            continue
+        if "skipped" in new_row:
+            if "skipped" in base_row:
+                notes.append(f"{name}: skipped on this platform "
+                             f"({new_row['skipped']})")
+            else:
+                # the baseline measured this backend on the same platform
+                # class: a skip here silently ENDS its perf trajectory
+                failures.append(
+                    f"{name}: measured in baseline "
+                    f"({float(base_row['total_ms']):.3f} ms) but skipped in "
+                    f"the new snapshot ({new_row['skipped']}) — regenerate "
+                    f"the baseline if the skip is intentional")
+            continue
+        if "skipped" in base_row:
+            notes.append(f"{name}: no baseline (baseline skipped: "
+                         f"{base_row['skipped']}); measured "
+                         f"{new_row['total_ms']:.3f} ms")
+            continue
+        base_ms = float(base_row["total_ms"])
+        new_ms = float(new_row["total_ms"])
+        ratio = new_ms / base_ms if base_ms > 0 else float("inf")
+        line = (f"{name}: {base_ms:.3f} ms -> {new_ms:.3f} ms "
+                f"({ratio:.2f}x, tol {tol:.2f}x)")
+        if ratio > tol:
+            failures.append("REGRESSION " + line)
+        else:
+            notes.append(line)
+    for name in sorted(set(new_backends) - set(baseline.get("backends", {}))):
+        notes.append(f"{name}: new backend, no baseline yet")
+    return failures, notes
+
+
+def merge_min(snapshots: List[Dict]) -> Dict:
+    """Fold several fresh snapshots into one: per backend, the fastest
+    measured row wins (one-sided noise); skips survive only if a backend
+    never measured."""
+    merged: Dict = dict(snapshots[0])
+    backends: Dict[str, Dict] = {}
+    for snap in snapshots:
+        for name, row in snap.get("backends", {}).items():
+            best = backends.get(name)
+            if "skipped" in row:
+                backends.setdefault(name, row)
+            elif (best is None or "skipped" in best
+                  or float(row["total_ms"]) < float(best["total_ms"])):
+                backends[name] = row
+    merged["backends"] = backends
+    return merged
+
+
+def main(argv: List[str]) -> int:
+    if len(argv) < 2:
+        print("usage: python -m benchmarks.check_regression "
+              "<new_snapshot.json> [<more_new.json> ...] <baseline.json>",
+              file=sys.stderr)
+        return 2
+    new = merge_min([json.loads(Path(p).read_text()) for p in argv[:-1]])
+    baseline = json.loads(Path(argv[-1]).read_text())
+    tol = float(os.environ.get("FLEX_BENCH_TOL", DEFAULT_TOL))
+    failures, notes = compare(new, baseline, tol)
+    for line in notes:
+        print(f"  ok  {line}")
+    for line in failures:
+        print(f"FAIL  {line}")
+    if failures:
+        print(f"\nbench gate: {len(failures)} failure(s) "
+              f"(tolerance {tol}x; override with FLEX_BENCH_TOL)")
+        return 1
+    print(f"\nbench gate: green ({len(notes)} backend(s) checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

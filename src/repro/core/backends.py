@@ -4,29 +4,49 @@ Before this module, engine selection was three divergent mechanisms:
 string dispatch inside ``VectorCache.search_plan``, hand-rolled fused
 matmuls in ``BatchedRetrievalEngine._serve``, and pass-through strings in
 ``Materializer``/``RetrievalService``.  Now every consumer resolves a
-backend from ONE registry and calls the same two primitives:
+backend from ONE registry and calls the same primitives:
 
-    score(matrix, days_ago, plan)         -> (N,)   one request
-    score_panel(matrix, days_ago, plans)  -> (N, B) a micro-batch
+    score(matrix, days_ago, plan)              -> (N,)   one request
+    score_panel(matrix, days_ago, plans)       -> (N, B) a micro-batch
+    score_select(matrix, days_ago, plans, ks)  -> per-plan top candidates
 
-plus the shared :func:`select_candidates` (top-k / MMR oversample) so the
-batched and direct paths rank identically.  Registered backends:
+``score_select`` is the fused score->select stage: it returns ONLY the
+top-:func:`selection_width` candidate ``(indices, scores)`` per plan, so
+device backends never ship the full (N, B) score panel back to the host —
+just (pool,)-sized candidate lists cross the device boundary (Bruch,
+*Foundations of Vector Retrieval*: selection-fused scoring is the standard
+trick for exact search at scale).  The host finishing stage
+(:func:`finalize_candidates`: truncate, or MMR over the oversampled pool)
+is shared by every consumer, so batched and direct paths rank identically.
+
+Registered backends:
 
     reference-numpy  paper-faithful, one matvec per direction (Table 1)
     fused-numpy      folded two-matvec formulation (one corpus stream)
-    jit-jax          the fused formulation jitted through XLA
-    pallas           the fused TPU kernel (interpret mode off-TPU)
-    sharded          shard_map row-sharded scoring over the local devices
+    jit-jax          fused formulation jitted through XLA + device top-k
+    pallas           fused TPU kernel -> topk kernel (two launches, no
+                     host hop between score and select)
+    sharded          shard_map row-sharded scoring, shard-local top-k +
+                     union merge (repro.dist.pem_sharded contract)
 
-All are algebraically identical on the composed plan grammar; the
-equivalence suite (tests/test_backends.py) pins each against the
-reference oracle.  Later scaling PRs (multi-host, async, cache tiering)
-plug in here via :func:`register_backend`.
+The numpy backends keep the host path (full panel + numpy selection) so the
+equivalence suites (tests/test_backends.py, tests/test_score_select.py)
+stay anchored to the reference oracle.  Device backends compile through a
+:class:`PlanCache` keyed on :class:`PlanStructure` — plan *shape* (batch
+width, decay present/absent, suppress count bucketed by padding, top-k
+width bucketed to powers of two) — so distinct query texts with the same
+structure never retrigger tracing.
+
+All backends are algebraically identical on the composed plan grammar.
+Later scaling PRs (multi-host, async, cache tiering) plug in here via
+:func:`register_backend`.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Union
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -34,11 +54,17 @@ from repro.core import modulations as M
 
 __all__ = [
     "ExecutionBackend",
+    "PlanCache",
+    "PlanStructure",
     "get_backend",
     "register_backend",
     "list_backends",
     "select_candidates",
+    "selection_width",
+    "finalize_candidates",
 ]
+
+Candidates = Tuple[np.ndarray, np.ndarray]  # (indices, scores), descending
 
 
 def _require_days(plan: M.ModulationPlan, days_ago: Optional[np.ndarray]) -> None:
@@ -50,12 +76,172 @@ def _decay_column(days_ago: np.ndarray, half_life: float) -> np.ndarray:
     return 1.0 / (1.0 + days_ago / half_life)
 
 
+def _pow2_bucket(x: int) -> int:
+    """0 for x<=0, else the next power of two >= x (trace-bounding pad)."""
+    if x <= 0:
+        return 0
+    return 1 << (x - 1).bit_length()
+
+
+def _half_lives(plans: Sequence[M.ModulationPlan]) -> np.ndarray:
+    """Per-plan half-life column; inf makes the decay factor exactly 1.0."""
+    return np.asarray(
+        [p.decay.half_life_days if p.decay is not None else np.inf
+         for p in plans],
+        dtype=np.float32,
+    )
+
+
+def _days_f32(days_ago: Optional[np.ndarray], n: int) -> np.ndarray:
+    return (np.zeros(n, np.float32) if days_ago is None
+            else np.asarray(days_ago, np.float32))
+
+
+def _empty_candidates() -> Candidates:
+    return np.empty(0, np.int64), np.empty(0, np.float32)
+
+
+def _slice_candidates(idx, vals, widths: Sequence[int]) -> List[Candidates]:
+    """Host tail shared by every device ``score_select``: fetch the
+    (B, width) blocks — the ONLY device->host copy — and slice each plan's
+    prefix (rows are sorted descending, so the first w are its top-w)."""
+    idx = np.asarray(idx)
+    vals = np.asarray(vals)
+    return [(idx[j, :w].astype(np.int64), vals[j, :w])
+            for j, w in enumerate(widths)]
+
+
+# ---------------------------------------------------------------------------
+# Plan structure + compiled-plan cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStructure:
+    """The trace-relevant *shape* of a scoring micro-batch.
+
+    Two batches with the same structure lower to the same specialized
+    graph: query texts, embedding values, and half-life magnitudes are
+    runtime data, never trace constants.  Suppress count and top-k width
+    are bucketed (padded up to powers of two) so the number of distinct
+    traces stays bounded as requests vary.
+    """
+
+    batch: int            # B — number of plans folded into the panel
+    n_rows: int           # corpus rows (device shapes derive from it)
+    has_decay: bool       # decay factor branch present in the graph
+    suppress_bucket: int  # max suppress count, padded to a power of two
+    width: int            # static top-k width (pow2-bucketed, <= n_rows)
+
+    # NOTE on suppress_bucket: with the folded (q_pre, q_sup) formulation
+    # only 0-vs-nonzero changes the lowered graph (the second matmul drops
+    # out); the pow2 buckets keep the key future-proof for unfused panel
+    # formulations where the direction count IS a shape.  NOTE on n_rows:
+    # it keys exactly, so Phase-1 pre-filtered sub-corpora of varying size
+    # compile per size — at sub-corpus scale the host path is the better
+    # engine choice anyway, and :class:`PlanCache` bounds retained
+    # executables by FIFO eviction.
+
+    @classmethod
+    def of(
+        cls,
+        plans: Sequence[M.ModulationPlan],
+        widths: Sequence[int],
+        n_rows: int,
+    ) -> "PlanStructure":
+        max_sup = max((len(p.suppress) for p in plans), default=0)
+        w = max(widths, default=0)
+        return cls(
+            batch=len(plans),
+            n_rows=n_rows,
+            has_decay=any(p.decay is not None for p in plans),
+            suppress_bucket=_pow2_bucket(max_sup),
+            width=min(max(_pow2_bucket(w), 1), max(n_rows, 1)),
+        )
+
+
+class PlanCache:
+    """Compiled executables keyed on plan STRUCTURE, not plan content.
+
+    Device backends lower one specialized graph per :class:`PlanStructure`;
+    distinct query texts with the same shape hit the cache and never
+    retrigger tracing, while a genuinely new shape (e.g. a new
+    suppress-count bucket) builds — and traces — exactly once.
+
+    ``jax_traces`` is incremented from INSIDE the traced python bodies, so
+    it counts real (re)traces, not just cache misses; tests use it to pin
+    the zero-retrace contract.
+
+    The cache is bounded (FIFO eviction at ``maxsize``): structure keys
+    include the exact corpus row count, so a stream of Phase-1 pre-filtered
+    sub-corpora of varying size would otherwise retain one compiled
+    executable per size forever.
+    """
+
+    def __init__(
+        self,
+        builder: Callable[[PlanStructure], Callable],
+        maxsize: int = 64,
+    ) -> None:
+        self._builder = builder
+        self._fns: "Dict[PlanStructure, Callable]" = {}
+        self._lock = threading.Lock()
+        self.maxsize = maxsize
+        self.builds = 0      # cache misses (specialized graphs built)
+        self.hits = 0        # cache hits (no build, no trace)
+        self.evictions = 0   # FIFO evictions (bounded executable retention)
+        self.jax_traces = 0  # actual traces, counted from traced bodies
+
+    def get(self, structure: PlanStructure) -> Callable:
+        with self._lock:
+            fn = self._fns.get(structure)
+            if fn is not None:
+                self.hits += 1
+                return fn
+            self.builds += 1
+            fn = self._fns[structure] = self._builder(structure)
+            while len(self._fns) > self.maxsize:
+                self._fns.pop(next(iter(self._fns)))
+                self.evictions += 1
+            return fn
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+
+class _DeviceMatrixMixin:
+    """Cache the device-resident corpus across calls (it is immutable;
+    re-uploading ~123 MB per micro-batch would dominate the matmul)."""
+
+    _mat_src: Optional[np.ndarray] = None
+    _mat_dev = None
+
+    def _device_matrix(self, matrix: np.ndarray, pad: int = 0):
+        if self._mat_src is not matrix:
+            import jax.numpy as jnp
+
+            mat = np.asarray(matrix, np.float32)
+            if pad:
+                mat = np.pad(mat, ((0, pad), (0, 0)))
+            self._mat_dev = jnp.asarray(mat)
+            self._mat_src = matrix
+        return self._mat_dev
+
+
+# ---------------------------------------------------------------------------
+# The backend contract
+# ---------------------------------------------------------------------------
+
+
 class ExecutionBackend:
     """One Phase-2 scoring implementation.
 
     Subclasses implement :meth:`score_panel`; :meth:`score` defaults to the
-    single-column case.  Scores are returned as host numpy arrays — the
-    selection stage (top-k / MMR) is host-side in every serving path.
+    single-column case.  :meth:`score_select` is the fused score->select
+    stage — the base implementation is the host path (full panel + numpy
+    top-k), which the numpy backends keep so everything stays anchored to
+    the reference oracle; device backends override it to select on device
+    and return only (pool,)-sized candidate arrays to the host.
     """
 
     name: str = "?"
@@ -75,6 +261,33 @@ class ExecutionBackend:
         plans: Sequence[M.ModulationPlan],
     ) -> np.ndarray:
         raise NotImplementedError
+
+    def score_select(
+        self,
+        matrix: np.ndarray,
+        days_ago: Optional[np.ndarray],
+        plans: Sequence[M.ModulationPlan],
+        ks: Sequence[int],
+    ) -> List[Candidates]:
+        """Fused score->select: per-plan ``(indices, scores)`` of the top
+        ``selection_width(plan, k, N)`` candidates, descending by score.
+
+        ``ks[j]`` is the final candidate count requested for plan ``j``;
+        diverse plans return the oversampled MMR pool instead (the caller
+        finishes with :func:`finalize_candidates`).
+        """
+        panel = self.score_panel(matrix, days_ago, plans)
+        n = panel.shape[0]
+        out: List[Candidates] = []
+        for j, (plan, k) in enumerate(zip(plans, ks)):
+            w = selection_width(plan, k, n)
+            if w == 0:
+                out.append(_empty_candidates())
+                continue
+            col = panel[:, j]
+            idx = top_idx(col, w)
+            out.append((idx, col[idx].astype(np.float32, copy=False)))
+        return out
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"<ExecutionBackend {self.name}>"
@@ -120,30 +333,25 @@ class FusedNumpyBackend(ExecutionBackend):
         return out
 
 
-class JitJaxBackend(ExecutionBackend):
+class JitJaxBackend(_DeviceMatrixMixin, ExecutionBackend):
     """The fused formulation jitted through XLA (CPU/GPU/TPU portable).
 
     Per-request decay folds into a (N, B) factor panel; half_life=inf makes
     the factor exactly 1.0 for no-decay columns, so one jitted graph serves
     every plan mix without recompiling on plan structure.
+
+    :meth:`score_select` fuses ``jax.lax.top_k`` into the jitted graph, so
+    only the (B, width) candidate block leaves the device — never the
+    (N, B) score panel.  Graphs specialize per :class:`PlanStructure`
+    through the :class:`PlanCache` (no-decay plans skip the decay factor,
+    suppress-free plans skip the second matmul entirely).
     """
 
     name = "jit-jax"
 
     def __init__(self) -> None:
         self._fn = None
-        self._mat_src: Optional[np.ndarray] = None
-        self._mat_dev = None
-
-    def _device_matrix(self, matrix: np.ndarray):
-        """Cache the device-resident corpus (it is immutable across calls;
-        re-uploading ~123 MB per micro-batch would dominate the matmul)."""
-        if self._mat_src is not matrix:
-            import jax.numpy as jnp
-
-            self._mat_dev = jnp.asarray(matrix, jnp.float32)
-            self._mat_src = matrix
-        return self._mat_dev
+        self.plan_cache = PlanCache(self._build_select)
 
     def _build(self):
         import jax
@@ -155,75 +363,130 @@ class JitJaxBackend(ExecutionBackend):
 
         return fused
 
+    def _build_select(self, structure: PlanStructure):
+        import jax
+
+        cache = self.plan_cache
+
+        def fused_select(matrix, q_pre, q_sup, days, half_lives):
+            cache.jax_traces += 1  # python body runs only while tracing
+            scores = matrix @ q_pre
+            if structure.has_decay:
+                scores = scores * (
+                    1.0 / (1.0 + days[:, None] / half_lives[None, :])
+                )
+            if structure.suppress_bucket:
+                scores = scores + matrix @ q_sup
+            v, i = jax.lax.top_k(scores.T, structure.width)  # (B, width)
+            return i, v
+
+        return jax.jit(fused_select)
+
     def score_panel(self, matrix, days_ago, plans):
         for p in plans:
             _require_days(p, days_ago)
         if self._fn is None:
             self._fn = self._build()
         q_pre, q_sup = M.fold_plans(plans)
-        half = np.asarray(
-            [p.decay.half_life_days if p.decay is not None else np.inf
-             for p in plans],
-            dtype=np.float32,
-        )
         n = matrix.shape[0]
-        days = (np.zeros(n, np.float32) if days_ago is None
-                else np.asarray(days_ago, np.float32))
         return np.asarray(
-            self._fn(self._device_matrix(matrix), q_pre, q_sup, days, half)
+            self._fn(self._device_matrix(matrix), q_pre, q_sup,
+                     _days_f32(days_ago, n), _half_lives(plans))
         )
 
+    def score_select(self, matrix, days_ago, plans, ks):
+        for p in plans:
+            _require_days(p, days_ago)
+        n = matrix.shape[0]
+        if n == 0:
+            return [_empty_candidates() for _ in plans]
+        widths = [selection_width(p, k, n) for p, k in zip(plans, ks)]
+        fn = self.plan_cache.get(PlanStructure.of(plans, widths, n))
+        q_pre, q_sup = M.fold_plans(plans)
+        idx, vals = fn(self._device_matrix(matrix), q_pre, q_sup,
+                       _days_f32(days_ago, n), _half_lives(plans))
+        return _slice_candidates(idx, vals, widths)
 
-class PallasBackend(ExecutionBackend):
-    """The fused TPU kernel (``repro.kernels.pem_score``).
 
-    Off-TPU the kernel runs in Pallas interpret mode (the same path the
-    kernel tests validate).  The kernel takes one decay column per call, so
-    requests group by half-life and each group scores in one kernel launch.
+class PallasBackend(_DeviceMatrixMixin, ExecutionBackend):
+    """The fused TPU kernels (``repro.kernels.pem_score`` + ``topk``).
+
+    Off-TPU the kernels run in Pallas interpret mode (the same path the
+    kernel tests validate).  The scoring kernel takes one decay column per
+    call, so requests group by half-life and each group scores in one
+    kernel launch; :meth:`score_select` keeps the score panel device-
+    resident and feeds it straight into the streaming top-k kernel — two
+    kernel launches, no host hop, only (B, width) candidates come back.
     """
 
     name = "pallas"
 
-    def score_panel(self, matrix, days_ago, plans):
+    def _grouped_panel(self, matrix, days_ago, plans):
+        """Device-resident (N, B) score panel, columns in plan order."""
         import jax
         import jax.numpy as jnp
 
         from repro.kernels.pem_score.ops import pem_score
 
-        for p in plans:
-            _require_days(p, days_ago)
         q_pre, q_sup = M.fold_plans(plans)
         interpret = jax.default_backend() != "tpu"
-        mat = jnp.asarray(matrix, jnp.float32)
-        out = np.empty((matrix.shape[0], len(plans)), np.float32)
+        mat = self._device_matrix(matrix)
 
         groups: Dict[Optional[float], List[int]] = {}
         for j, plan in enumerate(plans):
             hl = plan.decay.half_life_days if plan.decay is not None else None
             groups.setdefault(hl, []).append(j)
+
+        parts = []
+        order: List[int] = []
         for hl, cols in groups.items():
             decay = None
             if hl is not None:
                 decay = jnp.asarray(_decay_column(days_ago, hl), jnp.float32)
-            res = pem_score(
+            parts.append(pem_score(
                 mat,
                 jnp.asarray(q_pre[:, cols]),
                 jnp.asarray(q_sup[:, cols]),
                 decay,
                 interpret=interpret,
-            )
-            out[:, cols] = np.asarray(res)
-        return out
+            ))
+            order.extend(cols)
+        panel = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+        if order != list(range(len(plans))):
+            panel = panel[:, np.argsort(np.asarray(order))]
+        return panel, interpret
+
+    def score_panel(self, matrix, days_ago, plans):
+        for p in plans:
+            _require_days(p, days_ago)
+        panel, _ = self._grouped_panel(matrix, days_ago, plans)
+        return np.asarray(panel)
+
+    def score_select(self, matrix, days_ago, plans, ks):
+        from repro.kernels.topk.ops import topk
+
+        for p in plans:
+            _require_days(p, days_ago)
+        n = matrix.shape[0]
+        if n == 0:
+            return [_empty_candidates() for _ in plans]
+        widths = [selection_width(p, k, n) for p, k in zip(plans, ks)]
+        # same pow2 width bucketing as the PlanCache key, one formula
+        w_stat = PlanStructure.of(plans, widths, n).width
+        panel, interpret = self._grouped_panel(matrix, days_ago, plans)
+        v, i = topk(panel.T, w_stat, interpret=interpret)
+        return _slice_candidates(i, v, widths)
 
 
-class ShardedBackend(ExecutionBackend):
+class ShardedBackend(_DeviceMatrixMixin, ExecutionBackend):
     """shard_map row-sharded scoring over every locally visible device.
 
     The corpus rows split across a 1-D device mesh; each shard computes its
-    slice of the fused score panel and the sharded output reassembles on
-    the host.  On one device this degenerates to the jit path; on a real
-    mesh it is the scoring stage of ``repro.dist.pem_sharded`` (which adds
-    the local-top-k union merge for the selection side).
+    slice of the fused score panel.  :meth:`score_panel` reassembles the
+    panel on the host; :meth:`score_select` instead folds the
+    ``repro.dist.pem_sharded`` two-stage selection into the graph — each
+    shard takes a LOCAL top-k and only the (shards * k, B) candidate union
+    crosses the interconnect before the merge, never the (N, B) panel.
     """
 
     name = "sharded"
@@ -231,8 +494,7 @@ class ShardedBackend(ExecutionBackend):
     def __init__(self) -> None:
         self._fn = None
         self._n_shards = None
-        self._mat_src: Optional[np.ndarray] = None
-        self._mat_dev = None
+        self.plan_cache = PlanCache(self._build_select)
 
     def _build(self):
         import jax
@@ -256,18 +518,47 @@ class ShardedBackend(ExecutionBackend):
         )
         return jax.jit(fn), n_dev
 
-    def _device_matrix(self, matrix: np.ndarray, pad: int):
-        """Cache the padded device-resident corpus across calls (the matrix
-        is immutable; padding depends only on the fixed shard count)."""
-        if self._mat_src is not matrix:
-            import jax.numpy as jnp
+    def _build_select(self, structure: PlanStructure):
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
 
-            mat = np.asarray(matrix, np.float32)
-            if pad:
-                mat = np.pad(mat, ((0, pad), (0, 0)))
-            self._mat_dev = jnp.asarray(mat)
-            self._mat_src = matrix
-        return self._mat_dev
+        from repro.dist.pem_sharded import union_merge_topk
+
+        n_dev = len(jax.devices())
+        mesh = jax.make_mesh((n_dev,), ("shards",))
+        cache = self.plan_cache
+
+        def local(matrix, q_pre, q_sup, days, half_lives):
+            cache.jax_traces += 1  # python body runs only while tracing
+            n_local = matrix.shape[0]
+            shard = jax.lax.axis_index("shards")
+            scores = matrix @ q_pre
+            if structure.has_decay:
+                scores = scores * (
+                    1.0 / (1.0 + days[:, None] / half_lives[None, :])
+                )
+            if structure.suppress_bucket:
+                scores = scores + matrix @ q_sup
+            # mask row-grid padding so it can never enter the union
+            rows = shard * n_local + jnp.arange(n_local, dtype=jnp.int32)
+            scores = jnp.where((rows < structure.n_rows)[:, None],
+                               scores, -jnp.inf)
+            k_local = min(structure.width, n_local)
+            v, i = jax.lax.top_k(scores.T, k_local)      # (B, k_local)
+            gi = i + shard * n_local                      # global row ids
+            return union_merge_topk(v, gi, ("shards",), structure.width)
+
+        fn = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P("shards", None), P(None, None), P(None, None),
+                      P("shards"), P(None)),
+            out_specs=(P(None, None), P(None, None)),
+            check_rep=False,
+        )
+        return jax.jit(fn)
 
     def score_panel(self, matrix, days_ago, plans):
         for p in plans:
@@ -279,21 +570,35 @@ class ShardedBackend(ExecutionBackend):
             self._n_shards = n_shards
             self._fn = fn
         q_pre, q_sup = M.fold_plans(plans)
-        half = np.asarray(
-            [p.decay.half_life_days if p.decay is not None else np.inf
-             for p in plans],
-            dtype=np.float32,
-        )
         n = matrix.shape[0]
-        days = (np.zeros(n, np.float32) if days_ago is None
-                else np.asarray(days_ago, np.float32))
+        days = _days_f32(days_ago, n)
         # pad the row grid to the shard count, slice the panel back
         pad = (-n) % self._n_shards
         mat = self._device_matrix(matrix, pad)
         if pad:
             days = np.pad(days, (0, pad))
-        out = np.asarray(self._fn(mat, q_pre, q_sup, days, half))
+        out = np.asarray(self._fn(mat, q_pre, q_sup, days, _half_lives(plans)))
         return out[:n]
+
+    def score_select(self, matrix, days_ago, plans, ks):
+        import jax
+
+        for p in plans:
+            _require_days(p, days_ago)
+        n = matrix.shape[0]
+        if n == 0:
+            return [_empty_candidates() for _ in plans]
+        n_shards = len(jax.devices())
+        widths = [selection_width(p, k, n) for p, k in zip(plans, ks)]
+        fn = self.plan_cache.get(PlanStructure.of(plans, widths, n))
+        q_pre, q_sup = M.fold_plans(plans)
+        days = _days_f32(days_ago, n)
+        pad = (-n) % n_shards
+        mat = self._device_matrix(matrix, pad)
+        if pad:
+            days = np.pad(days, (0, pad))
+        idx, vals = fn(mat, q_pre, q_sup, days, _half_lives(plans))
+        return _slice_candidates(idx, vals, widths)
 
 
 # ---------------------------------------------------------------------------
@@ -353,25 +658,63 @@ def top_idx(scores: np.ndarray, k: int) -> np.ndarray:
     return part[np.argsort(-scores[part], kind="stable")]
 
 
+def selection_width(plan: M.ModulationPlan, k: int, n: int) -> int:
+    """Candidates a backend must return for (plan, k) over n rows.
+
+    Plain plans need exactly k; diverse plans need the MMR oversample pool
+    ``oversample * max(k, plan.pool)`` so a small-k request (batched path)
+    and a pool-sized request (direct path) draw from the same pool — MMR's
+    greedy selection is prefix-consistent, so their rankings agree.
+    """
+    k = max(0, min(k, n))
+    if k == 0:
+        return 0
+    if plan.diverse is not None:
+        return min(plan.diverse.oversample * max(k, plan.pool), n)
+    return k
+
+
+def finalize_candidates(
+    matrix: np.ndarray,
+    idx: np.ndarray,
+    scores: np.ndarray,
+    k: int,
+    plan: M.ModulationPlan,
+) -> Candidates:
+    """Host finishing stage over backend-returned candidates.
+
+    Truncates a plain top-k pool to k, or runs MMR over the oversampled
+    pool for diverse plans.  Produces exactly what
+    :func:`select_candidates` yields on the full score array (same
+    indices, same order), but only ever touches (pool,)-sized inputs.
+    """
+    k = max(0, min(k, idx.shape[0]))
+    if k == 0:
+        return idx[:0], scores[:0]
+    if plan.diverse is not None:
+        sel = M.mmr_select_np(matrix[idx], scores, k, plan.diverse.lam)
+        return idx[sel], scores[sel]
+    return idx[:k], scores[:k]
+
+
 def select_candidates(
     matrix: np.ndarray,
     scores: np.ndarray,
     k: int,
     plan: M.ModulationPlan,
 ) -> np.ndarray:
-    """Top-k (or MMR-diverse) row selection over scored candidates.
+    """Top-k (or MMR-diverse) row selection over a FULL host score array.
 
-    The MMR pool oversamples ``oversample * max(k, plan.pool)`` so a
-    small-k request (batched path) and a pool-sized request (direct path)
-    draw from the same pool — MMR's greedy selection is prefix-consistent,
-    so their rankings agree.
+    The host-path reference for :meth:`ExecutionBackend.score_select` +
+    :func:`finalize_candidates`; kept as the oracle the fused paths are
+    pinned against.
     """
     n = scores.shape[0]
     k = min(k, n)
     if k <= 0:
         return np.empty(0, dtype=np.int64)
     if plan.diverse is not None:
-        over = min(plan.diverse.oversample * max(k, plan.pool), n)
+        over = selection_width(plan, k, n)
         pool_idx = top_idx(scores, over)
         sel = M.mmr_select_np(
             matrix[pool_idx], scores[pool_idx], k, plan.diverse.lam

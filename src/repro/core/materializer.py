@@ -5,7 +5,9 @@ They are pseudo-functions recognized here, *before* SQLite sees the query:
 
 1. scan the agent's SQL for pseudo-function calls in FROM/JOIN position
    (a quote-aware scanner, not a full SQL parser — paper §7 Limitations),
-2. dispatch each call to its engine (numpy/PEM for ``vec_ops``, FTS5 for
+2. dispatch each call to its engine (the ``ExecutionBackend`` registry's
+   fused score->select stage for ``vec_ops`` — only top-``pool`` candidate
+   rows come back from the backend, never full score arrays — FTS5 for
    ``keyword``), running the embedded Phase-1 pre-filter SQL first,
 3. write each result to a temp table,
 4. rewrite the statement to reference the temp tables,

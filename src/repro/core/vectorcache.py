@@ -4,7 +4,9 @@ Holds the corpus embedding matrix in memory (the paper's core requirement),
 parses the token grammar, runs the fixed-order modulation pipeline, and
 returns the top-``pool`` scored candidates for Phase 3 composition.
 
-Execution is dispatched through the :mod:`repro.core.backends` registry —
+Execution is dispatched through the :mod:`repro.core.backends` registry
+via the fused ``score_select`` stage — only (pool,)-sized candidate lists
+ever come back from the backend (device backends select on device) —
 ``engine`` accepts any registered backend name (``reference-numpy``,
 ``fused-numpy``, ``jit-jax``, ``pallas``, ``sharded``; the seed's
 ``"reference"``/``"fused"`` aliases keep working) or an
@@ -22,7 +24,8 @@ import numpy as np
 
 from repro.core import grammar
 from repro.core import modulations as M
-from repro.core.backends import ExecutionBackend, get_backend, select_candidates
+from repro.core.backends import (ExecutionBackend, finalize_candidates,
+                                 get_backend)
 
 Engine = Union[str, ExecutionBackend]
 
@@ -162,12 +165,12 @@ class VectorCache:
             ref = time.time() if now is None else now
             days_ago = np.maximum((ref - ts) / SECONDS_PER_DAY, 0.0).astype(np.float32)
 
-        scores = get_backend(engine).score(matrix, days_ago, plan)
-
-        # MMR output order IS the ranking (iterative argmax), but the
-        # materializer contract is (id, score) rows; keep MMR order by
-        # re-ranking on the original modulated score like the paper's
-        # temp table does (ORDER BY v.score DESC in Phase 3).
-        k = min(plan.pool, scores.shape[0])
-        chosen = select_candidates(matrix, scores, k, plan)
-        return [(int(ids[i]), float(scores[i])) for i in chosen]
+        # Fused score->select: the backend returns only the top-pool
+        # candidates (device backends select on device; the full (N,)
+        # score array never crosses back to this layer).  MMR diverse
+        # plans come back as the oversampled pool and finish host-side.
+        k = min(plan.pool, matrix.shape[0])
+        backend = get_backend(engine)
+        (idx, vals), = backend.score_select(matrix, days_ago, [plan], [k])
+        idx, vals = finalize_candidates(matrix, idx, vals, k, plan)
+        return [(int(ids[i]), float(v)) for i, v in zip(idx, vals)]

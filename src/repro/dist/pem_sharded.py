@@ -46,6 +46,33 @@ def pem_topk_reference(
     return i, v
 
 
+def union_merge_topk(
+    v: jax.Array,       # (B, k_local) per-shard local top-k values
+    gi: jax.Array,      # (B, k_local) matching GLOBAL row indices
+    axes,               # mesh axis name(s) the corpus rows shard over
+    k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Union merge, inside shard_map: gather every shard's local top-k
+    candidates (shard-major order so equal scores keep the reference's
+    smallest-global-index tie rule), then one top-k over the
+    (B, shards*k_local) union.  Returns ``(indices, values)``, each
+    (B, min(k, shards*k_local)) — the union provably contains the global
+    top-k, so the merge is exact.
+
+    Shared by :func:`make_pem_topk` and the ``sharded`` ExecutionBackend's
+    fused ``score_select`` stage (repro/core/backends.py).
+    """
+    cand_v = jax.lax.all_gather(v, axes)              # (shards, B, k_l)
+    cand_i = jax.lax.all_gather(gi, axes)
+    b = v.shape[0]
+    union = cand_v.shape[0] * cand_v.shape[-1]        # shards * k_local
+    cand_v = jnp.swapaxes(cand_v, 0, 1).reshape(b, union)
+    cand_i = jnp.swapaxes(cand_i, 0, 1).reshape(b, union)
+    vk, pos = jax.lax.top_k(cand_v, min(k, union))
+    ik = jnp.take_along_axis(cand_i, pos, axis=1)
+    return ik, vk
+
+
 def make_pem_topk(mesh: Mesh, rules: ShardingRules, k: int, raw: bool = False,
                   *, half_life: float = DEFAULT_DECAY_HALF_LIFE):
     """Build the shard_map'd corpus-row-sharded score -> local top-k -> merge.
@@ -66,9 +93,6 @@ def make_pem_topk(mesh: Mesh, rules: ShardingRules, k: int, raw: bool = False,
     else:
         axes = tuple(axes)
     axis_sizes = [mesh.shape[a] for a in axes]
-    shards = 1
-    for s in axis_sizes:
-        shards *= s
 
     def sharded_topk(corpus, days, q_pre, q_sup):
         n_local = corpus.shape[0]
@@ -88,17 +112,7 @@ def make_pem_topk(mesh: Mesh, rules: ShardingRules, k: int, raw: bool = False,
         if not axes:
             return gi, v
 
-        # union merge: gather every shard's candidates (shard-major order so
-        # equal scores keep the reference's smallest-global-index tie rule),
-        # then one top-k over the (B, shards*k_local) union.
-        cand_v = jax.lax.all_gather(v, axes)              # (shards, B, k_l)
-        cand_i = jax.lax.all_gather(gi, axes)
-        b = v.shape[0]
-        cand_v = jnp.swapaxes(cand_v, 0, 1).reshape(b, shards * k_local)
-        cand_i = jnp.swapaxes(cand_i, 0, 1).reshape(b, shards * k_local)
-        vk, pos = jax.lax.top_k(cand_v, min(k, shards * k_local))
-        ik = jnp.take_along_axis(cand_i, pos, axis=1)
-        return ik, vk
+        return union_merge_topk(v, gi, axes, k)
 
     corpus_axes = axes if axes else None
     fn = shard_map(

@@ -26,7 +26,8 @@ from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.backends import ExecutionBackend, get_backend, select_candidates
+from repro.core.backends import (ExecutionBackend, finalize_candidates,
+                                 get_backend)
 from repro.core.grammar import parse
 from repro.core.vectorcache import VectorCache
 
@@ -116,8 +117,10 @@ class BatchedRetrievalEngine:
         self.requests_served += 1
 
     def _serve(self, batch: List[Request]) -> None:
-        """One backend pass: fold every live request's plan into the (d, B)
-        panels, score the corpus ONCE, then per-request selection."""
+        """One fused backend pass: fold every live request's plan into the
+        (d, B) panels and run ``score_select`` — the corpus is scored ONCE
+        and only per-request candidate lists come back (device backends
+        top-k on device; the (N, B) panel never reaches this thread)."""
         live: List[Request] = []
         plans = []
         for req in batch:
@@ -142,21 +145,23 @@ class BatchedRetrievalEngine:
         if self.cache.timestamps is not None:
             days = np.maximum((ref - self.cache.timestamps) / 86400.0, 0.0)
 
+        n = matrix.shape[0]
+        ks = [min(req.k, n) for req in live]
         try:
-            scores = self.backend.score_panel(matrix, days, plans)  # (N, B)
+            # per-plan (indices, scores) candidate lists — (pool,)-sized
+            selected = self.backend.score_select(matrix, days, plans, ks)
         except Exception as e:  # backend failure: fail the whole batch loudly
             for req in live:
                 self._fail(req, e)
             return
 
-        for j, (req, plan) in enumerate(zip(live, plans)):
+        for req, plan, k, (idx, vals) in zip(live, plans, ks, selected):
             try:
-                col = scores[:, j]
-                k = min(req.k, col.shape[0])
-                top = select_candidates(matrix, col, k, plan)
+                idx, vals = finalize_candidates(matrix, idx, vals, k, plan)
                 self._finish(
                     req,
-                    [(int(self.cache.ids[i]), float(col[i])) for i in top],
+                    [(int(self.cache.ids[i]), float(v))
+                     for i, v in zip(idx, vals)],
                 )
             except Exception as e:
                 self._fail(req, e)

@@ -47,7 +47,9 @@ class RetrievalService:
         self.cache = VectorCache(ids, matrix, ts, self.embedder)
         self.now = now
         # one registry resolve for the service lifetime; every Materializer
-        # this service builds shares the same backend instance
+        # this service builds shares the same backend instance — including
+        # its device-resident corpus cache and compiled PlanCache, so
+        # repeated queries with the same plan structure never retrace
         self.engine = get_backend(engine)
         self.query_count = 0
         self.error_count = 0

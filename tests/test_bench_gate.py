@@ -1,0 +1,134 @@
+"""Unit tests for the CI bench-regression gate (benchmarks/check_regression).
+
+The gate diffs per-backend ``total_ms`` against the committed smoke
+baseline: regressions beyond the tolerance fail, skipped backends are
+tolerated WHEN RECORDED, and silent omission (a backend dropped from the
+snapshot without a ``{"skipped": ...}`` marker) is itself a failure.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.check_regression import DEFAULT_TOL, compare, merge_min
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _snap(backends):
+    return {"bench": "pem_phase2_composed", "backends": backends}
+
+
+def _row(ms):
+    return {"score_us": ms * 500, "select_us": ms * 500, "total_ms": ms}
+
+
+def test_within_tolerance_is_green():
+    base = _snap({"fused-numpy": _row(20.0), "jit-jax": _row(30.0)})
+    new = _snap({"fused-numpy": _row(24.0), "jit-jax": _row(29.0)})
+    failures, notes = compare(new, base, DEFAULT_TOL)
+    assert failures == []
+    assert len(notes) == 2
+
+
+def test_regression_beyond_tolerance_fails():
+    base = _snap({"fused-numpy": _row(20.0), "jit-jax": _row(30.0)})
+    new = _snap({"fused-numpy": _row(20.0), "jit-jax": _row(46.0)})
+    failures, _ = compare(new, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "jit-jax" in failures[0] and "REGRESSION" in failures[0]
+
+
+def test_tolerance_is_overridable():
+    base = _snap({"jit-jax": _row(10.0)})
+    new = _snap({"jit-jax": _row(25.0)})
+    assert compare(new, base, 1.5)[0]
+    assert not compare(new, base, 3.0)[0]
+
+
+def test_skip_recorded_on_both_sides_is_tolerated():
+    base = _snap({"pallas": {"skipped": "requires TPU"},
+                  "jit-jax": _row(30.0)})
+    new = _snap({"pallas": {"skipped": "requires TPU"},
+                 "jit-jax": _row(30.0)})
+    failures, notes = compare(new, base, DEFAULT_TOL)
+    assert failures == []
+    assert any("pallas" in n and "skipped" in n for n in notes)
+
+
+def test_baseline_measured_backend_going_skipped_fails():
+    """A skip can't silently end a measured backend's perf trajectory."""
+    base = _snap({"pallas": _row(5.0), "jit-jax": _row(30.0)})
+    new = _snap({"pallas": {"skipped": "requires TPU"},
+                 "jit-jax": _row(30.0)})
+    failures, _ = compare(new, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "pallas" in failures[0] and "skipped" in failures[0]
+
+
+def test_silent_omission_fails():
+    """The exact failure mode the {"skipped": reason} recording prevents."""
+    base = _snap({"pallas": _row(5.0), "jit-jax": _row(30.0)})
+    new = _snap({"jit-jax": _row(30.0)})
+    failures, _ = compare(new, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "pallas" in failures[0] and "MISSING" in failures[0]
+
+
+def test_baseline_skip_and_new_backend_are_notes():
+    base = _snap({"pallas": {"skipped": "requires TPU"}})
+    new = _snap({"pallas": _row(4.0), "brand-new": _row(1.0)})
+    failures, notes = compare(new, base, DEFAULT_TOL)
+    assert failures == []
+    assert any("no baseline" in n for n in notes)
+    assert any("brand-new" in n for n in notes)
+
+
+def test_merge_min_takes_fastest_row_per_backend():
+    """One contended run can't fail the gate: the per-backend minimum
+    across fresh snapshots wins, and a skip survives only if the backend
+    never measured."""
+    noisy = _snap({"jit-jax": _row(83.6), "fused-numpy": _row(16.0),
+                   "pallas": {"skipped": "requires TPU"}})
+    clean = _snap({"jit-jax": _row(17.8), "fused-numpy": _row(21.0),
+                   "pallas": {"skipped": "requires TPU"}})
+    merged = merge_min([noisy, clean])
+    assert merged["backends"]["jit-jax"]["total_ms"] == 17.8
+    assert merged["backends"]["fused-numpy"]["total_ms"] == 16.0
+    assert "skipped" in merged["backends"]["pallas"]
+    # a backend measured in ANY run counts as measured
+    part = _snap({"sharded": {"skipped": "flaky platform"}})
+    full = _snap({"sharded": _row(20.0)})
+    assert merge_min([part, full])["backends"]["sharded"]["total_ms"] == 20.0
+
+
+def test_gate_cli_green_on_committed_baseline(tmp_path):
+    """End-to-end: the CLI exits 0 when the snapshot equals the committed
+    smoke baseline (what CI runs, minus the fresh bench)."""
+    baseline = REPO / "BENCH_pem.smoke.json"
+    assert baseline.exists(), "committed smoke baseline missing"
+    snap = tmp_path / "new.json"
+    snap.write_text(baseline.read_text())
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         str(snap), str(baseline)],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "green" in proc.stdout
+
+
+def test_gate_cli_fails_on_regression(tmp_path):
+    baseline = REPO / "BENCH_pem.smoke.json"
+    data = json.loads(baseline.read_text())
+    for row in data["backends"].values():
+        if "total_ms" in row:
+            row["total_ms"] = round(row["total_ms"] * 10, 3)
+    snap = tmp_path / "regressed.json"
+    snap.write_text(json.dumps(data))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         str(snap), str(baseline)],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "REGRESSION" in proc.stdout

@@ -1,0 +1,250 @@
+"""Fused score->select equivalence + PlanCache retrace contract.
+
+The device-resident pipeline's two invariants:
+
+1. ``score_select`` (device top-k for jit-jax / pallas / sharded, host
+   path for the numpy backends) returns the same top-``pool`` candidate
+   set as the host oracle — ``select_candidates`` over the full score
+   array and ``pem_topk_reference`` — with scores to 1e-5, including the
+   diverse/MMR oversample path and per-request ``k`` mixes.
+2. The ``PlanCache`` never retraces for distinct query texts with the
+   same plan *structure*; a genuinely new suppress-count bucket traces
+   exactly once more.  Traces are counted from INSIDE the traced python
+   bodies (``PlanCache.jax_traces``), so any accidental shape/dtype
+   wobble in the host-side argument prep would show up here.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import modulations as M
+from repro.core.backends import (JitJaxBackend, PlanCache, PlanStructure,
+                                 ShardedBackend, finalize_candidates,
+                                 get_backend, list_backends,
+                                 select_candidates, selection_width, top_idx)
+from repro.embed import HashEmbedder
+
+BACKENDS = list_backends()
+EMB = HashEmbedder(32)
+
+
+def _corpus(n=220, d=32, seed=13):
+    rng = np.random.default_rng(seed)
+    mat = rng.standard_normal((n, d)).astype(np.float32)
+    mat /= np.linalg.norm(mat, axis=1, keepdims=True)
+    days = rng.uniform(0.0, 60.0, n).astype(np.float32)
+    return mat, days
+
+
+def _plan(text="how the retrieval system works", *, n_suppress=2, decay=True,
+          diverse=False, trajectory=True, pool=30):
+    suppress = tuple(
+        M.SuppressSpec(direction=M.l2_normalize(EMB(f"noise concept {i}")),
+                       weight=0.5 - 0.1 * i)
+        for i in range(n_suppress)
+    )
+    traj = None
+    if trajectory:
+        traj = M.TrajectorySpec(
+            direction=M.l2_normalize(EMB("production deployment"))
+            - M.l2_normalize(EMB("prototype sketch")))
+    return M.ModulationPlan(
+        query=M.l2_normalize(EMB(text)),
+        trajectory=traj,
+        decay=M.DecaySpec(half_life_days=30.0) if decay else None,
+        suppress=suppress,
+        diverse=M.DiverseSpec() if diverse else None,
+        pool=pool,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused-selection equivalence (satellite: device results == host oracle)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_score_select_matches_host_topk(backend):
+    """Plain top-k: same indices as top_idx over the full oracle scores."""
+    mat, days = _corpus()
+    plan = _plan()
+    oracle = np.asarray(M.modulate_scores(mat, days, plan))
+    k = plan.pool
+    (idx, vals), = get_backend(backend).score_select(mat, days, [plan], [k])
+    assert idx.shape == vals.shape == (k,)
+    assert list(idx) == list(top_idx(oracle, k))
+    np.testing.assert_allclose(vals, oracle[idx], atol=1e-5, rtol=1e-5)
+    # descending order is part of the contract
+    assert np.all(np.diff(vals) <= 1e-7)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_score_select_diverse_oversample_path(backend):
+    """Diverse plans return the MMR oversample pool; finalize reproduces
+    select_candidates on the full score array exactly."""
+    mat, days = _corpus(seed=17)
+    plan = _plan(diverse=True, pool=20)
+    oracle = np.asarray(M.modulate_scores(mat, days, plan))
+    k = plan.pool
+    w = selection_width(plan, k, mat.shape[0])
+    assert w == min(plan.diverse.oversample * plan.pool, mat.shape[0])
+
+    (idx, vals), = get_backend(backend).score_select(mat, days, [plan], [k])
+    assert idx.shape == (w,)
+    # the top-pool SET matches the host oracle's oversampled pool
+    assert set(idx.tolist()) == set(top_idx(oracle, w).tolist())
+    np.testing.assert_allclose(vals, oracle[idx], atol=1e-5, rtol=1e-5)
+
+    fidx, fvals = finalize_candidates(mat, idx, vals, k, plan)
+    expected = select_candidates(mat, oracle, k, plan)
+    assert list(fidx) == list(expected)
+    np.testing.assert_allclose(fvals, oracle[expected], atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_score_select_matches_pem_topk_reference(backend):
+    """Against the dist oracle: uniform half-life, fused panels, global
+    top-k — the contract every sharded/fused lowering must reproduce."""
+    import jax.numpy as jnp
+
+    from repro.dist.pem_sharded import pem_topk_reference
+
+    mat, days = _corpus(seed=23)
+    plan = _plan(decay=True)
+    k = 40
+    q_pre, q_sup = M.fold_plans([plan])
+    i_ref, v_ref = pem_topk_reference(
+        jnp.asarray(mat), jnp.asarray(days), jnp.asarray(q_pre),
+        jnp.asarray(q_sup), k, half_life=plan.decay.half_life_days)
+
+    (idx, vals), = get_backend(backend).score_select(mat, days, [plan], [k])
+    assert list(idx) == list(np.asarray(i_ref)[0])
+    np.testing.assert_allclose(vals, np.asarray(v_ref)[0],
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_score_select_mixed_batch_per_request_k(backend):
+    """Engine-style micro-batch: mixed decay/no-decay plans, different k
+    per request — every plan's candidates match its own oracle column."""
+    mat, days = _corpus(seed=29)
+    plans = [
+        _plan("alpha architecture", n_suppress=2),
+        _plan("beta deployment", n_suppress=1, decay=False, trajectory=False),
+        _plan("gamma landing page", n_suppress=0, decay=True),
+    ]
+    ks = [7, 13, 5]
+    selected = get_backend(backend).score_select(mat, days, plans, ks)
+    assert len(selected) == len(plans)
+    for (idx, vals), plan, k in zip(selected, plans, ks):
+        oracle = np.asarray(M.modulate_scores(mat, days, plan))
+        assert list(idx) == list(top_idx(oracle, k))
+        np.testing.assert_allclose(vals, oracle[idx], atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_score_select_k_zero_and_requires_days(backend):
+    mat, days = _corpus(seed=31)
+    plan = _plan()
+    (idx, vals), = get_backend(backend).score_select(mat, days, [plan], [0])
+    assert idx.size == 0 and vals.size == 0
+    with pytest.raises(ValueError, match="decay"):
+        get_backend(backend).score_select(mat, None, [plan], [5])
+
+
+# ---------------------------------------------------------------------------
+# PlanCache: zero retraces on identical structure, one per new bucket
+# ---------------------------------------------------------------------------
+
+
+def test_plan_structure_buckets():
+    mat, days = _corpus()
+    n = mat.shape[0]
+    mk = lambda s: _plan(n_suppress=s)
+    k = 10
+    w = [selection_width(mk(0), k, n)]
+    assert PlanStructure.of([mk(3)], w, n).suppress_bucket == 4
+    assert PlanStructure.of([mk(4)], w, n).suppress_bucket == 4
+    assert PlanStructure.of([mk(5)], w, n).suppress_bucket == 8
+    assert PlanStructure.of([mk(0)], w, n).suppress_bucket == 0
+    # top-k width pads to powers of two, clamped to the corpus size
+    assert PlanStructure.of([mk(1)], [10], n).width == 16
+    assert PlanStructure.of([mk(1)], [1000], n).width == n
+    # distinct texts, same shape -> the SAME structure (cache key)
+    s1 = PlanStructure.of([_plan("first text")], [10], n)
+    s2 = PlanStructure.of([_plan("totally different text")], [10], n)
+    assert s1 == s2
+
+
+def test_plan_cache_zero_retraces_across_distinct_texts():
+    """Three queries with distinct texts but identical plan structure:
+    exactly ONE jax trace (counted from inside the traced body)."""
+    mat, days = _corpus(seed=37)
+    be = JitJaxBackend()
+    for text in ("alpha query text", "beta entirely different words",
+                 "gamma third phrasing"):
+        be.score_select(mat, days, [_plan(text)], [10])
+    assert be.plan_cache.builds == 1
+    assert be.plan_cache.hits == 2
+    assert be.plan_cache.jax_traces == 1
+
+
+def test_plan_cache_retraces_on_new_suppress_bucket():
+    mat, days = _corpus(seed=41)
+    be = JitJaxBackend()
+    be.score_select(mat, days, [_plan(n_suppress=1)], [10])
+    assert be.plan_cache.jax_traces == 1
+    # same bucket (1): no retrace even though the direction values differ
+    be.score_select(mat, days, [_plan("other text", n_suppress=1)], [10])
+    assert be.plan_cache.jax_traces == 1
+    # bucket 1 -> 2: a genuinely new suppress-count bucket traces once
+    be.score_select(mat, days, [_plan(n_suppress=2)], [10])
+    assert be.plan_cache.jax_traces == 2
+    # 3 and 4 suppressions share bucket 4: one trace serves both
+    be.score_select(mat, days, [_plan(n_suppress=3)], [10])
+    be.score_select(mat, days, [_plan(n_suppress=4)], [10])
+    assert be.plan_cache.jax_traces == 3
+    # suppress-free plans drop the second matmul: separate graph
+    be.score_select(mat, days, [_plan(n_suppress=0)], [10])
+    assert be.plan_cache.jax_traces == 4
+
+
+def test_plan_cache_decay_presence_is_structural():
+    mat, days = _corpus(seed=43)
+    be = JitJaxBackend()
+    be.score_select(mat, days, [_plan(decay=True)], [10])
+    be.score_select(mat, days, [_plan(decay=False)], [10])
+    assert be.plan_cache.jax_traces == 2
+    # different half-lives are runtime DATA, not structure
+    p = _plan(decay=True)
+    p2 = M.ModulationPlan(query=p.query, trajectory=p.trajectory,
+                          decay=M.DecaySpec(half_life_days=7.0),
+                          suppress=p.suppress, pool=p.pool)
+    be.score_select(mat, days, [p2], [10])
+    assert be.plan_cache.jax_traces == 2
+
+
+def test_plan_cache_fifo_eviction_bounds_executables():
+    """Exact n_rows keys mean varied pre-filter sizes each compile once;
+    FIFO eviction bounds how many executables stay retained."""
+    cache = PlanCache(lambda s: ("fn", s), maxsize=2)
+    mk = lambda n: PlanStructure(batch=1, n_rows=n, has_decay=True,
+                                 suppress_bucket=1, width=16)
+    cache.get(mk(100))
+    cache.get(mk(200))
+    cache.get(mk(300))          # evicts mk(100)
+    assert len(cache) == 2 and cache.evictions == 1
+    cache.get(mk(300))          # still cached
+    assert cache.hits == 1
+    cache.get(mk(100))          # rebuilt after eviction
+    assert cache.builds == 4
+
+
+def test_sharded_plan_cache_zero_retraces():
+    """The sharded fused path shares the PlanCache contract."""
+    mat, days = _corpus(seed=47)
+    be = ShardedBackend()
+    for text in ("one query", "another query", "a third query"):
+        be.score_select(mat, days, [_plan(text)], [10])
+    assert be.plan_cache.builds == 1
+    assert be.plan_cache.jax_traces == 1
