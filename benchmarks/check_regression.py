@@ -11,7 +11,9 @@ runners is one-sided — a contended run only ever reads slow — so CI runs
 the smoke bench twice and a single noisy window cannot fail the gate,
 while a real regression shows up in every run.
 
-Per-backend ``total_ms`` (the fused score->select end-to-end latency) is
+Per-backend ``total_ms`` — both the ``backends`` section (fused
+score->select latency) and the ``delta_backends`` section (the
+append+query / delete+query liveness cycle over the segmented store) — is
 compared against the committed ``BENCH_pem.smoke.json`` baseline; the gate
 fails on a > ``FLEX_BENCH_TOL`` (default 1.5) ratio for ANY backend that
 is not recorded as skipped in the baseline.  A backend present in the
@@ -40,14 +42,21 @@ DEFAULT_TOL = 1.5
 
 
 def compare(
-    new: Dict, baseline: Dict, tol: float
+    new: Dict, baseline: Dict, tol: float, section: str = "backends"
 ) -> Tuple[List[str], List[str]]:
-    """Diff two snapshot dicts. Returns (failures, notes)."""
+    """Diff one per-backend section of two snapshot dicts.
+
+    ``section`` is ``"backends"`` (the fused query path) or
+    ``"delta_backends"`` (the append+query/delete+query liveness cycle);
+    both gate under the same tolerance and skipped-backend rules.
+    Returns (failures, notes)."""
     failures: List[str] = []
     notes: List[str] = []
-    new_backends = new.get("backends", {})
-    for name, base_row in sorted(baseline.get("backends", {}).items()):
+    tag = "" if section == "backends" else f"{section}/"
+    new_backends = new.get(section, {})
+    for name, base_row in sorted(baseline.get(section, {}).items()):
         new_row = new_backends.get(name)
+        name = tag + name  # message label only; lookups use the bare name
         if new_row is None:
             failures.append(
                 f"{name}: present in baseline but MISSING from the new "
@@ -82,26 +91,53 @@ def compare(
             failures.append("REGRESSION " + line)
         else:
             notes.append(line)
-    for name in sorted(set(new_backends) - set(baseline.get("backends", {}))):
-        notes.append(f"{name}: new backend, no baseline yet")
+    for name in sorted(set(new_backends) - set(baseline.get(section, {}))):
+        notes.append(f"{tag}{name}: new backend, no baseline yet")
+    return failures, notes
+
+
+def compare_all(
+    new: Dict, baseline: Dict, tol: float
+) -> Tuple[List[str], List[str]]:
+    """Gate every per-backend section the baseline carries.
+
+    A baseline without ``delta_backends`` (pre-liveness snapshots) just
+    skips that section; a baseline WITH it and a new snapshot missing the
+    whole section entirely fails — dropping the scenario is the section-
+    level flavor of silent omission."""
+    failures: List[str] = []
+    notes: List[str] = []
+    for section in ("backends", "delta_backends"):
+        if section not in baseline:
+            continue
+        if section != "backends" and section not in new:
+            failures.append(
+                f"{section}: section present in baseline but missing from "
+                f"the new snapshot (the delta-ingest scenario was dropped)")
+            continue
+        f, n = compare(new, baseline, tol, section)
+        failures += f
+        notes += n
     return failures, notes
 
 
 def merge_min(snapshots: List[Dict]) -> Dict:
-    """Fold several fresh snapshots into one: per backend, the fastest
-    measured row wins (one-sided noise); skips survive only if a backend
-    never measured."""
+    """Fold several fresh snapshots into one: per backend (and section),
+    the fastest measured row wins (one-sided noise); skips survive only
+    if a backend never measured."""
     merged: Dict = dict(snapshots[0])
-    backends: Dict[str, Dict] = {}
-    for snap in snapshots:
-        for name, row in snap.get("backends", {}).items():
-            best = backends.get(name)
-            if "skipped" in row:
-                backends.setdefault(name, row)
-            elif (best is None or "skipped" in best
-                  or float(row["total_ms"]) < float(best["total_ms"])):
-                backends[name] = row
-    merged["backends"] = backends
+    for section in ("backends", "delta_backends"):
+        backends: Dict[str, Dict] = {}
+        for snap in snapshots:
+            for name, row in snap.get(section, {}).items():
+                best = backends.get(name)
+                if "skipped" in row:
+                    backends.setdefault(name, row)
+                elif (best is None or "skipped" in best
+                      or float(row["total_ms"]) < float(best["total_ms"])):
+                    backends[name] = row
+        if backends or section in merged:
+            merged[section] = backends
     return merged
 
 
@@ -114,7 +150,7 @@ def main(argv: List[str]) -> int:
     new = merge_min([json.loads(Path(p).read_text()) for p in argv[:-1]])
     baseline = json.loads(Path(argv[-1]).read_text())
     tol = float(os.environ.get("FLEX_BENCH_TOL", DEFAULT_TOL))
-    failures, notes = compare(new, baseline, tol)
+    failures, notes = compare_all(new, baseline, tol)
     for line in notes:
         print(f"  ok  {line}")
     for line in failures:

@@ -19,6 +19,13 @@ Backends that cannot run meaningfully on this platform are RECORDED as
 backend trajectory stays diffable across platforms (``pallas`` off-TPU:
 interpret mode measures the emulator, not the kernel).
 
+``delta_backends`` measures the cost of LIVENESS (the segmented-store
+refactor): one delta cycle = append a ~5% segment to a warm store, query,
+tombstone it, query again.  ``total_ms`` is the whole cycle — the number
+the regression gate diffs — so a change that silently re-uploads or
+re-traces warm segments on ingest shows up as a gate failure, not an
+assumption.
+
 ``FLEX_BENCH_OUT`` overrides the output path (the CI gate writes the
 smoke-scale run to a scratch file so the committed full-scale snapshot
 is never clobbered).
@@ -88,8 +95,52 @@ def _bench_backends():
     return n, rows
 
 
+def _bench_delta():
+    """Delta-ingest scenario: append+query / delete+query on a warm store."""
+    import jax
+
+    from repro.core.vectorcache import VectorCache
+
+    conn, cache, chunks, emb = production_db()
+    base_ids, base_mat = cache.ids, cache.matrix
+    base_ts = cache.timestamps
+    n = base_mat.shape[0]
+    m = max(64, n // 20)  # ~5% delta segment
+    delta_ids = np.arange(n, n + m) + int(base_ids.max()) + 1
+    delta_mat = base_mat[:m]
+    delta_ts = np.full(m, NOW)
+
+    on_tpu = jax.default_backend() == "tpu"
+    rows = {}
+    for name in list_backends():
+        if name == "pallas" and not on_tpu:
+            rows[name] = {"skipped": "requires TPU (interpret mode measures "
+                                     "the emulator, not the kernel)"}
+            emit(f"pem/skip_delta_{name}", 0.0, "off-TPU")
+            continue
+        backend = get_backend(name)
+        vc = VectorCache(base_ids, base_mat, base_ts, emb, normalized=True)
+        plan = parse(TOKENS, emb, vc.embeddings_for_ids)
+        vc.search_plan(plan, now=NOW, engine=backend)  # warm the base
+
+        def delta_cycle():
+            vc.ingest(delta_ids, delta_mat, delta_ts, normalized=True)
+            vc.search_plan(plan, now=NOW, engine=backend)
+            vc.delete(delta_ids)
+            vc.search_plan(plan, now=NOW, engine=backend)
+            vc.compact(0.5)  # drop the dead segment between cycles
+
+        t_cycle = timed(delta_cycle)
+        emit(f"pem/delta_{name}", t_cycle,
+             f"append {m} + query + delete + query")
+        rows[name] = {"delta_rows": m,
+                      "total_ms": round(t_cycle * 1e3, 3)}
+    return rows
+
+
 def run() -> None:
     n, rows = _bench_backends()
+    delta_rows = _bench_delta()
     snapshot = {
         "bench": "pem_phase2_composed",
         "tokens": TOKENS,
@@ -98,6 +149,7 @@ def run() -> None:
         "dim": DIM,
         "platform": platform.machine(),
         "backends": rows,
+        "delta_backends": delta_rows,
     }
     SNAPSHOT_PATH.write_text(json.dumps(snapshot, indent=2) + "\n")
     print(f"# wrote {SNAPSHOT_PATH}", flush=True)

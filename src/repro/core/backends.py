@@ -6,9 +6,10 @@ matmuls in ``BatchedRetrievalEngine._serve``, and pass-through strings in
 ``Materializer``/``RetrievalService``.  Now every consumer resolves a
 backend from ONE registry and calls the same primitives:
 
-    score(matrix, days_ago, plan)              -> (N,)   one request
-    score_panel(matrix, days_ago, plans)       -> (N, B) a micro-batch
-    score_select(matrix, days_ago, plans, ks)  -> per-plan top candidates
+    score(matrix, days_ago, plan)                    -> (N,)   one request
+    score_panel(matrix, days_ago, plans)             -> (N, B) a micro-batch
+    score_select(matrix, days_ago, plans, ks, mask=) -> per-plan top candidates
+    score_select_segments(backend, segments, ...)    -> segmented corpus driver
 
 ``score_select`` is the fused score->select stage: it returns ONLY the
 top-:func:`selection_width` candidate ``(indices, scores)`` per plan, so
@@ -32,10 +33,21 @@ Registered backends:
 The numpy backends keep the host path (full panel + numpy selection) so the
 equivalence suites (tests/test_backends.py, tests/test_score_select.py)
 stay anchored to the reference oracle.  Device backends compile through a
-:class:`PlanCache` keyed on :class:`PlanStructure` — plan *shape* (batch
-width, decay present/absent, suppress count bucketed by padding, top-k
-width bucketed to powers of two) — so distinct query texts with the same
-structure never retrigger tracing.
+:class:`PlanCache` (LRU-bounded) keyed on :class:`PlanStructure` — plan
+*shape* (batch width, decay present/absent, suppress count bucketed by
+padding, top-k width AND corpus row count bucketed to powers of two) — so
+distinct query texts with the same structure never retrigger tracing, and
+a stream of varying corpus/segment sizes compiles one graph per pow2
+bucket, not one per exact row count.
+
+Live corpora (`repro.core.segments`) score through
+:func:`score_select_segments`: each segment scores independently (its
+tombstones masked to -inf ON DEVICE via ``score_select``'s ``mask``
+argument, before selection), per-segment top-k candidates merge on the
+host exactly like ``dist/pem_sharded.union_merge_topk`` merges per-shard
+candidates, and the result is bit-identical to a monolithic store.  The
+per-array device matrix cache (:class:`_DeviceMatrixMixin`) holds one
+entry per warm segment, so appending a segment uploads ONLY the delta.
 
 All backends are algebraically identical on the composed plan grammar.
 Later scaling PRs (multi-host, async, cache tiering) plug in here via
@@ -46,7 +58,10 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+import time
+from collections import OrderedDict
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 import numpy as np
 
@@ -62,6 +77,7 @@ __all__ = [
     "select_candidates",
     "selection_width",
     "finalize_candidates",
+    "score_select_segments",
 ]
 
 Candidates = Tuple[np.ndarray, np.ndarray]  # (indices, scores), descending
@@ -122,13 +138,14 @@ class PlanStructure:
 
     Two batches with the same structure lower to the same specialized
     graph: query texts, embedding values, and half-life magnitudes are
-    runtime data, never trace constants.  Suppress count and top-k width
-    are bucketed (padded up to powers of two) so the number of distinct
-    traces stays bounded as requests vary.
+    runtime data, never trace constants.  Suppress count, top-k width AND
+    the corpus row count are bucketed (padded up to powers of two) so the
+    number of distinct traces stays bounded as requests — and segment
+    sizes — vary.
     """
 
     batch: int            # B — number of plans folded into the panel
-    n_rows: int           # corpus rows (device shapes derive from it)
+    n_rows: int           # DEVICE row count: corpus rows pow2-bucketed
     has_decay: bool       # decay factor branch present in the graph
     suppress_bucket: int  # max suppress count, padded to a power of two
     width: int            # static top-k width (pow2-bucketed, <= n_rows)
@@ -137,10 +154,11 @@ class PlanStructure:
     # only 0-vs-nonzero changes the lowered graph (the second matmul drops
     # out); the pow2 buckets keep the key future-proof for unfused panel
     # formulations where the direction count IS a shape.  NOTE on n_rows:
-    # it keys exactly, so Phase-1 pre-filtered sub-corpora of varying size
-    # compile per size — at sub-corpus scale the host path is the better
-    # engine choice anyway, and :class:`PlanCache` bounds retained
-    # executables by FIFO eviction.
+    # it is the pow2 ROW BUCKET — device backends zero-pad the corpus up
+    # to it and mask the padding to -inf, so Phase-1 pre-filtered
+    # sub-corpora and store segments of varying size share one compiled
+    # executable per bucket instead of one per exact row count (the
+    # per-segment PlanCache would otherwise grow with every append).
 
     @classmethod
     def of(
@@ -151,12 +169,13 @@ class PlanStructure:
     ) -> "PlanStructure":
         max_sup = max((len(p.suppress) for p in plans), default=0)
         w = max(widths, default=0)
+        bucket = max(_pow2_bucket(n_rows), 1)
         return cls(
             batch=len(plans),
-            n_rows=n_rows,
+            n_rows=bucket,
             has_decay=any(p.decay is not None for p in plans),
             suppress_bucket=_pow2_bucket(max_sup),
-            width=min(max(_pow2_bucket(w), 1), max(n_rows, 1)),
+            width=min(max(_pow2_bucket(w), 1), bucket),
         )
 
 
@@ -172,10 +191,11 @@ class PlanCache:
     it counts real (re)traces, not just cache misses; tests use it to pin
     the zero-retrace contract.
 
-    The cache is bounded (FIFO eviction at ``maxsize``): structure keys
-    include the exact corpus row count, so a stream of Phase-1 pre-filtered
-    sub-corpora of varying size would otherwise retain one compiled
-    executable per size forever.
+    The cache is bounded with LRU eviction at ``maxsize``: every hit
+    refreshes the entry, so the hot segments' executables stay resident no
+    matter how many one-off shapes (odd pre-filter buckets, a burst of
+    small delta segments) stream past.  Counters surface through
+    ``RetrievalService`` stats via :meth:`stats`.
     """
 
     def __init__(
@@ -184,48 +204,90 @@ class PlanCache:
         maxsize: int = 64,
     ) -> None:
         self._builder = builder
-        self._fns: "Dict[PlanStructure, Callable]" = {}
+        self._fns: "OrderedDict[PlanStructure, Callable]" = OrderedDict()
         self._lock = threading.Lock()
         self.maxsize = maxsize
         self.builds = 0      # cache misses (specialized graphs built)
         self.hits = 0        # cache hits (no build, no trace)
-        self.evictions = 0   # FIFO evictions (bounded executable retention)
+        self.evictions = 0   # LRU evictions (bounded executable retention)
         self.jax_traces = 0  # actual traces, counted from traced bodies
 
     def get(self, structure: PlanStructure) -> Callable:
         with self._lock:
             fn = self._fns.get(structure)
             if fn is not None:
+                self._fns.move_to_end(structure)
                 self.hits += 1
                 return fn
             self.builds += 1
             fn = self._fns[structure] = self._builder(structure)
             while len(self._fns) > self.maxsize:
-                self._fns.pop(next(iter(self._fns)))
+                self._fns.popitem(last=False)
                 self.evictions += 1
             return fn
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "entries": len(self._fns),
+                "hits": self.hits,
+                "builds": self.builds,
+                "evictions": self.evictions,
+                "jax_traces": self.jax_traces,
+            }
 
     def __len__(self) -> int:
         return len(self._fns)
 
 
 class _DeviceMatrixMixin:
-    """Cache the device-resident corpus across calls (it is immutable;
-    re-uploading ~123 MB per micro-batch would dominate the matmul)."""
+    """Per-array device-resident corpus cache (bounded, LRU).
 
-    _mat_src: Optional[np.ndarray] = None
-    _mat_dev = None
+    A segmented store scores one matmul per segment, so the cache holds
+    SEVERAL resident arrays at once — keyed on array identity + row
+    padding — instead of a single slot: appending a 10k-chunk segment to
+    a warm 240k corpus uploads ONLY the new segment while every sealed
+    segment stays device-resident.  ``uploads`` counts host->device
+    copies; tests pin the only-the-delta ingest contract on it.
+    """
+
+    _DEV_CACHE_SIZE = 32
+
+    uploads = 0        # host->device copies performed
+    dev_hits = 0       # calls served from the resident cache
+    dev_evictions = 0  # LRU evictions
 
     def _device_matrix(self, matrix: np.ndarray, pad: int = 0):
-        if self._mat_src is not matrix:
-            import jax.numpy as jnp
+        cache: "OrderedDict[Tuple[int, int], Tuple[np.ndarray, object]]"
+        cache = self.__dict__.setdefault("_dev_cache", OrderedDict())
+        key = (id(matrix), pad)
+        entry = cache.get(key)
+        # the stored source reference guards against id() reuse after gc
+        if entry is not None and entry[0] is matrix:
+            cache.move_to_end(key)
+            self.dev_hits += 1
+            return entry[1]
+        import jax.numpy as jnp
 
-            mat = np.asarray(matrix, np.float32)
-            if pad:
-                mat = np.pad(mat, ((0, pad), (0, 0)))
-            self._mat_dev = jnp.asarray(mat)
-            self._mat_src = matrix
-        return self._mat_dev
+        mat = np.asarray(matrix, np.float32)
+        if pad:
+            mat = np.pad(mat, ((0, pad), (0, 0)))
+        dev = jnp.asarray(mat)
+        cache[key] = (matrix, dev)
+        cache.move_to_end(key)
+        self.uploads += 1
+        while len(cache) > self._DEV_CACHE_SIZE:
+            cache.popitem(last=False)
+            self.dev_evictions += 1
+        return dev
+
+    def device_cache_stats(self) -> Dict[str, int]:
+        return {
+            "entries": len(self.__dict__.get("_dev_cache", ())),
+            "uploads": self.uploads,
+            "hits": self.dev_hits,
+            "evictions": self.dev_evictions,
+        }
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +330,8 @@ class ExecutionBackend:
         days_ago: Optional[np.ndarray],
         plans: Sequence[M.ModulationPlan],
         ks: Sequence[int],
+        *,
+        mask: Optional[np.ndarray] = None,
     ) -> List[Candidates]:
         """Fused score->select: per-plan ``(indices, scores)`` of the top
         ``selection_width(plan, k, N)`` candidates, descending by score.
@@ -275,6 +339,12 @@ class ExecutionBackend:
         ``ks[j]`` is the final candidate count requested for plan ``j``;
         diverse plans return the oversampled MMR pool instead (the caller
         finishes with :func:`finalize_candidates`).
+
+        ``mask`` is an optional (N,) bool array, True = live; masked rows
+        score -inf BEFORE selection (tombstoned segment rows never reach a
+        candidate list with a real score — device backends apply the mask
+        on device).  When fewer than ``w`` rows are live, the -inf entries
+        trail the result; :func:`score_select_segments` filters them.
         """
         panel = self.score_panel(matrix, days_ago, plans)
         n = panel.shape[0]
@@ -285,6 +355,8 @@ class ExecutionBackend:
                 out.append(_empty_candidates())
                 continue
             col = panel[:, j]
+            if mask is not None:
+                col = np.where(mask, col, -np.inf)
             idx = top_idx(col, w)
             out.append((idx, col[idx].astype(np.float32, copy=False)))
         return out
@@ -365,10 +437,11 @@ class JitJaxBackend(_DeviceMatrixMixin, ExecutionBackend):
 
     def _build_select(self, structure: PlanStructure):
         import jax
+        import jax.numpy as jnp
 
         cache = self.plan_cache
 
-        def fused_select(matrix, q_pre, q_sup, days, half_lives):
+        def fused_select(matrix, q_pre, q_sup, days, half_lives, mask):
             cache.jax_traces += 1  # python body runs only while tracing
             scores = matrix @ q_pre
             if structure.has_decay:
@@ -377,6 +450,8 @@ class JitJaxBackend(_DeviceMatrixMixin, ExecutionBackend):
                 )
             if structure.suppress_bucket:
                 scores = scores + matrix @ q_sup
+            # one mask covers pow2 row padding AND segment tombstones
+            scores = jnp.where(mask[:, None], scores, -jnp.inf)
             v, i = jax.lax.top_k(scores.T, structure.width)  # (B, width)
             return i, v
 
@@ -394,17 +469,22 @@ class JitJaxBackend(_DeviceMatrixMixin, ExecutionBackend):
                      _days_f32(days_ago, n), _half_lives(plans))
         )
 
-    def score_select(self, matrix, days_ago, plans, ks):
+    def score_select(self, matrix, days_ago, plans, ks, *, mask=None):
         for p in plans:
             _require_days(p, days_ago)
         n = matrix.shape[0]
         if n == 0:
             return [_empty_candidates() for _ in plans]
         widths = [selection_width(p, k, n) for p, k in zip(plans, ks)]
-        fn = self.plan_cache.get(PlanStructure.of(plans, widths, n))
+        structure = PlanStructure.of(plans, widths, n)
+        fn = self.plan_cache.get(structure)
+        pad = structure.n_rows - n
         q_pre, q_sup = M.fold_plans(plans)
-        idx, vals = fn(self._device_matrix(matrix), q_pre, q_sup,
-                       _days_f32(days_ago, n), _half_lives(plans))
+        days = np.pad(_days_f32(days_ago, n), (0, pad))
+        live = np.zeros(structure.n_rows, dtype=bool)
+        live[:n] = True if mask is None else mask
+        idx, vals = fn(self._device_matrix(matrix, pad), q_pre, q_sup,
+                       days, _half_lives(plans), live)
         return _slice_candidates(idx, vals, widths)
 
 
@@ -462,7 +542,9 @@ class PallasBackend(_DeviceMatrixMixin, ExecutionBackend):
         panel, _ = self._grouped_panel(matrix, days_ago, plans)
         return np.asarray(panel)
 
-    def score_select(self, matrix, days_ago, plans, ks):
+    def score_select(self, matrix, days_ago, plans, ks, *, mask=None):
+        import jax.numpy as jnp
+
         from repro.kernels.topk.ops import topk
 
         for p in plans:
@@ -472,8 +554,13 @@ class PallasBackend(_DeviceMatrixMixin, ExecutionBackend):
             return [_empty_candidates() for _ in plans]
         widths = [selection_width(p, k, n) for p, k in zip(plans, ks)]
         # same pow2 width bucketing as the PlanCache key, one formula
-        w_stat = PlanStructure.of(plans, widths, n).width
+        # (clamped to the real row count: the kernels take exact shapes,
+        # there is no compiled-executable cache to bucket rows for)
+        w_stat = min(PlanStructure.of(plans, widths, n).width, n)
         panel, interpret = self._grouped_panel(matrix, days_ago, plans)
+        if mask is not None:
+            # tombstones drop out on device, before the top-k kernel
+            panel = jnp.where(jnp.asarray(mask)[:, None], panel, -jnp.inf)
         v, i = topk(panel.T, w_stat, interpret=interpret)
         return _slice_candidates(i, v, widths)
 
@@ -530,7 +617,7 @@ class ShardedBackend(_DeviceMatrixMixin, ExecutionBackend):
         mesh = jax.make_mesh((n_dev,), ("shards",))
         cache = self.plan_cache
 
-        def local(matrix, q_pre, q_sup, days, half_lives):
+        def local(matrix, q_pre, q_sup, days, half_lives, mask):
             cache.jax_traces += 1  # python body runs only while tracing
             n_local = matrix.shape[0]
             shard = jax.lax.axis_index("shards")
@@ -541,10 +628,9 @@ class ShardedBackend(_DeviceMatrixMixin, ExecutionBackend):
                 )
             if structure.suppress_bucket:
                 scores = scores + matrix @ q_sup
-            # mask row-grid padding so it can never enter the union
-            rows = shard * n_local + jnp.arange(n_local, dtype=jnp.int32)
-            scores = jnp.where((rows < structure.n_rows)[:, None],
-                               scores, -jnp.inf)
+            # one mask covers row-grid padding AND segment tombstones, so
+            # neither can ever enter the union with a real score
+            scores = jnp.where(mask[:, None], scores, -jnp.inf)
             k_local = min(structure.width, n_local)
             v, i = jax.lax.top_k(scores.T, k_local)      # (B, k_local)
             gi = i + shard * n_local                      # global row ids
@@ -554,7 +640,7 @@ class ShardedBackend(_DeviceMatrixMixin, ExecutionBackend):
             local,
             mesh=mesh,
             in_specs=(P("shards", None), P(None, None), P(None, None),
-                      P("shards"), P(None)),
+                      P("shards"), P(None), P("shards")),
             out_specs=(P(None, None), P(None, None)),
             check_rep=False,
         )
@@ -580,7 +666,7 @@ class ShardedBackend(_DeviceMatrixMixin, ExecutionBackend):
         out = np.asarray(self._fn(mat, q_pre, q_sup, days, _half_lives(plans)))
         return out[:n]
 
-    def score_select(self, matrix, days_ago, plans, ks):
+    def score_select(self, matrix, days_ago, plans, ks, *, mask=None):
         import jax
 
         for p in plans:
@@ -590,14 +676,18 @@ class ShardedBackend(_DeviceMatrixMixin, ExecutionBackend):
             return [_empty_candidates() for _ in plans]
         n_shards = len(jax.devices())
         widths = [selection_width(p, k, n) for p, k in zip(plans, ks)]
-        fn = self.plan_cache.get(PlanStructure.of(plans, widths, n))
+        structure = PlanStructure.of(plans, widths, n)
+        fn = self.plan_cache.get(structure)
+        # row grid: pow2 bucket (the PlanCache key), then up to a shard
+        # multiple — derived from the bucket alone, so one trace per bucket
+        padded = structure.n_rows + ((-structure.n_rows) % n_shards)
+        pad = padded - n
         q_pre, q_sup = M.fold_plans(plans)
-        days = _days_f32(days_ago, n)
-        pad = (-n) % n_shards
+        days = np.pad(_days_f32(days_ago, n), (0, pad))
+        live = np.zeros(padded, dtype=bool)
+        live[:n] = True if mask is None else mask
         mat = self._device_matrix(matrix, pad)
-        if pad:
-            days = np.pad(days, (0, pad))
-        idx, vals = fn(mat, q_pre, q_sup, days, _half_lives(plans))
+        idx, vals = fn(mat, q_pre, q_sup, days, _half_lives(plans), live)
         return _slice_candidates(idx, vals, widths)
 
 
@@ -695,6 +785,88 @@ def finalize_candidates(
         sel = M.mmr_select_np(matrix[idx], scores, k, plan.diverse.lam)
         return idx[sel], scores[sel]
     return idx[:k], scores[:k]
+
+
+def score_select_segments(
+    backend: Union[str, "ExecutionBackend"],
+    segments: Sequence,
+    plans: Sequence[M.ModulationPlan],
+    ks: Sequence[int],
+    *,
+    now: Optional[float] = None,
+) -> List[Candidates]:
+    """Fused score->select over a SEGMENTED corpus (repro.core.segments).
+
+    Each segment scores independently through ``backend.score_select``
+    (its tombstones masked to -inf on device before selection), then the
+    per-segment top-k candidates merge on the host — the same two-stage
+    union-merge shape ``dist/pem_sharded.union_merge_topk`` applies across
+    device shards, applied across segments: every segment's local top-w
+    provably contains its share of the global top-w, so the merge is
+    exact.  Returns per-plan ``(global_rows, scores)`` where global rows
+    offset into the concatenation of ALL segment rows (tombstoned rows
+    included, so offsets are stable under deletes); resolve them with
+    ``segments.gather_rows`` / ``segments.gather_ids``.
+
+    Tie-breaking matches the monolithic path bit-for-bit: within a
+    segment both ``top_idx`` and ``jax.lax.top_k`` prefer the smallest
+    row, and the merge's stable sort keeps segment-major order, which IS
+    global row order.
+
+    ``ks[j]`` is the final candidate count for plan ``j``; diverse plans
+    come back as the oversampled MMR pool (callers finish with
+    :func:`finalize_candidates` over gathered candidate embeddings),
+    exactly like the monolithic ``score_select``.
+    """
+    from repro.core.segments import segment_offsets
+
+    backend = get_backend(backend)
+    n_live = sum(s.live_count for s in segments)
+    if n_live == 0:
+        return [_empty_candidates() for _ in plans]
+    if now is None:
+        now = time.time()
+    offsets = segment_offsets(segments)
+    scored = [(i, s) for i, s in enumerate(segments)
+              if s.n_rows and s.live_count]
+
+    # fast path: one fully-live segment IS the monolithic corpus — same
+    # call, same candidates, zero segmentation overhead
+    if len(scored) == 1 and scored[0][1].live_count == scored[0][1].n_rows:
+        i, seg = scored[0]
+        out = backend.score_select(
+            seg.matrix, seg.days_ago(now), plans,
+            [min(k, n_live) for k in ks])
+        if offsets[i]:
+            out = [(idx + offsets[i], vals) for idx, vals in out]
+        return out
+
+    # per-plan GLOBAL selection widths (diverse oversampling applies once,
+    # at corpus level; per-segment requests are plain top-w)
+    widths = [selection_width(p, min(k, n_live), n_live)
+              for p, k in zip(plans, ks)]
+    seg_plans = [dataclasses.replace(p, diverse=None)
+                 if p.diverse is not None else p for p in plans]
+
+    parts: List[List[Candidates]] = []
+    for i, seg in scored:
+        sel = backend.score_select(
+            seg.matrix, seg.days_ago(now), seg_plans, widths,
+            mask=seg.live_mask if seg.n_dead else None)
+        parts.append([(idx + offsets[i], vals) for idx, vals in sel])
+
+    merged: List[Candidates] = []
+    for j, w in enumerate(widths):
+        if w == 0:
+            merged.append(_empty_candidates())
+            continue
+        cat_i = np.concatenate([p[j][0] for p in parts])
+        cat_v = np.concatenate([p[j][1] for p in parts])
+        live = ~np.isneginf(cat_v)  # mask/padding leakage ends here
+        cat_i, cat_v = cat_i[live], cat_v[live]
+        order = np.argsort(-cat_v, kind="stable")[:w]
+        merged.append((cat_i[order], cat_v[order]))
+    return merged
 
 
 def select_candidates(

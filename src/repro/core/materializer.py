@@ -15,6 +15,14 @@ They are pseudo-functions recognized here, *before* SQLite sees the query:
 
 Failure mode is an explicit ``MaterializeError`` (the agent retries), never
 silent misexecution.
+
+Live-corpus ingest (the delta surface): ``INSERT INTO chunks ...`` and
+``DELETE FROM chunks ...`` are recognized and routed — the row change
+applies to SQLite (``_raw_chunks`` + FTS5 sync), missing embeddings are
+computed from ``content`` via the cache's embed function, and the
+VectorCache ingests/tombstones the same ids, invalidating nothing but the
+touched segment (warm segments keep their device residency and compiled
+plans).  Every other write statement stays rejected.
 """
 
 from __future__ import annotations
@@ -26,6 +34,8 @@ import sqlite3
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+import numpy as np
+
 # Monotonic across all Materializer instances sharing a connection: temp
 # tables live on the CONNECTION, so names must be process-unique.
 _TEMP_IDS = itertools.count(1)
@@ -35,6 +45,12 @@ from repro.core.vectorcache import VectorCache
 
 _PSEUDO_FUNCS = ("vec_ops", "keyword")
 _READONLY_RE = re.compile(r"^\s*(SELECT|WITH)\b", re.IGNORECASE)
+# the ingest surface: writes against the `chunks` view ONLY (`\b` keeps
+# `_raw_chunks` and friends rejected by the read-only check below)
+_INSERT_CHUNKS_RE = re.compile(r"^(\s*INSERT\s+INTO\s+)chunks\b",
+                               re.IGNORECASE)
+_DELETE_CHUNKS_RE = re.compile(r"^\s*DELETE\s+FROM\s+chunks\b",
+                               re.IGNORECASE)
 
 
 class MaterializeError(RuntimeError):
@@ -192,7 +208,16 @@ class Materializer:
     def execute(
         self, sql: str, params: Sequence = ()
     ) -> Tuple[List[str], List[tuple]]:
-        """Full 3-phase execution. Returns (column names, rows)."""
+        """Full 3-phase execution. Returns (column names, rows).
+
+        ``INSERT INTO chunks`` / ``DELETE FROM chunks`` route to the
+        delta-ingest surface (SQLite + FTS + VectorCache stay in sync);
+        all other statements must be read-only SELECT/WITH.
+        """
+        if _INSERT_CHUNKS_RE.match(sql):
+            return self._execute_ingest_insert(sql, params)
+        if _DELETE_CHUNKS_RE.match(sql):
+            return self._execute_ingest_delete(sql, params)
         rewritten = self.rewrite(sql)
         if not _READONLY_RE.match(rewritten):
             raise MaterializeError("only read-only SELECT/WITH statements are allowed")
@@ -292,6 +317,109 @@ class Materializer:
             rows,
         )
         return table
+
+    # -- delta ingest (INSERT/DELETE against the chunks view) ----------------
+
+    def _execute_ingest_insert(
+        self, sql: str, params: Sequence
+    ) -> Tuple[List[str], List[tuple]]:
+        """``INSERT INTO chunks ...`` -> _raw_chunks + FTS + cache segment.
+
+        The statement runs against the base table (column names are the
+        base-table ones, e.g. ``created_at``); a temp trigger captures the
+        inserted ids whatever the INSERT's shape (VALUES lists, SELECT
+        feeds).  Rows arriving without an embedding are embedded from
+        ``content``; the batch then seals ONE new VectorCache segment —
+        nothing else re-uploads or re-traces.
+        """
+        if self.cache is None:
+            raise MaterializeError("ingest: no VectorCache attached")
+        rewritten = _INSERT_CHUNKS_RE.sub(r"\g<1>_raw_chunks", sql, count=1)
+        log = f"_ingest_log_{next(_TEMP_IDS)}"
+        trig = f"_ingest_tr_{next(_TEMP_IDS)}"
+        # everything up to the cache ingest runs inside ONE transaction:
+        # any failure rolls the row changes back, so SQLite, FTS and the
+        # vector store can never diverge (and the agent's retry of the
+        # same INSERT works instead of hitting a PK conflict)
+        try:
+            self.conn.execute(f"CREATE TEMP TABLE {log} (id INTEGER)")
+            self.conn.execute(
+                f"CREATE TEMP TRIGGER {trig} AFTER INSERT ON _raw_chunks "
+                f"BEGIN INSERT INTO {log} VALUES (new.id); END"
+            )
+            try:
+                self.conn.execute(rewritten, params)
+                ids = [r[0] for r in
+                       self.conn.execute(f"SELECT id FROM {log}").fetchall()]
+            finally:
+                self.conn.execute(f"DROP TRIGGER {trig}")
+                self.conn.execute(f"DROP TABLE {log}")
+            if not ids:
+                return ["id"], []
+            ph = ",".join("?" * len(ids))
+            rows = self.conn.execute(
+                f"SELECT id, content, created_at, embedding FROM _raw_chunks "
+                f"WHERE id IN ({ph}) ORDER BY id", ids
+            ).fetchall()
+            emb = np.empty((len(rows), self.cache.dim), dtype=np.float32)
+            blob_updates = []
+            for i, (cid, content, _created, blob) in enumerate(rows):
+                if blob is not None:
+                    emb[i] = np.frombuffer(blob, dtype=np.float32,
+                                           count=self.cache.dim)
+                else:
+                    if self.cache.embed_fn is None:
+                        raise MaterializeError(
+                            "ingest: rows without embeddings need an embed "
+                            "function on the cache"
+                        )
+                    emb[i] = self.cache.embed_fn(content or "")
+                    blob_updates.append((emb[i].tobytes(), cid))
+            if blob_updates:
+                self.conn.executemany(
+                    "UPDATE _raw_chunks SET embedding = ? WHERE id = ?",
+                    blob_updates,
+                )
+            # external-content FTS5 needs explicit sync
+            self.conn.executemany(
+                f"INSERT INTO {self.fts_table} (rowid, content) "
+                f"VALUES (?, ?)",
+                [(r[0], r[1] or "") for r in rows],
+            )
+            self.cache.ingest(
+                [r[0] for r in rows], emb,
+                [r[2] or 0.0 for r in rows]
+                if self.cache.store.has_timestamps
+                or not self.cache.store.n_segments else None,
+            )
+        except (sqlite3.Error, ValueError) as e:
+            self.conn.rollback()
+            raise MaterializeError(f"ingest INSERT failed: {e}") from e
+        except MaterializeError:
+            self.conn.rollback()
+            raise
+        self.conn.commit()
+        return ["id"], [(r[0],) for r in rows]
+
+    def _execute_ingest_delete(
+        self, sql: str, params: Sequence
+    ) -> Tuple[List[str], List[tuple]]:
+        """``DELETE FROM chunks [WHERE ...]`` -> rows out of SQLite + FTS,
+        tombstones into the VectorCache (only the touched segments' masks
+        change — no re-upload, no re-trace, no view rebuild elsewhere)."""
+        from repro.sqlio.schema import delete_chunks
+
+        m = _DELETE_CHUNKS_RE.match(sql)
+        predicate = sql[m.end():]  # WHERE clause, view column names work
+        try:
+            ids = [r[0] for r in self.conn.execute(
+                f"SELECT id FROM chunks {predicate}", params).fetchall()]
+        except sqlite3.Error as e:
+            raise MaterializeError(f"ingest DELETE failed: {e}") from e
+        removed = delete_chunks(self.conn, ids, fts_table=self.fts_table)
+        if self.cache is not None and removed:
+            self.cache.delete(removed)
+        return ["id"], [(i,) for i in removed]
 
     def _fts_query(self, term: str) -> List[tuple]:
         """FTS5 BM25 with automatic fallback quoting for special chars."""

@@ -1,0 +1,354 @@
+"""Segmented corpus store: append-only segments + tombstones (live corpora).
+
+The paper's VectorCache holds the corpus embedding matrix as ONE immutable
+array, so any mutation means a full re-upload / re-normalize / re-trace.
+Production vector stores treat ingest as first-class (pgai keeps embeddings
+continuously in sync with table mutations; the vector-database survey
+[Ma et al. 2023] names segment-based storage with tombstoning as the
+standard design for mutable collections).  This module is that design:
+
+* :class:`CorpusSegment` — a SEALED batch of rows (ids, L2-normalized
+  matrix, timestamps) plus a tombstone bitmask.  The arrays never change
+  after sealing (device caches key on array identity); only tombstone bits
+  flip.
+* :class:`SegmentedCorpusStore` — an ordered list of segments with a
+  global id -> (segment, row) index.  ``append`` seals a new segment,
+  ``delete`` flips tombstones, ``compact`` merges small/sparse segments
+  into a fresh sealed segment.
+
+Scoring stays exact: every backend scores each segment independently
+(tombstones masked to -inf before selection) and the per-segment top-k
+merge (``repro.core.backends.score_select_segments``) reproduces the
+monolithic result bit-for-bit — the same two-stage union-merge shape
+``repro.dist.pem_sharded`` uses across device shards, applied across
+segments.  A monolithic corpus is just a one-segment store.
+
+Global row addressing: a row is identified by its offset in the
+concatenation of ALL segment rows (tombstoned rows included, so offsets
+never shift under deletes).  :func:`gather_rows` / :func:`gather_ids`
+resolve global rows against a segment-list snapshot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import modulations as M
+
+__all__ = [
+    "CorpusSegment",
+    "SegmentedCorpusStore",
+    "segment_offsets",
+    "gather_rows",
+    "gather_ids",
+]
+
+SECONDS_PER_DAY = 86400.0
+
+
+@dataclasses.dataclass(eq=False)  # identity equality: fields hold arrays
+class CorpusSegment:
+    """One sealed batch of corpus rows.
+
+    ``ids``/``matrix``/``timestamps`` are immutable after sealing — the
+    device-resident matrix caches key on ``id(matrix)``, so a warm segment
+    never re-uploads.  Deletes only flip ``tombstones`` bits (and bump
+    ``n_dead``); the dead rows are masked to -inf at scoring time and
+    physically dropped at :meth:`SegmentedCorpusStore.compact`.
+    """
+
+    seg_id: int
+    ids: np.ndarray                       # (n,) int64 chunk ids
+    matrix: np.ndarray                    # (n, d) float32, L2-normalized
+    timestamps: Optional[np.ndarray]      # (n,) float64 unix seconds, or None
+    tombstones: np.ndarray                # (n,) bool, True = deleted
+    n_dead: int = 0
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.ids.shape[0])
+
+    @property
+    def live_count(self) -> int:
+        return self.n_rows - self.n_dead
+
+    @property
+    def live_fraction(self) -> float:
+        return self.live_count / self.n_rows if self.n_rows else 0.0
+
+    @property
+    def live_mask(self) -> np.ndarray:
+        """Fresh (n,) bool array, True = live (a copy: safe to ship off)."""
+        return ~self.tombstones
+
+    def days_ago(self, now: float) -> Optional[np.ndarray]:
+        """Per-row age in days at ``now`` (None when timestamps absent)."""
+        if self.timestamps is None:
+            return None
+        return np.maximum(
+            (now - self.timestamps) / SECONDS_PER_DAY, 0.0
+        ).astype(np.float32)
+
+
+def segment_offsets(segments: Sequence[CorpusSegment]) -> np.ndarray:
+    """(S+1,) cumulative row starts: segment i spans [off[i], off[i+1])."""
+    off = np.zeros(len(segments) + 1, dtype=np.int64)
+    for i, seg in enumerate(segments):
+        off[i + 1] = off[i] + seg.n_rows
+    return off
+
+
+def _locate(segments: Sequence[CorpusSegment], global_rows: np.ndarray):
+    off = segment_offsets(segments)
+    gidx = np.asarray(global_rows, dtype=np.int64)
+    seg_idx = np.searchsorted(off, gidx, side="right") - 1
+    return seg_idx, gidx - off[seg_idx]
+
+
+def gather_rows(
+    segments: Sequence[CorpusSegment], global_rows: np.ndarray
+) -> np.ndarray:
+    """Embedding rows for global row offsets (order-preserving gather)."""
+    gidx = np.asarray(global_rows, dtype=np.int64)
+    if gidx.size == 0:
+        dim = segments[0].matrix.shape[1] if segments else 0
+        return np.zeros((0, dim), dtype=np.float32)
+    seg_idx, local = _locate(segments, gidx)
+    out = np.empty((gidx.size, segments[0].matrix.shape[1]), dtype=np.float32)
+    for s in np.unique(seg_idx):
+        sel = seg_idx == s
+        out[sel] = segments[s].matrix[local[sel]]
+    return out
+
+
+def gather_ids(
+    segments: Sequence[CorpusSegment], global_rows: np.ndarray
+) -> np.ndarray:
+    """Chunk ids for global row offsets (order-preserving gather)."""
+    gidx = np.asarray(global_rows, dtype=np.int64)
+    if gidx.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    seg_idx, local = _locate(segments, gidx)
+    out = np.empty(gidx.size, dtype=np.int64)
+    for s in np.unique(seg_idx):
+        sel = seg_idx == s
+        out[sel] = segments[s].ids[local[sel]]
+    return out
+
+
+class SegmentedCorpusStore:
+    """Ordered immutable segments + tombstones + a global id index.
+
+    Thread model: mutations (``append``/``delete``/``compact``) take
+    ``self.lock`` internally; readers that need a consistent scoring pass
+    (the batched engine, ``VectorCache.search_plan``) hold ``self.lock``
+    across snapshot + scoring, so ingest is usable *between* batches
+    without torn reads.  ``version`` bumps on every mutation — consumers
+    (the VectorCache live view) use it for cheap invalidation.
+    """
+
+    def __init__(self, dim: int) -> None:
+        self.dim = int(dim)
+        self._segments: List[CorpusSegment] = []
+        self._loc: Dict[int, Tuple[CorpusSegment, int]] = {}
+        self.lock = threading.RLock()
+        self.version = 0
+        self._next_seg_id = 0
+        self.appends = 0
+        self.deletes = 0
+        self.compactions = 0
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def segments(self) -> Tuple[CorpusSegment, ...]:
+        """Snapshot of the segment list (the list itself never mutates in
+        place; compact swaps in a new list under the lock)."""
+        with self.lock:
+            return tuple(self._segments)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._segments)
+
+    @property
+    def n_rows(self) -> int:
+        """Physical rows, tombstoned included."""
+        return sum(s.n_rows for s in self._segments)
+
+    @property
+    def n_live(self) -> int:
+        return sum(s.live_count for s in self._segments)
+
+    @property
+    def has_timestamps(self) -> bool:
+        segs = self._segments
+        return bool(segs) and all(s.timestamps is not None for s in segs)
+
+    def stats(self) -> Dict[str, int]:
+        with self.lock:
+            return {
+                "segments": self.n_segments,
+                "rows": self.n_rows,
+                "live": self.n_live,
+                "tombstoned": self.n_rows - self.n_live,
+                "appends": self.appends,
+                "deletes": self.deletes,
+                "compactions": self.compactions,
+                "version": self.version,
+            }
+
+    # -- mutations -----------------------------------------------------------
+
+    def append(
+        self,
+        ids: Sequence[int],
+        matrix: np.ndarray,
+        timestamps: Optional[Sequence[float]] = None,
+        *,
+        normalized: bool = False,
+    ) -> Optional[CorpusSegment]:
+        """Seal ``(ids, matrix, timestamps)`` as a new segment.
+
+        An empty append is a no-op returning None.  Re-appending an id that
+        was tombstoned is allowed (the index moves to the new row); a LIVE
+        duplicate id is an error.  Timestamp presence must match the rest
+        of the store (decay scoring is all-or-nothing).
+        """
+        ids_arr = np.asarray(ids, dtype=np.int64)
+        matrix = np.asarray(matrix, dtype=np.float32)
+        if matrix.ndim != 2 or matrix.shape[0] != ids_arr.shape[0]:
+            raise ValueError(
+                f"matrix shape {matrix.shape} inconsistent with "
+                f"{len(ids_arr)} ids"
+            )
+        if matrix.shape[0] and matrix.shape[1] != self.dim:
+            raise ValueError(
+                f"segment dim {matrix.shape[1]} != store dim {self.dim}"
+            )
+        if ids_arr.size == 0:
+            return None
+        ts = (np.asarray(timestamps, dtype=np.float64)
+              if timestamps is not None else None)
+        if ts is not None and ts.shape[0] != ids_arr.shape[0]:
+            raise ValueError("timestamps misaligned with ids")
+        with self.lock:
+            if self._segments:
+                have_ts = self._segments[0].timestamps is not None
+                if have_ts != (ts is not None):
+                    raise ValueError(
+                        "timestamp presence must match the existing store "
+                        f"(store has timestamps: {have_ts})"
+                    )
+            dupes = [int(i) for i in ids_arr if int(i) in self._loc]
+            if dupes:
+                raise ValueError(
+                    f"append: ids already live in the store: {dupes[:10]}"
+                    + ("..." if len(dupes) > 10 else "")
+                )
+            if not normalized:
+                matrix = np.asarray(M.l2_normalize(matrix), dtype=np.float32)
+            seg = CorpusSegment(
+                seg_id=self._next_seg_id,
+                ids=ids_arr,
+                matrix=matrix,
+                timestamps=ts,
+                tombstones=np.zeros(ids_arr.shape[0], dtype=bool),
+            )
+            self._next_seg_id += 1
+            self._segments = self._segments + [seg]
+            for row, cid in enumerate(ids_arr):
+                self._loc[int(cid)] = (seg, row)
+            self.version += 1
+            self.appends += 1
+            return seg
+
+    def delete(self, ids: Sequence[int], *, strict: bool = False) -> int:
+        """Tombstone ``ids``; returns how many rows were newly tombstoned.
+
+        Unknown (or already-deleted) ids are ignored unless ``strict``.
+        """
+        with self.lock:
+            missing: List[int] = []
+            flipped = 0
+            for cid in ids:
+                loc = self._loc.get(int(cid))
+                if loc is None:
+                    missing.append(int(cid))
+                    continue
+                seg, row = loc
+                if not seg.tombstones[row]:
+                    seg.tombstones[row] = True
+                    seg.n_dead += 1
+                    flipped += 1
+                del self._loc[int(cid)]
+            if missing and strict:
+                raise KeyError(
+                    f"delete: ids not live in the store: {missing[:10]}"
+                    + ("..." if len(missing) > 10 else "")
+                )
+            if flipped:
+                self.version += 1
+                self.deletes += 1
+            return flipped
+
+    def compact(self, min_live_fraction: float = 1.0) -> int:
+        """Merge sparse segments: every segment whose live fraction is
+        below ``min_live_fraction`` is folded (dead rows dropped) into one
+        fresh sealed segment, inserted at the first victim's position.
+        Fully-dead segments are simply removed.  Returns the number of
+        source segments compacted away.
+
+        ``compact(1.0)`` (the default) rewrites every segment that has ANY
+        tombstone — full garbage collection.
+        """
+        with self.lock:
+            victims = [s for s in self._segments
+                       if s.n_rows and s.live_fraction < min_live_fraction]
+            if not victims:
+                return 0
+            keep = [s for s in self._segments if s not in victims]
+            first_at = self._segments.index(victims[0])
+            insert_at = sum(1 for s in self._segments[:first_at]
+                            if s not in victims)
+            live_parts = [s for s in victims if s.live_count]
+            merged: Optional[CorpusSegment] = None
+            if live_parts:
+                ids = np.concatenate([s.ids[s.live_mask] for s in live_parts])
+                mat = np.concatenate(
+                    [s.matrix[s.live_mask] for s in live_parts])
+                ts = None
+                if live_parts[0].timestamps is not None:
+                    ts = np.concatenate(
+                        [s.timestamps[s.live_mask] for s in live_parts])
+                merged = CorpusSegment(
+                    seg_id=self._next_seg_id,
+                    ids=ids,
+                    matrix=np.ascontiguousarray(mat),
+                    timestamps=ts,
+                    tombstones=np.zeros(ids.shape[0], dtype=bool),
+                )
+                self._next_seg_id += 1
+                for row, cid in enumerate(ids):
+                    self._loc[int(cid)] = (merged, row)
+                keep.insert(insert_at, merged)
+            self._segments = keep
+            self.version += 1
+            self.compactions += 1
+            return len(victims)
+
+    # -- id lookups ----------------------------------------------------------
+
+    def __contains__(self, chunk_id: int) -> bool:
+        return int(chunk_id) in self._loc
+
+    def embedding_for_id(self, chunk_id: int) -> Optional[np.ndarray]:
+        loc = self._loc.get(int(chunk_id))
+        if loc is None:
+            return None
+        seg, row = loc
+        return seg.matrix[row]

@@ -1,18 +1,24 @@
 """VectorCache — the production Phase-2 engine (paper §3.4.1).
 
-Holds the corpus embedding matrix in memory (the paper's core requirement),
-parses the token grammar, runs the fixed-order modulation pipeline, and
-returns the top-``pool`` scored candidates for Phase 3 composition.
+Holds the corpus embeddings in memory (the paper's core requirement) —
+now as a :class:`~repro.core.segments.SegmentedCorpusStore` rather than
+one monolithic array, so a live corpus (append / tombstone / compact)
+never forces a full re-upload or re-trace: a monolithic corpus is just a
+one-segment store, and the legacy ``VectorCache(ids, matrix, ts)``
+constructor still builds exactly that.
 
 Execution is dispatched through the :mod:`repro.core.backends` registry
-via the fused ``score_select`` stage — only (pool,)-sized candidate lists
-ever come back from the backend (device backends select on device) —
+via the fused ``score_select`` stage — full-corpus searches route through
+:func:`~repro.core.backends.score_select_segments` (per-segment scoring
+with on-device tombstone masking + exact union merge), so only
+(pool,)-sized candidate lists ever come back from the backend.
 ``engine`` accepts any registered backend name (``reference-numpy``,
 ``fused-numpy``, ``jit-jax``, ``pallas``, ``sharded``; the seed's
 ``"reference"``/``"fused"`` aliases keep working) or an
-:class:`~repro.core.backends.ExecutionBackend` instance.  All backends are
-algebraically identical (tested against each other in
-tests/test_backends.py).
+:class:`~repro.core.backends.ExecutionBackend` instance.  All backends
+are algebraically identical (tested against each other in
+tests/test_backends.py; segmented-vs-monolithic equivalence is pinned in
+tests/test_segments.py).
 """
 
 from __future__ import annotations
@@ -25,7 +31,9 @@ import numpy as np
 from repro.core import grammar
 from repro.core import modulations as M
 from repro.core.backends import (ExecutionBackend, finalize_candidates,
-                                 get_backend)
+                                 get_backend, score_select_segments)
+from repro.core.segments import (SegmentedCorpusStore, gather_ids,
+                                 gather_rows)
 
 Engine = Union[str, ExecutionBackend]
 
@@ -33,42 +41,151 @@ SECONDS_PER_DAY = 86400.0
 
 
 class VectorCache:
-    """In-memory corpus matrix + token-grammar search (paper VectorCache)."""
+    """Segmented in-memory corpus + token-grammar search (paper VectorCache).
+
+    ``ids``/``matrix``/``timestamps`` remain available as properties — the
+    LIVE view (tombstoned rows dropped), rebuilt lazily when the store
+    version changes and zero-copy for a fully-live single segment — so
+    every monolithic consumer (benchmarks, structural operators, Phase-1
+    pre-filter sub-corpus scoring) keeps working unchanged.
+    """
 
     def __init__(
         self,
-        ids: Sequence[int],
-        matrix: np.ndarray,
+        ids: Sequence[int] = (),
+        matrix: Optional[np.ndarray] = None,
         timestamps: Optional[Sequence[float]] = None,
         embed_fn: Optional[grammar.EmbedFn] = None,
         *,
         normalized: bool = False,
+        store: Optional[SegmentedCorpusStore] = None,
     ) -> None:
-        self.ids = np.asarray(ids, dtype=np.int64)
-        matrix = np.asarray(matrix, dtype=np.float32)
-        if matrix.ndim != 2 or matrix.shape[0] != self.ids.shape[0]:
-            raise ValueError(
-                f"matrix shape {matrix.shape} inconsistent with {len(self.ids)} ids"
-            )
-        self.matrix = matrix if normalized else np.asarray(M.l2_normalize(matrix))
-        self.timestamps = (
-            np.asarray(timestamps, dtype=np.float64) if timestamps is not None else None
-        )
+        if store is not None:
+            if matrix is not None or len(ids):
+                raise ValueError("pass either (ids, matrix) or store=, not both")
+            self.store = store
+        else:
+            if matrix is None:
+                raise ValueError("VectorCache requires a matrix or a store")
+            matrix = np.asarray(matrix, dtype=np.float32)
+            if matrix.ndim != 2 or matrix.shape[0] != len(ids):
+                raise ValueError(
+                    f"matrix shape {matrix.shape} inconsistent with "
+                    f"{len(ids)} ids"
+                )
+            self.store = SegmentedCorpusStore(dim=matrix.shape[1])
+            self.store.append(ids, matrix, timestamps, normalized=normalized)
         self.embed_fn = embed_fn
-        self._row_of_id: Dict[int, int] = {int(i): r for r, i in enumerate(self.ids)}
-        self.dim = self.matrix.shape[1]
+        self._view: Optional[Tuple] = None
+        self._view_version = -1
+
+    @property
+    def dim(self) -> int:
+        return self.store.dim
+
+    # -- live view (monolithic compatibility surface) ------------------------
+
+    def _live_view(self):
+        store = self.store
+        with store.lock:
+            if self._view is not None and self._view_version == store.version:
+                return self._view
+            segs = [s for s in store.segments if s.live_count]
+            if not segs:
+                view = (np.zeros(0, np.int64),
+                        np.zeros((0, store.dim), np.float32),
+                        None, {})
+            elif len(segs) == 1 and segs[0].n_dead == 0:
+                seg = segs[0]  # zero-copy: the segment IS the view
+                view = (seg.ids, seg.matrix, seg.timestamps,
+                        {int(i): r for r, i in enumerate(seg.ids)})
+            else:
+                live = [s.live_mask for s in segs]
+                ids = np.concatenate([s.ids[m] for s, m in zip(segs, live)])
+                mat = np.concatenate(
+                    [s.matrix[m] for s, m in zip(segs, live)])
+                ts = None
+                if segs[0].timestamps is not None:
+                    ts = np.concatenate(
+                        [s.timestamps[m] for s, m in zip(segs, live)])
+                view = (ids, mat, ts,
+                        {int(i): r for r, i in enumerate(ids)})
+            self._view = view
+            self._view_version = store.version
+            return view
+
+    @property
+    def ids(self) -> np.ndarray:
+        return self._live_view()[0]
+
+    @property
+    def matrix(self) -> np.ndarray:
+        return self._live_view()[1]
+
+    @property
+    def timestamps(self) -> Optional[np.ndarray]:
+        return self._live_view()[2]
+
+    @property
+    def _row_of_id(self) -> Dict[int, int]:
+        return self._live_view()[3]
+
+    # -- ingest / delete (the live-corpus entry points) ----------------------
+
+    def ingest(
+        self,
+        ids: Sequence[int],
+        matrix: np.ndarray,
+        timestamps: Optional[Sequence[float]] = None,
+        *,
+        normalized: bool = False,
+    ):
+        """Append a batch as one new sealed segment (warm segments keep
+        their device residency and compiled plans). Returns the segment."""
+        return self.store.append(ids, matrix, timestamps,
+                                 normalized=normalized)
+
+    def delete(self, ids: Sequence[int], *, strict: bool = False) -> int:
+        """Tombstone chunks; only the touched segments' masks change."""
+        return self.store.delete(ids, strict=strict)
+
+    def compact(self, min_live_fraction: float = 1.0) -> int:
+        """Merge sparse segments (see SegmentedCorpusStore.compact)."""
+        return self.store.compact(min_live_fraction)
 
     # -- id <-> row helpers --------------------------------------------------
 
-    def rows_for_ids(self, chunk_ids: Sequence[int]) -> np.ndarray:
-        rows = [self._row_of_id[int(i)] for i in chunk_ids if int(i) in self._row_of_id]
+    def rows_for_ids(
+        self, chunk_ids: Sequence[int], *, strict: bool = False
+    ) -> np.ndarray:
+        """Live-view rows for ``chunk_ids``; unknown ids are dropped, or —
+        with ``strict=True`` — raise a KeyError naming the missing ids."""
+        row_of_id = self._row_of_id
+        rows: List[int] = []
+        missing: List[int] = []
+        for i in chunk_ids:
+            row = row_of_id.get(int(i))
+            if row is None:
+                missing.append(int(i))
+            else:
+                rows.append(row)
+        if missing and strict:
+            raise KeyError(
+                f"ids not in the cache: {missing[:10]}"
+                + (f" (+{len(missing) - 10} more)" if len(missing) > 10
+                   else "")
+            )
         return np.asarray(rows, dtype=np.int64)
 
     def embeddings_for_ids(self, chunk_ids: Sequence[int]) -> np.ndarray:
         rows = self.rows_for_ids(chunk_ids)
         if rows.size == 0:
+            requested = [int(i) for i in chunk_ids]
             raise grammar.GrammarError(
-                f"centroid: none of the ids {list(chunk_ids)[:5]}... exist in the cache"
+                f"centroid: none of the {len(requested)} requested ids "
+                f"exist in the cache (missing: {requested[:10]}"
+                + (f" +{len(requested) - 10} more)" if len(requested) > 10
+                   else ")")
             )
         return self.matrix[rows]
 
@@ -112,24 +229,23 @@ class VectorCache:
             raise ValueError("VectorCache.search_full requires an embed function")
         plan = grammar.parse(tokens, self.embed_fn, self.embeddings_for_ids)
         base = self.search_plan(plan, candidate_ids, now=now, engine=engine)
+        # ONE column-assembly block shared by the early-return and
+        # structural paths (they previously each built their own)
         cols = ["id", "score"]
         if plan.cluster is not None:
             cols.append("cluster")
         if plan.central:
             cols.append("central")
-        if (plan.cluster is None and not plan.central) or not base:
+        if len(cols) == 2 or not base:
             return cols, base
-        cols = ["id", "score"]
         from repro.core import structural
 
         sel_rows = self.rows_for_ids([i for i, _ in base])
         embeds = self.matrix[sel_rows]
         extra = []
         if plan.cluster is not None:
-            cols.append("cluster")
             extra.append(structural.kmeans_labels(embeds, plan.cluster))
         if plan.central:
-            cols.append("central")
             extra.append(structural.centrality(embeds))
         rows = [
             tuple(r) + tuple(float(e[i]) if e.dtype.kind == "f" else int(e[i])
@@ -146,31 +262,44 @@ class VectorCache:
         now: Optional[float] = None,
         engine: Engine = "reference",
     ) -> List[Tuple[int, float]]:
-        sub_rows: Optional[np.ndarray] = None
+        backend = get_backend(engine)
+        ref = time.time() if now is None else now
+
         if candidate_ids is not None:
+            # Phase-1 pre-filtered sub-corpus: gather the (small) live rows
+            # and score them monolithically, as before
             sub_rows = self.rows_for_ids(candidate_ids)
             if sub_rows.size == 0:
                 return []
             matrix = self.matrix[sub_rows]
             ids = self.ids[sub_rows]
-        else:
-            matrix = self.matrix
-            ids = self.ids
+            days_ago = None
+            if plan.decay is not None:
+                if self.timestamps is None:
+                    raise ValueError("decay: requires timestamps in the cache")
+                days_ago = np.maximum(
+                    (ref - self.timestamps[sub_rows]) / SECONDS_PER_DAY, 0.0
+                ).astype(np.float32)
+            k = min(plan.pool, matrix.shape[0])
+            (idx, vals), = backend.score_select(matrix, days_ago, [plan], [k])
+            idx, vals = finalize_candidates(matrix, idx, vals, k, plan)
+            return [(int(ids[i]), float(v)) for i, v in zip(idx, vals)]
 
-        days_ago = None
-        if plan.decay is not None:
-            if self.timestamps is None:
+        # Full corpus: per-segment fused score->select + exact union merge.
+        # The store lock spans snapshot + scoring so ingest/delete land
+        # between searches, never inside one.
+        with self.store.lock:
+            segs = self.store.segments
+            if plan.decay is not None and not self.store.has_timestamps:
                 raise ValueError("decay: requires timestamps in the cache")
-            ts = self.timestamps if sub_rows is None else self.timestamps[sub_rows]
-            ref = time.time() if now is None else now
-            days_ago = np.maximum((ref - ts) / SECONDS_PER_DAY, 0.0).astype(np.float32)
-
-        # Fused score->select: the backend returns only the top-pool
-        # candidates (device backends select on device; the full (N,)
-        # score array never crosses back to this layer).  MMR diverse
-        # plans come back as the oversampled pool and finish host-side.
-        k = min(plan.pool, matrix.shape[0])
-        backend = get_backend(engine)
-        (idx, vals), = backend.score_select(matrix, days_ago, [plan], [k])
-        idx, vals = finalize_candidates(matrix, idx, vals, k, plan)
-        return [(int(ids[i]), float(v)) for i, v in zip(idx, vals)]
+            n_live = self.store.n_live
+            k = min(plan.pool, n_live)
+            (gidx, vals), = score_select_segments(
+                backend, segs, [plan], [k], now=ref)
+        if gidx.size == 0:
+            return []
+        pool_emb = gather_rows(segs, gidx)
+        loc, vals = finalize_candidates(
+            pool_emb, np.arange(gidx.size, dtype=np.int64), vals, k, plan)
+        chunk_ids = gather_ids(segs, gidx[loc])
+        return [(int(i), float(v)) for i, v in zip(chunk_ids, vals)]

@@ -8,8 +8,14 @@ the arithmetic-intensity argument in DESIGN.md §2.1.
 The engine is synchronous-core with a thread-safe front door: requests
 accumulate until `max_batch` or `max_wait_ms`, then one backend scoring
 pass answers all of them.  Scoring and selection route through the shared
-:mod:`repro.core.backends` dispatch — the same code path as the direct
+:mod:`repro.core.backends` dispatch — segment-aware via
+``score_select_segments``, the same code path as the direct
 ``VectorCache`` engine, so batched and direct rankings are identical.
+
+Live corpora: :meth:`ingest` and :meth:`delete` append/tombstone chunks
+between batches (the store lock spans one scoring pass, so a mutation
+never lands inside a batch).  Appends seal a new segment; warm segments
+keep their device residency and compiled plans.
 
 Failure isolation: a bad request (grammar error, decay without
 timestamps) fails ONLY that request — its error re-raises from ``search``
@@ -22,13 +28,14 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import List, Optional, Tuple, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.backends import (ExecutionBackend, finalize_candidates,
-                                 get_backend)
+                                 get_backend, score_select_segments)
 from repro.core.grammar import parse
+from repro.core.segments import gather_ids, gather_rows
 from repro.core.vectorcache import VectorCache
 
 
@@ -79,6 +86,23 @@ class BatchedRetrievalEngine:
         self._stop.set()
         self._worker.join(timeout=2.0)
 
+    def ingest(
+        self,
+        ids: Sequence[int],
+        matrix: np.ndarray,
+        timestamps: Optional[Sequence[float]] = None,
+        *,
+        normalized: bool = False,
+    ):
+        """Append chunks as one sealed segment; lands between batches
+        (the store lock spans a scoring pass). Returns the new segment."""
+        return self.cache.ingest(ids, matrix, timestamps,
+                                 normalized=normalized)
+
+    def delete(self, ids: Sequence[int], *, strict: bool = False) -> int:
+        """Tombstone chunks between batches; returns rows tombstoned."""
+        return self.cache.delete(ids, strict=strict)
+
     # -- batching core -------------------------------------------------------
 
     def _collect(self) -> List[Request]:
@@ -118,16 +142,18 @@ class BatchedRetrievalEngine:
 
     def _serve(self, batch: List[Request]) -> None:
         """One fused backend pass: fold every live request's plan into the
-        (d, B) panels and run ``score_select`` — the corpus is scored ONCE
-        and only per-request candidate lists come back (device backends
-        top-k on device; the (N, B) panel never reaches this thread)."""
+        (d, B) panels and run the segment-aware ``score_select_segments``
+        — every segment is scored ONCE for the whole batch (tombstones
+        masked on device) and only per-request candidate lists come back
+        (the (N, B) panel never reaches this thread)."""
+        store = self.cache.store
         live: List[Request] = []
         plans = []
         for req in batch:
             try:
                 plan = parse(req.tokens, self.cache.embed_fn,
                              self.cache.embeddings_for_ids)
-                if plan.decay is not None and self.cache.timestamps is None:
+                if plan.decay is not None and not store.has_timestamps:
                     raise ValueError("decay: requires timestamps in the cache")
             except Exception as e:  # bad request: fail it, keep the batch
                 self._fail(req, e)
@@ -139,29 +165,32 @@ class BatchedRetrievalEngine:
         if not live:
             return
 
-        matrix = self.cache.matrix
         ref = self.now if self.now is not None else time.time()
-        days = None
-        if self.cache.timestamps is not None:
-            days = np.maximum((ref - self.cache.timestamps) / 86400.0, 0.0)
-
-        n = matrix.shape[0]
-        ks = [min(req.k, n) for req in live]
         try:
-            # per-plan (indices, scores) candidate lists — (pool,)-sized
-            selected = self.backend.score_select(matrix, days, plans, ks)
+            # the lock spans snapshot + scoring: ingest/delete land
+            # BETWEEN batches, never inside one
+            with store.lock:
+                segs = store.segments
+                n_live = store.n_live
+                ks = [min(req.k, n_live) for req in live]
+                # per-plan (global_rows, scores) candidates — (pool,)-sized
+                selected = score_select_segments(
+                    self.backend, segs, plans, ks, now=ref)
         except Exception as e:  # backend failure: fail the whole batch loudly
             for req in live:
                 self._fail(req, e)
             return
 
-        for req, plan, k, (idx, vals) in zip(live, plans, ks, selected):
+        for req, plan, k, (gidx, vals) in zip(live, plans, ks, selected):
             try:
-                idx, vals = finalize_candidates(matrix, idx, vals, k, plan)
+                pool_emb = gather_rows(segs, gidx)
+                loc, vals = finalize_candidates(
+                    pool_emb, np.arange(gidx.size, dtype=np.int64),
+                    vals, k, plan)
+                chunk_ids = gather_ids(segs, gidx[loc])
                 self._finish(
                     req,
-                    [(int(self.cache.ids[i]), float(v))
-                     for i, v in zip(idx, vals)],
+                    [(int(i), float(v)) for i, v in zip(chunk_ids, vals)],
                 )
             except Exception as e:
                 self._fail(req, e)

@@ -4,6 +4,13 @@ One endpoint, two parameters (paper Appendix B): ``flex_search(query)``
 where query is SQL (routed through the materializer) or an ``@preset``.
 Errors come back as explicit structured failures so the agent can rewrite
 and retry — never silent misexecution (paper §7).
+
+Live corpora: ``INSERT INTO chunks`` / ``DELETE FROM chunks`` through
+``flex_search`` (or the direct :meth:`RetrievalService.ingest` /
+:meth:`RetrievalService.delete` methods) keep SQLite, FTS5 and the
+segmented VectorCache in sync — only the touched segment changes.
+:meth:`stats` surfaces query/error counts plus the engine's PlanCache
+(hit/trace/eviction) and device-upload counters and the store shape.
 """
 
 from __future__ import annotations
@@ -11,14 +18,17 @@ from __future__ import annotations
 import dataclasses
 import sqlite3
 import time
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from repro.core.backends import ExecutionBackend, get_backend
 from repro.core.materializer import MaterializeError, Materializer
 from repro.core.vectorcache import VectorCache
 from repro.embed import HashEmbedder
 from repro.sqlio.presets import run_preset
-from repro.sqlio.schema import load_embedding_matrix
+from repro.sqlio.schema import (delete_chunks, insert_chunks,
+                                load_embedding_matrix)
 
 
 @dataclasses.dataclass
@@ -78,3 +88,64 @@ class RetrievalService:
             self.error_count += 1
             return SearchResult(False, error=f"{type(e).__name__}: {e}",
                                 latency_ms=(time.time() - t0) * 1e3)
+
+    # -- live-corpus entry points -------------------------------------------
+
+    def ingest(
+        self,
+        rows: Sequence[tuple],
+        embeddings: Optional[np.ndarray] = None,
+    ) -> int:
+        """Append chunk rows (the ``insert_chunks`` tuple shape) to SQLite
+        + FTS and seal them as ONE new VectorCache segment.  Missing
+        embeddings are computed from content.  Returns rows ingested."""
+        rows = list(rows)
+        if not rows:
+            return 0
+        # validate BEFORE touching SQLite: a duplicate live id would
+        # otherwise REPLACE the row, desyncing FTS and the vector store
+        dupes = [int(r[0]) for r in rows if int(r[0]) in self.cache.store]
+        if dupes:
+            raise ValueError(
+                f"ingest: ids already live in the corpus: {dupes[:10]}"
+                + ("..." if len(dupes) > 10 else "")
+            )
+        if embeddings is None:
+            embeddings = np.stack(
+                [self.embedder(r[3] or "") for r in rows]
+            ).astype(np.float32)
+        insert_chunks(self.conn, rows, embeddings)
+        self.cache.ingest(
+            [r[0] for r in rows], embeddings,
+            [r[4] or 0.0 for r in rows],
+        )
+        return len(rows)
+
+    def delete(self, ids: Sequence[int]) -> int:
+        """Remove chunks from SQLite + FTS, tombstone them in the cache."""
+        removed = delete_chunks(self.conn, ids)
+        if removed:
+            self.cache.delete(removed)
+        return len(removed)
+
+    def stats(self) -> Dict[str, Any]:
+        """Serving + storage + compile-cache counters, one dict.
+
+        ``plan_cache`` (hits/builds/evictions/jax_traces) and
+        ``device_cache`` (uploads/hits/evictions) appear when the resolved
+        backend compiles executables / keeps device-resident segments —
+        the observability half of the PlanCache productionization.
+        """
+        out: Dict[str, Any] = {
+            "engine": self.engine.name,
+            "queries": self.query_count,
+            "errors": self.error_count,
+            "store": self.cache.store.stats(),
+        }
+        plan_cache = getattr(self.engine, "plan_cache", None)
+        if plan_cache is not None:
+            out["plan_cache"] = plan_cache.stats()
+        dev_stats = getattr(self.engine, "device_cache_stats", None)
+        if dev_stats is not None:
+            out["device_cache"] = dev_stats()
+        return out

@@ -8,7 +8,7 @@ and are loaded into the in-memory matrix at startup (paper §3.2).
 from __future__ import annotations
 
 import sqlite3
-from typing import Iterable, Optional, Sequence, Tuple
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -120,6 +120,38 @@ def insert_chunks(
         [(r[0], r[3]) for r in rows],
     )
     conn.commit()
+
+
+def delete_chunks(
+    conn: sqlite3.Connection,
+    ids: Sequence[int],
+    *,
+    fts_table: str = "chunks_fts",
+) -> List[int]:
+    """Remove chunks (rows + FTS sync). Returns the ids actually removed.
+
+    The FTS5 index is external-content, so the 'delete' command needs the
+    old content; rows are fetched first.  Callers keep the VectorCache in
+    sync by tombstoning the same ids (``cache.delete(ids)``) — only the
+    touched segments' masks change.
+    """
+    ids = [int(i) for i in ids]
+    if not ids:
+        return []
+    ph = ",".join("?" * len(ids))
+    rows = conn.execute(
+        f"SELECT id, content FROM _raw_chunks WHERE id IN ({ph})", ids
+    ).fetchall()
+    conn.executemany(
+        f"INSERT INTO {fts_table} ({fts_table}, rowid, content) "
+        f"VALUES ('delete', ?, ?)",
+        [(r[0], r[1] or "") for r in rows],
+    )
+    conn.executemany(
+        "DELETE FROM _raw_chunks WHERE id = ?", [(r[0],) for r in rows]
+    )
+    conn.commit()
+    return [r[0] for r in rows]
 
 
 def insert_sources(conn: sqlite3.Connection, rows: Iterable[tuple]) -> None:

@@ -11,7 +11,8 @@ import subprocess
 import sys
 from pathlib import Path
 
-from benchmarks.check_regression import DEFAULT_TOL, compare, merge_min
+from benchmarks.check_regression import (DEFAULT_TOL, compare, compare_all,
+                                         merge_min)
 
 REPO = Path(__file__).resolve().parents[1]
 
@@ -101,6 +102,45 @@ def test_merge_min_takes_fastest_row_per_backend():
     part = _snap({"sharded": {"skipped": "flaky platform"}})
     full = _snap({"sharded": _row(20.0)})
     assert merge_min([part, full])["backends"]["sharded"]["total_ms"] == 20.0
+
+
+def test_delta_section_gated_same_rules():
+    """The delta-ingest scenario gates under the same tolerance; its
+    failure lines carry the section tag."""
+    base = _snap({"jit-jax": _row(30.0)})
+    base["delta_backends"] = {"jit-jax": _row(40.0)}
+    ok = _snap({"jit-jax": _row(30.0)})
+    ok["delta_backends"] = {"jit-jax": _row(45.0)}
+    failures, notes = compare_all(ok, base, DEFAULT_TOL)
+    assert failures == []
+    assert any(n.startswith("delta_backends/") for n in notes)
+    bad = _snap({"jit-jax": _row(30.0)})
+    bad["delta_backends"] = {"jit-jax": _row(70.0)}
+    failures, _ = compare_all(bad, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "delta_backends/jit-jax" in failures[0]
+
+
+def test_delta_section_dropped_entirely_fails():
+    """Removing the whole liveness scenario is section-level silent
+    omission; a PRE-liveness baseline without the section gates nothing."""
+    base = _snap({"jit-jax": _row(30.0)})
+    base["delta_backends"] = {"jit-jax": _row(40.0)}
+    new = _snap({"jit-jax": _row(30.0)})
+    failures, _ = compare_all(new, base, DEFAULT_TOL)
+    assert len(failures) == 1 and "delta-ingest" in failures[0]
+    old_base = _snap({"jit-jax": _row(30.0)})
+    assert compare_all(new, old_base, DEFAULT_TOL)[0] == []
+
+
+def test_merge_min_folds_delta_section():
+    a = _snap({"jit-jax": _row(30.0)})
+    a["delta_backends"] = {"jit-jax": _row(50.0)}
+    b = _snap({"jit-jax": _row(31.0)})
+    b["delta_backends"] = {"jit-jax": _row(44.0)}
+    merged = merge_min([a, b])
+    assert merged["backends"]["jit-jax"]["total_ms"] == 30.0
+    assert merged["delta_backends"]["jit-jax"]["total_ms"] == 44.0
 
 
 def test_gate_cli_green_on_committed_baseline(tmp_path):

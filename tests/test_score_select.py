@@ -167,9 +167,17 @@ def test_plan_structure_buckets():
     assert PlanStructure.of([mk(4)], w, n).suppress_bucket == 4
     assert PlanStructure.of([mk(5)], w, n).suppress_bucket == 8
     assert PlanStructure.of([mk(0)], w, n).suppress_bucket == 0
-    # top-k width pads to powers of two, clamped to the corpus size
+    # top-k width pads to powers of two, clamped to the ROW BUCKET (the
+    # device row grid is itself pow2-padded; masking hides the padding)
     assert PlanStructure.of([mk(1)], [10], n).width == 16
-    assert PlanStructure.of([mk(1)], [1000], n).width == n
+    assert PlanStructure.of([mk(1)], [1000], n).width == 256
+    # the row count keys by pow2 bucket, not exactly: nearby segment /
+    # pre-filter sizes share one compiled executable
+    assert (PlanStructure.of([mk(1)], [10], 220)
+            == PlanStructure.of([mk(1)], [10], 255))
+    assert (PlanStructure.of([mk(1)], [10], 220)
+            != PlanStructure.of([mk(1)], [10], 257))
+    assert PlanStructure.of([mk(1)], [10], n).n_rows == 256
     # distinct texts, same shape -> the SAME structure (cache key)
     s1 = PlanStructure.of([_plan("first text")], [10], n)
     s2 = PlanStructure.of([_plan("totally different text")], [10], n)
@@ -224,20 +232,30 @@ def test_plan_cache_decay_presence_is_structural():
     assert be.plan_cache.jax_traces == 2
 
 
-def test_plan_cache_fifo_eviction_bounds_executables():
-    """Exact n_rows keys mean varied pre-filter sizes each compile once;
-    FIFO eviction bounds how many executables stay retained."""
+def test_plan_cache_lru_eviction_bounds_executables():
+    """Varied row buckets each compile once; LRU eviction bounds how many
+    executables stay retained, and a HIT refreshes the entry (the hot
+    segments' executables survive a stream of one-off shapes)."""
     cache = PlanCache(lambda s: ("fn", s), maxsize=2)
     mk = lambda n: PlanStructure(batch=1, n_rows=n, has_decay=True,
                                  suppress_bucket=1, width=16)
-    cache.get(mk(100))
-    cache.get(mk(200))
-    cache.get(mk(300))          # evicts mk(100)
+    cache.get(mk(128))
+    cache.get(mk(256))
+    cache.get(mk(512))          # evicts mk(128) (least recently used)
     assert len(cache) == 2 and cache.evictions == 1
-    cache.get(mk(300))          # still cached
+    cache.get(mk(512))          # still cached
     assert cache.hits == 1
-    cache.get(mk(100))          # rebuilt after eviction
+    cache.get(mk(128))          # rebuilt after eviction
     assert cache.builds == 4
+    # LRU, not FIFO: a hit refreshes — the OLDER-inserted but
+    # recently-USED entry survives the next eviction
+    cache.get(mk(128))
+    cache.get(mk(512))          # refresh 512 (inserted before 128)
+    cache.get(mk(1024))         # evicts 128, NOT the refreshed 512
+    assert cache.get(mk(512)) is not None
+    assert cache.builds == 5    # 512 never rebuilt
+    stats = cache.stats()
+    assert stats["entries"] == 2 and stats["builds"] == 5
 
 
 def test_sharded_plan_cache_zero_retraces():

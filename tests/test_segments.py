@@ -1,0 +1,443 @@
+"""Segmented corpus store: equivalence, delta-ingest, and cache contracts.
+
+The storage-refactor invariants:
+
+1. **Segment equivalence** — any segmentation of the corpus (1, 2, 7
+   segments; with/without tombstones; an all-tombstoned segment; an empty
+   append) produces bit-identical candidate ids — and scores to 1e-5 —
+   to the monolithic reference oracle over the live rows, on ALL five
+   backends, including the diverse/MMR finishing path.
+2. **Delta ingest is delta-cost** — appending a segment to a warm store
+   uploads and traces ONLY the new segment (pinned via the device-matrix
+   ``uploads`` counter and ``PlanCache.jax_traces``).
+3. Store mechanics: append/delete/compact, the id index, the live view,
+   and the engine/materializer/service threading of ingest + delete.
+"""
+
+import sqlite3
+
+import numpy as np
+import pytest
+
+from repro.core import modulations as M
+from repro.core.backends import (JitJaxBackend, get_backend, list_backends,
+                                 score_select_segments)
+from repro.core.segments import (SegmentedCorpusStore, gather_ids,
+                                 gather_rows)
+from repro.core.vectorcache import VectorCache
+from repro.embed import HashEmbedder
+
+BACKENDS = list_backends()
+NOW = 90 * 86400.0
+EMB = HashEmbedder(32)
+
+
+def _corpus(n=230, d=32, seed=3):
+    rng = np.random.default_rng(seed)
+    mat = rng.standard_normal((n, d)).astype(np.float32)
+    mat /= np.linalg.norm(mat, axis=1, keepdims=True)
+    days = rng.uniform(0.0, 60.0, n).astype(np.float32)
+    ts = NOW - days.astype(np.float64) * 86400.0
+    return mat, ts
+
+
+def _composed_plan(mat, *, diverse=True, decay=True):
+    q = M.l2_normalize(EMB("how the retrieval system works"))
+    a = M.l2_normalize(EMB("prototype sketch"))
+    b = M.l2_normalize(EMB("production deployment"))
+    x1 = M.l2_normalize(EMB("website landing page"))
+    return M.ModulationPlan(
+        query=q,
+        trajectory=M.TrajectorySpec(direction=b - a),
+        decay=M.DecaySpec(half_life_days=14.0) if decay else None,
+        suppress=(M.SuppressSpec(direction=x1),),
+        diverse=M.DiverseSpec() if diverse else None,
+        pool=25,
+    )
+
+
+def _store_from_splits(mat, ts, splits, deleted=()):
+    """Build a store by appending `splits` row-ranges, then tombstoning."""
+    store = SegmentedCorpusStore(dim=mat.shape[1])
+    start = 0
+    for size in splits:
+        store.append(np.arange(start, start + size), mat[start:start + size],
+                     ts[start:start + size], normalized=True)
+        start += size
+    assert start == mat.shape[0]
+    if len(deleted):
+        store.delete(deleted)
+    return store
+
+
+SEGMENTATIONS = [
+    ("one-segment", [230], ()),
+    ("two-segments", [150, 80], ()),
+    ("seven-segments", [40, 40, 40, 40, 40, 20, 10], ()),
+    ("tombstones", [150, 80], tuple(range(10, 60)) + (200, 229)),
+    ("all-dead-middle-segment", [100, 30, 100],
+     tuple(range(100, 130)) + (5, 140)),
+    ("tombstones-seven", [40, 40, 40, 40, 40, 20, 10],
+     tuple(range(0, 230, 3))),
+]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize(
+    "splits,deleted", [(s, d) for _, s, d in SEGMENTATIONS],
+    ids=[name for name, _, _ in SEGMENTATIONS])
+def test_segmented_search_matches_monolithic_oracle(backend, splits, deleted):
+    """Any segmentation == the monolithic reference oracle on live rows,
+    through the full VectorCache search path (incl. MMR finishing)."""
+    mat, ts = _corpus()
+    store = _store_from_splits(mat, ts, splits, deleted)
+    vc = VectorCache(store=store, embed_fn=EMB)
+
+    live = np.setdiff1d(np.arange(mat.shape[0]), np.asarray(deleted, int))
+    mono = VectorCache(live, mat[live], ts[live], EMB, normalized=True)
+
+    for diverse in (False, True):
+        plan = _composed_plan(mat, diverse=diverse)
+        ref = mono.search_plan(plan, now=NOW, engine="reference-numpy")
+        got = vc.search_plan(plan, now=NOW, engine=backend)
+        assert [i for i, _ in got] == [i for i, _ in ref]
+        np.testing.assert_allclose([s for _, s in got], [s for _, s in ref],
+                                   atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_segmented_batch_mixed_k(backend):
+    """The raw driver: mixed plans + per-request k over a tombstoned
+    3-segment store match per-plan monolithic oracles."""
+    mat, ts = _corpus(seed=11)
+    deleted = tuple(range(60, 90))
+    store = _store_from_splits(mat, ts, [100, 60, 70], deleted)
+    segs = store.segments
+    live = np.setdiff1d(np.arange(mat.shape[0]), np.asarray(deleted, int))
+    days = ((NOW - ts) / 86400.0).astype(np.float32)
+
+    plans = [_composed_plan(mat, diverse=False),
+             _composed_plan(mat, diverse=False, decay=False)]
+    ks = [7, 31]
+    got = score_select_segments(backend, segs, plans, ks, now=NOW)
+    assert len(got) == 2
+    for (gidx, vals), plan, k in zip(got, plans, ks):
+        oracle = np.asarray(M.modulate_scores(mat[live], days[live], plan))
+        order = np.argsort(-oracle, kind="stable")[:k]
+        # global rows == original row ids here (ids = arange, no offsets
+        # shifted by deletes), so compare via gathered ids
+        assert list(gather_ids(segs, gidx)) == list(live[order])
+        np.testing.assert_allclose(vals, oracle[order], atol=5e-5, rtol=5e-5)
+        np.testing.assert_allclose(
+            gather_rows(segs, gidx), mat[live[order]], atol=0, rtol=0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_append_and_all_tombstoned_store(backend):
+    mat, ts = _corpus(seed=17)
+    store = _store_from_splits(mat, ts, [230])
+    # an empty append is a no-op: no segment, no version bump
+    v = store.version
+    assert store.append([], np.zeros((0, 32), np.float32), []) is None
+    assert store.version == v and store.n_segments == 1
+    # a fully-tombstoned store returns empty results, not an error
+    store.delete(range(230))
+    vc = VectorCache(store=store, embed_fn=EMB)
+    assert vc.search_plan(_composed_plan(mat), now=NOW, engine=backend) == []
+
+
+def test_delta_append_uploads_and_traces_only_the_new_segment():
+    """THE delta-ingest contract: append to a warm store re-uploads and
+    retraces only the new segment; the hot segment stays warm."""
+    mat, ts = _corpus(n=300, seed=23)
+    be = JitJaxBackend()
+    store = _store_from_splits(mat[:260], ts[:260], [260])
+    vc = VectorCache(store=store, embed_fn=EMB)
+    plan = _composed_plan(mat, diverse=False)
+
+    for _ in range(2):  # warm the store: one upload, one trace
+        vc.search_plan(plan, now=NOW, engine=be)
+    assert be.uploads == 1
+    assert be.plan_cache.jax_traces == 1
+
+    # append 40 chunks -> one NEW upload (the delta), one NEW trace (a
+    # genuinely new row bucket: 64 vs 512); the 260-row segment's device
+    # copy and compiled executable are untouched
+    vc.ingest(np.arange(260, 300), mat[260:300], ts[260:300],
+              normalized=True)
+    vc.search_plan(plan, now=NOW, engine=be)
+    assert be.uploads == 2
+    assert be.plan_cache.jax_traces == 2
+
+    # steady state: queries on the 2-segment store hit everything warm
+    vc.search_plan(plan, now=NOW, engine=be)
+    assert be.uploads == 2
+    assert be.plan_cache.jax_traces == 2
+    assert be.device_cache_stats()["entries"] == 2
+
+    # deletes flip tombstones only: no upload, no retrace
+    vc.delete(np.arange(260, 280))
+    vc.search_plan(plan, now=NOW, engine=be)
+    assert be.uploads == 2
+    assert be.plan_cache.jax_traces == 2
+
+    # compaction rewrites the half-dead segment (20 live rows -> the 32
+    # bucket: one trace for the genuinely new shape), then stays warm
+    store.compact(0.9)
+    vc.search_plan(plan, now=NOW, engine=be)
+    assert be.plan_cache.jax_traces == 3
+    vc.search_plan(plan, now=NOW, engine=be)
+    assert be.plan_cache.jax_traces == 3
+    # the 260-row segment NEVER re-uploaded through any of this
+    assert be.uploads == 3  # base + delta + compacted
+
+
+# ---------------------------------------------------------------------------
+# Store mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_store_append_delete_compact_index():
+    mat, ts = _corpus(n=100, seed=5)
+    store = _store_from_splits(mat, ts, [60, 40])
+    assert store.n_rows == 100 and store.n_live == 100
+    assert 17 in store and 99 in store
+
+    assert store.delete([10, 11, 99]) == 3
+    assert store.n_live == 97 and 99 not in store
+    # deleting again is a no-op (not an error) unless strict
+    assert store.delete([10]) == 0
+    with pytest.raises(KeyError, match="not live"):
+        store.delete([10], strict=True)
+
+    # duplicate live ids are rejected; re-appending a tombstoned id is OK
+    with pytest.raises(ValueError, match="already live"):
+        store.append([17], mat[:1], ts[:1])
+    store.append([10], mat[10:11], ts[10:11], normalized=True)
+    assert 10 in store and store.n_live == 98
+
+    # compact: segments below the live fraction merge, dead rows drop
+    segs_before = store.n_segments
+    assert segs_before == 3
+    compacted = store.compact(1.0)  # everything with any tombstone
+    assert compacted == 2
+    assert store.n_rows == store.n_live == 98
+    assert store.n_segments == 2
+    # the index survives compaction
+    np.testing.assert_allclose(
+        store.embedding_for_id(10), mat[10] / np.linalg.norm(mat[10]),
+        atol=1e-6)
+
+    stats = store.stats()
+    assert stats["segments"] == 2 and stats["compactions"] == 1
+
+
+def test_store_timestamp_consistency_and_dim_checks():
+    store = SegmentedCorpusStore(dim=8)
+    store.append([1, 2], np.eye(8, dtype=np.float32)[:2], [1.0, 2.0])
+    with pytest.raises(ValueError, match="timestamp presence"):
+        store.append([3], np.eye(8, dtype=np.float32)[:1], None)
+    with pytest.raises(ValueError, match="dim"):
+        store.append([3], np.ones((1, 4), np.float32), [3.0])
+    with pytest.raises(ValueError, match="inconsistent"):
+        store.append([3, 4], np.ones((1, 8), np.float32), [3.0])
+
+
+def test_vectorcache_live_view_and_lookup_helpers():
+    mat, ts = _corpus(n=50, seed=7)
+    vc = VectorCache(np.arange(50), mat, ts, EMB)
+    # zero-copy single-segment view
+    assert vc.matrix.shape == (50, 32) and vc.ids.shape == (50,)
+    vc.delete([3, 4])
+    assert vc.matrix.shape == (48, 32)
+    assert list(vc.ids[:5]) == [0, 1, 2, 5, 6]
+
+    # rows_for_ids: silent drop by default, strict names the missing
+    assert list(vc.rows_for_ids([0, 3, 5])) == [0, 3]
+    with pytest.raises(KeyError, match=r"\[3, 777\]"):
+        vc.rows_for_ids([0, 3, 777], strict=True)
+    # embeddings_for_ids reports WHICH ids are missing
+    from repro.core.grammar import GrammarError
+    with pytest.raises(GrammarError, match=r"\[888, 999\]"):
+        vc.embeddings_for_ids([888, 999])
+
+
+def test_batched_engine_ingest_between_batches():
+    emb = HashEmbedder(64)
+    texts = [f"item group {i % 5} tail {i}" for i in range(120)]
+    vc = VectorCache(np.arange(120), emb.embed_batch(texts),
+                     np.linspace(0, 89 * 86400, 120), emb)
+    from repro.serve.engine import BatchedRetrievalEngine
+
+    eng = BatchedRetrievalEngine(vc, max_batch=4, now=NOW)
+    try:
+        before = eng.search("similar:group 1 tail", 5)
+        new_texts = [f"brand new doc about group 1 tail {i}"
+                     for i in range(8)]
+        eng.ingest(np.arange(500, 508), emb.embed_batch(new_texts),
+                   np.full(8, NOW))
+        after = eng.search("similar:brand new doc group 1 tail", 8)
+        assert any(i >= 500 for i, _ in after)
+        eng.delete(np.arange(500, 508))
+        gone = eng.search("similar:brand new doc group 1 tail", 8)
+        assert all(i < 500 for i, _ in gone)
+        # batched ranking still matches the direct path post-mutation
+        direct = vc.search("similar:group 1 tail", now=NOW)[:5]
+        again = eng.search("similar:group 1 tail", 5)
+        assert [i for i, _ in again] == [i for i, _ in direct]
+        assert [i for i, _ in before] == [i for i, _ in direct]
+    finally:
+        eng.close()
+
+
+def test_materializer_sql_ingest_surface():
+    """INSERT/DELETE against the chunks view: SQLite + FTS + cache segment
+    stay in sync; other writes stay rejected."""
+    from repro.core.materializer import Materializer
+    from repro.data.corpus import build_database, generate_corpus
+    from repro.sqlio.schema import load_embedding_matrix
+
+    emb = HashEmbedder(64)
+    chunks = generate_corpus(n_chunks=200, n_sessions=10, seed=9)
+    conn = sqlite3.connect(":memory:")
+    build_database(conn, chunks, emb)
+    ids, matrix, ts = load_embedding_matrix(conn, 64)
+    cache = VectorCache(ids, matrix, ts, emb)
+    mz = Materializer(conn, cache, now=1_770_000_000.0)
+    n0 = cache.store.n_live
+    new_id = int(ids.max()) + 1
+
+    cols, rows = mz.execute(
+        "INSERT INTO chunks (id, session_id, type, content, created_at) "
+        f"VALUES ({new_id}, 'sess-new', 'assistant', "
+        "'zanzibar exotic retrieval topic', 1769000000.0)"
+    )
+    assert cols == ["id"] and rows == [(new_id,)]
+    assert cache.store.n_live == n0 + 1
+    assert cache.store.n_segments == 2  # one delta segment, nothing else
+
+    # the new chunk is immediately searchable through all three phases
+    _, found = mz.execute(
+        "SELECT v.id, v.score FROM vec_ops('similar:zanzibar exotic "
+        "retrieval topic') v ORDER BY v.score DESC LIMIT 3")
+    assert found and found[0][0] == new_id
+    _, kw = mz.execute(f"SELECT k.id FROM keyword('zanzibar') k")
+    assert (new_id,) in kw
+
+    # DELETE tombstones the cache row and drops SQLite + FTS rows
+    cols, rows = mz.execute(f"DELETE FROM chunks WHERE id = {new_id}")
+    assert rows == [(new_id,)]
+    assert cache.store.n_live == n0
+    assert conn.execute("SELECT COUNT(*) FROM _raw_chunks WHERE id=?",
+                        (new_id,)).fetchone()[0] == 0
+    _, found = mz.execute(
+        "SELECT v.id FROM vec_ops('similar:zanzibar exotic retrieval "
+        "topic') v LIMIT 3")
+    assert (new_id,) not in found
+    _, kw = mz.execute("SELECT k.id FROM keyword('zanzibar') k")
+    assert (new_id,) not in kw
+
+    # everything else stays read-only
+    from repro.core.materializer import MaterializeError
+    with pytest.raises(MaterializeError):
+        mz.execute("DELETE FROM _raw_chunks")
+    with pytest.raises(MaterializeError):
+        mz.execute("UPDATE _raw_chunks SET content='x'")
+
+
+def test_materializer_failed_ingest_rolls_back():
+    """A failing INSERT leaves NO trace: no pending transaction rows, no
+    FTS postings, no cache segment — the agent's retry works."""
+    from repro.core.materializer import MaterializeError, Materializer
+    from repro.data.corpus import build_database, generate_corpus
+    from repro.sqlio.schema import load_embedding_matrix
+
+    emb = HashEmbedder(64)
+    conn = sqlite3.connect(":memory:")
+    build_database(conn, generate_corpus(n_chunks=50, n_sessions=4, seed=21),
+                   emb)
+    ids, matrix, ts = load_embedding_matrix(conn, 64)
+    cache = VectorCache(ids, matrix, ts, embed_fn=None)  # no embed fn
+    mz = Materializer(conn, cache)
+    with pytest.raises(MaterializeError, match="embed"):
+        mz.execute("INSERT INTO chunks (id, session_id, type, content, "
+                   "created_at) VALUES (7777, 's', 'assistant', 'orphan "
+                   "row', 1.0)")
+    assert not conn.in_transaction  # rolled back, not left pending
+    conn.commit()  # an unrelated commit must not resurrect the row
+    assert conn.execute("SELECT COUNT(*) FROM _raw_chunks WHERE id=7777"
+                        ).fetchone()[0] == 0
+    assert cache.store.n_segments == 1
+    # a duplicate-id INSERT fails explicitly and also rolls back fully
+    cache.embed_fn = emb
+    dup = int(ids[0])
+    with pytest.raises(MaterializeError):
+        mz.execute("INSERT INTO chunks (id, session_id, type, content, "
+                   f"created_at) VALUES ({dup}, 's', 'assistant', 'x', 1.0)")
+    assert not conn.in_transaction
+
+
+def test_service_ingest_rejects_duplicate_ids_before_writing():
+    from repro.data.corpus import build_database, generate_corpus
+    from repro.serve.retrieval import RetrievalService
+
+    emb = HashEmbedder(64)
+    conn = sqlite3.connect(":memory:")
+    build_database(conn, generate_corpus(n_chunks=50, n_sessions=4, seed=25),
+                   emb)
+    svc = RetrievalService(conn, dim=64, embedder=emb)
+    live_id = int(svc.cache.ids[0])
+    old_content = conn.execute(
+        "SELECT content FROM _raw_chunks WHERE id=?", (live_id,)
+    ).fetchone()[0]
+    with pytest.raises(ValueError, match="already live"):
+        svc.ingest([(live_id, "s", "assistant", "replacement", 2.0,
+                     0, None, None, None, None)])
+    # SQLite row untouched (no silent REPLACE), store consistent
+    assert conn.execute("SELECT content FROM _raw_chunks WHERE id=?",
+                        (live_id,)).fetchone()[0] == old_content
+    assert svc.cache.store.n_segments == 1
+
+
+def test_retrieval_service_ingest_delete_and_stats():
+    from repro.data.corpus import build_database, generate_corpus
+    from repro.serve.retrieval import RetrievalService
+
+    emb = HashEmbedder(64)
+    chunks = generate_corpus(n_chunks=150, n_sessions=8, seed=13)
+    conn = sqlite3.connect(":memory:")
+    build_database(conn, chunks, emb)
+    svc = RetrievalService(conn, dim=64, embedder=emb,
+                           now=1_770_000_000.0, engine="jit-jax")
+    new_id = 10_000
+    n = svc.ingest([(new_id, "sess-x", "assistant",
+                     "quetzal plumage iridescent", 1_769_000_000.0,
+                     0, "proj", None, None, None)])
+    assert n == 1
+    res = svc.flex_search(
+        "SELECT v.id FROM vec_ops('similar:quetzal plumage iridescent') v "
+        "ORDER BY v.score DESC LIMIT 3")
+    assert res.ok and (new_id,) in res.rows
+
+    stats = svc.stats()
+    assert stats["engine"] == "jit-jax"
+    assert stats["store"]["segments"] == 2
+    assert stats["plan_cache"]["jax_traces"] >= 1
+    assert stats["device_cache"]["uploads"] >= 1
+    assert stats["queries"] == 1
+
+    assert svc.delete([new_id]) == 1
+    res = svc.flex_search(
+        "SELECT v.id FROM vec_ops('similar:quetzal plumage iridescent') v "
+        "LIMIT 3")
+    assert res.ok and (new_id,) not in res.rows
+    assert svc.stats()["store"]["tombstoned"] == 1
+
+    # SQL-surface ingest through the single agent endpoint too
+    res = svc.flex_search(
+        "INSERT INTO chunks (id, session_id, type, content, created_at) "
+        "VALUES (10001, 'sess-y', 'assistant', 'axolotl regeneration', "
+        "1769000100.0)")
+    assert res.ok and res.rows == [(10001,)]
+    res = svc.flex_search("DELETE FROM chunks WHERE id = 10001")
+    assert res.ok and res.rows == [(10001,)]
