@@ -11,9 +11,11 @@ runners is one-sided — a contended run only ever reads slow — so CI runs
 the smoke bench twice and a single noisy window cannot fail the gate,
 while a real regression shows up in every run.
 
-Per-backend ``total_ms`` — both the ``backends`` section (fused
-score->select latency) and the ``delta_backends`` section (the
-append+query / delete+query liveness cycle over the segmented store) — is
+Per-row ``total_ms`` — the ``backends`` section (fused score->select
+latency), the ``delta_backends`` section (the append+query / delete+query
+liveness cycle over the segmented store) and the ``serve_throughput``
+section (the offered-load sweep through the continuous-batching engine,
+one row per scheduler mode: ``sync_core`` / ``pipelined``) — is
 compared against the committed ``BENCH_pem.smoke.json`` baseline; the gate
 fails on a > ``FLEX_BENCH_TOL`` (default 1.5) ratio for ANY backend that
 is not recorded as skipped in the baseline.  A backend present in the
@@ -46,10 +48,11 @@ def compare(
 ) -> Tuple[List[str], List[str]]:
     """Diff one per-backend section of two snapshot dicts.
 
-    ``section`` is ``"backends"`` (the fused query path) or
-    ``"delta_backends"`` (the append+query/delete+query liveness cycle);
-    both gate under the same tolerance and skipped-backend rules.
-    Returns (failures, notes)."""
+    ``section`` is ``"backends"`` (the fused query path),
+    ``"delta_backends"`` (the append+query/delete+query liveness cycle)
+    or ``"serve_throughput"`` (the offered-load serving sweep, rows keyed
+    by scheduler mode); all gate under the same tolerance and
+    skipped-row rules.  Returns (failures, notes)."""
     failures: List[str] = []
     notes: List[str] = []
     tag = "" if section == "backends" else f"{section}/"
@@ -101,19 +104,20 @@ def compare_all(
 ) -> Tuple[List[str], List[str]]:
     """Gate every per-backend section the baseline carries.
 
-    A baseline without ``delta_backends`` (pre-liveness snapshots) just
-    skips that section; a baseline WITH it and a new snapshot missing the
-    whole section entirely fails — dropping the scenario is the section-
-    level flavor of silent omission."""
+    A baseline without ``delta_backends`` / ``serve_throughput``
+    (pre-liveness / pre-async snapshots) just skips that section; a
+    baseline WITH it and a new snapshot missing the whole section
+    entirely fails — dropping the scenario is the section-level flavor
+    of silent omission."""
     failures: List[str] = []
     notes: List[str] = []
-    for section in ("backends", "delta_backends"):
+    for section in ("backends", "delta_backends", "serve_throughput"):
         if section not in baseline:
             continue
         if section != "backends" and section not in new:
             failures.append(
                 f"{section}: section present in baseline but missing from "
-                f"the new snapshot (the delta-ingest scenario was dropped)")
+                f"the new snapshot (the scenario was dropped)")
             continue
         f, n = compare(new, baseline, tol, section)
         failures += f
@@ -126,7 +130,7 @@ def merge_min(snapshots: List[Dict]) -> Dict:
     the fastest measured row wins (one-sided noise); skips survive only
     if a backend never measured."""
     merged: Dict = dict(snapshots[0])
-    for section in ("backends", "delta_backends"):
+    for section in ("backends", "delta_backends", "serve_throughput"):
         backends: Dict[str, Dict] = {}
         for snap in snapshots:
             for name, row in snap.get(section, {}).items():

@@ -26,6 +26,31 @@ the regression gate diffs — so a change that silently re-uploads or
 re-traces warm segments on ingest shows up as a gate failure, not an
 assumption.
 
+``serve_throughput`` measures the SERVING core, not a single pass: an
+offered-load sweep (closed loop, ``load`` concurrent clients) through the
+continuous-batching engine in both modes — ``sync_core`` (the legacy
+one-thread phasing: parse in the serve loop, host tail serialized behind
+the device pass) and ``pipelined`` (admission-time parse, tail of batch
+*i* overlapped with the device pass of batch *i+1*).  Per mode:
+sustained QPS and client-side p50/p99 latency per load, the engine's
+``overlapped_batches`` counter, and ``total_ms`` (the whole sweep's wall
+time) — the number the regression gate diffs.
+
+Two extra rows, ``sync_core_emudev`` / ``pipelined_emudev``, run the
+same closed-loop workload through an EMULATED two-stage pipeline with
+fixed stage durations: the scoring pass models an accelerator busy for
+``EMUDEV_DEVICE_MS`` (wall time, zero host CPU — what a TPU pass looks
+like from the host) and the host tail models ``EMUDEV_TAIL_MS`` of
+finishing work on a dedicated core.  With deterministic stages the two
+walls are pure functions of the SCHEDULER: the sync core pays
+``device + tail`` per batch, the pipelined core ``max(device, tail)``.
+That makes the overlap win pinnable BY THE GATE on any host — including
+CPU-quota-limited CI containers, where overlapping two CPU-bound numpy
+stages cannot beat serial execution because the cgroup throttles the
+whole process once the quota is spent (the ``host.parallel_efficiency``
+calibration field records which regime produced the real-workload rows:
+~2 means two usable cores, ~1 means a one-core quota).
+
 ``FLEX_BENCH_OUT`` overrides the output path (the CI gate writes the
 smoke-scale run to a scratch file so the committed full-scale snapshot
 is never clobbered).
@@ -138,9 +163,205 @@ def _bench_delta():
     return rows
 
 
+SERVE_LOADS = (4, 16, 48)     # concurrent closed-loop clients per level
+SERVE_REQUESTS = 64           # requests per load level
+SERVE_TOPICS = (
+    "server lifecycle and restart policy",
+    "identity provenance chain",
+    "rendering pipeline cache",
+    "auth token refresh flow",
+    "database schema migration",
+)
+EMUDEV_DEVICE_MS = 40.0       # emulated accelerator pass per batch
+EMUDEV_TAIL_MS = 30.0         # emulated host finishing stage per batch
+EMUDEV_REQUESTS = 32
+EMUDEV_BATCH = 8
+
+
+def _measure_parallel_efficiency() -> float:
+    """Calibrate the host: 2-thread speedup on cache-resident matmuls.
+
+    ~2.0 means two genuinely usable cores (the pipelined real-workload
+    rows can beat sync); ~1.0 means a one-core CPU quota (overlapping
+    two CPU-bound stages cannot beat serial execution, and only the
+    emulated-device rows can show the pipeline win)."""
+    import threading
+    import time as _time
+
+    a = np.random.default_rng(0).standard_normal((256, 256)).astype(np.float32)
+
+    def burn():
+        x = a
+        for _ in range(400):
+            x = a @ a
+        return x
+
+    burn()
+    t0 = _time.perf_counter()
+    burn()
+    single = _time.perf_counter() - t0
+    threads = [threading.Thread(target=burn) for _ in range(2)]
+    t0 = _time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dual = _time.perf_counter() - t0
+    return round(2.0 * single / dual, 2)
+
+
+def _closed_loop(engine, queries, load, k, repeats=2):
+    """Serve ``queries`` with ``load`` closed-loop clients; returns
+    (best_wall_s, latencies_of_best_run_ms)."""
+    import concurrent.futures as cf
+    import time as _time
+
+    lats: list = []
+
+    def client(q):
+        t0 = _time.perf_counter()
+        out = engine.search(q, k)
+        lats.append(_time.perf_counter() - t0)
+        return out
+
+    best_wall, best_lats = None, None
+    for _ in range(repeats):  # min: one-sided runner noise
+        lats.clear()
+        t0 = _time.perf_counter()
+        with cf.ThreadPoolExecutor(load) as ex:
+            list(ex.map(client, queries))
+        wall = _time.perf_counter() - t0
+        if best_wall is None or wall < best_wall:
+            best_wall = wall
+            best_lats = np.sort(np.asarray(lats)) * 1e3
+    return best_wall, best_lats
+
+
+def _bench_serve():
+    """Offered-load sweep: sync-core vs pipelined continuous batching.
+
+    Closed-loop clients (each issues its next request as soon as the
+    previous answers) so the offered load is the concurrency level; the
+    query mix is diverse/MMR-heavy so the host tail has real work for the
+    pipeline to overlap with the next device pass.
+    """
+    from repro.serve.engine import BatchedRetrievalEngine
+
+    conn, cache, chunks, emb = production_db()
+    queries = [
+        f"similar:{SERVE_TOPICS[i % len(SERVE_TOPICS)]} variant {i} "
+        f"suppress:website landing page decay:30 diverse pool:200"
+        for i in range(SERVE_REQUESTS)
+    ]
+
+    rows = {}
+    for mode, pipelined in (("sync_core", False), ("pipelined", True)):
+        engine = BatchedRetrievalEngine(
+            cache, max_batch=16, max_wait_ms=1.0, now=NOW, engine="fused",
+            pipeline=pipelined)
+        try:
+            engine.search(queries[0], 10)  # warm the plan/device caches
+            total_s = 0.0
+            sweep = {}
+            for load in SERVE_LOADS:
+                wall, lat_ms = _closed_loop(engine, queries, load, k=10)
+                total_s += wall
+                sweep[str(load)] = {
+                    "qps": round(SERVE_REQUESTS / wall, 1),
+                    "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+                    "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+                }
+                emit(f"pem/serve_{mode}_load{load}", wall,
+                     f"{SERVE_REQUESTS} reqs qps={sweep[str(load)]['qps']}")
+            rows[mode] = {
+                "total_ms": round(total_s * 1e3, 3),
+                "requests": SERVE_REQUESTS,
+                "loads": list(SERVE_LOADS),
+                "overlapped_batches": engine.overlapped_batches,
+                "batches_served": engine.batches_served,
+                "sweep": sweep,
+            }
+        finally:
+            engine.close()
+    rows.update(_bench_serve_emudev())
+    return rows
+
+
+def _bench_serve_emudev():
+    """The pinned overlap win: deterministic two-stage pipeline probe.
+
+    The scoring pass models an accelerator busy for ``EMUDEV_DEVICE_MS``
+    (wall time, zero host CPU); the host tail models ``EMUDEV_TAIL_MS``
+    of finishing work on a dedicated core.  Fixed stage durations make
+    the walls pure functions of the SCHEDULER — sync pays
+    ``device + tail`` per batch, pipelined ``max(device, tail)`` — so
+    breaking the pipeline shows up as a >1.5x regression of
+    ``pipelined_emudev`` on any host, CPU quota or not.
+    """
+    import time as _time
+
+    from repro.core.backends import FusedNumpyBackend
+    from repro.core.vectorcache import VectorCache
+    from repro.embed import HashEmbedder
+    from repro.serve.engine import BatchedRetrievalEngine
+
+    class EmulatedDeviceBackend(FusedNumpyBackend):
+        name = "emulated-device"
+
+        def score_select(self, *args, **kwargs):
+            out = super().score_select(*args, **kwargs)  # tiny corpus: ~free
+            _time.sleep(EMUDEV_DEVICE_MS / 1e3)          # device busy, host free
+            return out
+
+    class EmulatedTailEngine(BatchedRetrievalEngine):
+        def _host_tail(self, work):
+            _time.sleep(EMUDEV_TAIL_MS / 1e3)  # host finishing stage
+            super()._host_tail(work)
+
+    emb = HashEmbedder(DIM)
+    rng = np.random.default_rng(3)
+    n = 2048
+    cache = VectorCache(np.arange(n),
+                        rng.standard_normal((n, DIM)).astype(np.float32),
+                        np.full(n, NOW - 86400.0), emb)
+    queries = [
+        f"similar:{SERVE_TOPICS[i % len(SERVE_TOPICS)]} variant {i}"
+        for i in range(EMUDEV_REQUESTS)
+    ]
+
+    rows = {}
+    for mode, pipelined in (("sync_core_emudev", False),
+                            ("pipelined_emudev", True)):
+        engine = EmulatedTailEngine(
+            cache, max_batch=EMUDEV_BATCH, max_wait_ms=4.0, now=NOW,
+            engine=EmulatedDeviceBackend(), pipeline=pipelined)
+        try:
+            engine.search(queries[0], 10)
+            wall, lat_ms = _closed_loop(engine, queries, EMUDEV_REQUESTS,
+                                        k=10)
+            qps = round(EMUDEV_REQUESTS / wall, 1)
+            emit(f"pem/serve_{mode}", wall,
+                 f"{EMUDEV_REQUESTS} reqs qps={qps} "
+                 f"overlap={engine.overlapped_batches}")
+            rows[mode] = {
+                "total_ms": round(wall * 1e3, 3),
+                "qps": qps,
+                "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+                "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+                "device_ms_per_batch": EMUDEV_DEVICE_MS,
+                "tail_ms_per_batch": EMUDEV_TAIL_MS,
+                "overlapped_batches": engine.overlapped_batches,
+                "batches_served": engine.batches_served,
+            }
+        finally:
+            engine.close()
+    return rows
+
+
 def run() -> None:
     n, rows = _bench_backends()
     delta_rows = _bench_delta()
+    serve_rows = _bench_serve()
     snapshot = {
         "bench": "pem_phase2_composed",
         "tokens": TOKENS,
@@ -148,8 +369,10 @@ def run() -> None:
         "scale": SCALE,
         "dim": DIM,
         "platform": platform.machine(),
+        "host": {"parallel_efficiency": _measure_parallel_efficiency()},
         "backends": rows,
         "delta_backends": delta_rows,
+        "serve_throughput": serve_rows,
     }
     SNAPSHOT_PATH.write_text(json.dumps(snapshot, indent=2) + "\n")
     print(f"# wrote {SNAPSHOT_PATH}", flush=True)

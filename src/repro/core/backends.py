@@ -78,6 +78,7 @@ __all__ = [
     "selection_width",
     "finalize_candidates",
     "score_select_segments",
+    "finalize_segment_candidates",
 ]
 
 Candidates = Tuple[np.ndarray, np.ndarray]  # (indices, scores), descending
@@ -797,6 +798,15 @@ def score_select_segments(
 ) -> List[Candidates]:
     """Fused score->select over a SEGMENTED corpus (repro.core.segments).
 
+    This is the DEVICE PASS of the segmented pipeline — the stage that
+    touches device memory (per-segment scoring + on-device selection).
+    Its host counterpart is :func:`finalize_segment_candidates` (gather +
+    truncate/MMR + id resolution), which needs only the immutable segment
+    snapshot — never the store lock or the device — so a serving core can
+    overlap the host tail of batch *i* with the device pass of batch
+    *i+1* (the async engine in :mod:`repro.serve.engine` does exactly
+    that).
+
     Each segment scores independently through ``backend.score_select``
     (its tombstones masked to -inf on device before selection), then the
     per-segment top-k candidates merge on the host — the same two-stage
@@ -867,6 +877,46 @@ def score_select_segments(
         order = np.argsort(-cat_v, kind="stable")[:w]
         merged.append((cat_i[order], cat_v[order]))
     return merged
+
+
+def finalize_segment_candidates(
+    segments: Sequence,
+    plans: Sequence[M.ModulationPlan],
+    ks: Sequence[int],
+    selected: Sequence[Candidates],
+) -> List[List[Tuple[int, float]]]:
+    """HOST TAIL of the segmented pipeline — the separable counterpart of
+    :func:`score_select_segments` (the device pass).
+
+    Takes the per-plan ``(global_rows, scores)`` candidates the device
+    pass produced and finishes them on the host: gather the (pool,)-sized
+    candidate embeddings, run :func:`finalize_candidates` (truncate, or
+    MMR over the oversampled pool), and resolve global rows to chunk ids.
+    Returns per-plan ``[(chunk_id, score), ...]`` descending — the shape
+    every serving surface hands back.
+
+    Reads ONLY the immutable segment arrays of the snapshot it is given
+    (sealed ids/matrix never change; compaction swaps the store's list
+    but old segments stay valid), so it is safe to run WITHOUT the store
+    lock, concurrently with the next batch's device pass — that overlap
+    is the async engine's pipeline win.  Every consumer (direct
+    ``VectorCache.search_plan``, the batched engine) calls this one
+    function, so batched and direct rankings stay bit-identical.
+    """
+    from repro.core.segments import gather_ids, gather_rows
+
+    out: List[List[Tuple[int, float]]] = []
+    for plan, k, (gidx, vals) in zip(plans, ks, selected):
+        if gidx.size == 0:
+            out.append([])
+            continue
+        pool_emb = gather_rows(segments, gidx)
+        loc, final_vals = finalize_candidates(
+            pool_emb, np.arange(gidx.size, dtype=np.int64), vals, k, plan)
+        chunk_ids = gather_ids(segments, gidx[loc])
+        out.append([(int(i), float(v))
+                    for i, v in zip(chunk_ids, final_vals)])
+    return out
 
 
 def select_candidates(

@@ -41,6 +41,7 @@ from repro.core import modulations as M
 
 __all__ = [
     "CorpusSegment",
+    "CompactionPolicy",
     "SegmentedCorpusStore",
     "segment_offsets",
     "gather_rows",
@@ -138,6 +139,62 @@ def gather_ids(
         sel = seg_idx == s
         out[sel] = segments[s].ids[local[sel]]
     return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """Background-compaction heuristic (ROADMAP follow-on to delta ingest).
+
+    Two pressures, matching how a live store degrades:
+
+    * **liveness** — a segment whose live fraction fell below
+      ``min_live_fraction`` wastes score/mask work on dead rows every
+      batch; fold it.
+    * **segment count** — many small fully-live segments (a stream of
+      delta appends) cost one scoring launch + one merge slot each; when
+      the store exceeds ``max_segments``, merge the SMALLEST segments
+      (fewest rows re-uploaded/re-traced) down to the cap.
+
+    The policy only picks victims; :meth:`SegmentedCorpusStore.maybe_compact`
+    folds them under the store lock, so a compaction can never land inside
+    a scoring pass (the device pass holds the same lock).  The serving
+    scheduler (:mod:`repro.serve.engine`) invokes it in idle gaps between
+    batches.
+    """
+
+    min_live_fraction: float = 0.7
+    max_segments: int = 8
+
+    def should_compact(self, store: "SegmentedCorpusStore") -> bool:
+        """Cheap lock-free check the scheduler runs each idle tick; a True
+        here is re-validated under the lock by :meth:`victims`."""
+        segs = store._segments
+        if len(segs) > self.max_segments:
+            return True
+        return any(s.n_rows and s.live_fraction < self.min_live_fraction
+                   for s in segs)
+
+    def victims(self, segments: Sequence[CorpusSegment]) -> List[CorpusSegment]:
+        """Segments to fold into one fresh sealed segment (may be empty)."""
+        victims = [s for s in segments
+                   if s.n_rows and s.live_fraction < self.min_live_fraction]
+        # count pressure: folding m victims yields <= 1 merged segment,
+        # so keep adding the smallest until the post-fold count fits
+        if len(segments) > self.max_segments:
+            chosen = set(id(s) for s in victims)
+            by_size = sorted((s for s in segments if s.n_rows),
+                             key=lambda s: s.n_rows)
+            for s in by_size:
+                if len(segments) - len(victims) + 1 <= self.max_segments:
+                    break
+                if id(s) not in chosen:
+                    victims.append(s)
+                    chosen.add(id(s))
+            # keep store order so the merged segment lands predictably
+            order = {id(s): i for i, s in enumerate(segments)}
+            victims.sort(key=lambda s: order[id(s)])
+        return victims if len(victims) > 1 or any(
+            s.n_dead for s in victims) else []
 
 
 class SegmentedCorpusStore:
@@ -309,37 +366,54 @@ class SegmentedCorpusStore:
         with self.lock:
             victims = [s for s in self._segments
                        if s.n_rows and s.live_fraction < min_live_fraction]
-            if not victims:
-                return 0
-            keep = [s for s in self._segments if s not in victims]
-            first_at = self._segments.index(victims[0])
-            insert_at = sum(1 for s in self._segments[:first_at]
-                            if s not in victims)
-            live_parts = [s for s in victims if s.live_count]
-            merged: Optional[CorpusSegment] = None
-            if live_parts:
-                ids = np.concatenate([s.ids[s.live_mask] for s in live_parts])
-                mat = np.concatenate(
-                    [s.matrix[s.live_mask] for s in live_parts])
-                ts = None
-                if live_parts[0].timestamps is not None:
-                    ts = np.concatenate(
-                        [s.timestamps[s.live_mask] for s in live_parts])
-                merged = CorpusSegment(
-                    seg_id=self._next_seg_id,
-                    ids=ids,
-                    matrix=np.ascontiguousarray(mat),
-                    timestamps=ts,
-                    tombstones=np.zeros(ids.shape[0], dtype=bool),
-                )
-                self._next_seg_id += 1
-                for row, cid in enumerate(ids):
-                    self._loc[int(cid)] = (merged, row)
-                keep.insert(insert_at, merged)
-            self._segments = keep
-            self.version += 1
-            self.compactions += 1
-            return len(victims)
+            return self._fold(victims)
+
+    def maybe_compact(self, policy: CompactionPolicy) -> int:
+        """Apply ``policy`` if it names victims; returns segments folded.
+
+        Takes the store lock for the victim choice AND the fold, so the
+        decision can't race a concurrent append/delete — and since the
+        scoring device pass holds the same lock, a compaction triggered
+        from the serving scheduler's idle gaps can never land inside a
+        scoring pass.
+        """
+        with self.lock:
+            return self._fold(policy.victims(self._segments))
+
+    def _fold(self, victims: List[CorpusSegment]) -> int:
+        """Merge ``victims`` (dead rows dropped) into one fresh sealed
+        segment at the first victim's position; caller holds the lock."""
+        if not victims:
+            return 0
+        keep = [s for s in self._segments if s not in victims]
+        first_at = self._segments.index(victims[0])
+        insert_at = sum(1 for s in self._segments[:first_at]
+                        if s not in victims)
+        live_parts = [s for s in victims if s.live_count]
+        merged: Optional[CorpusSegment] = None
+        if live_parts:
+            ids = np.concatenate([s.ids[s.live_mask] for s in live_parts])
+            mat = np.concatenate(
+                [s.matrix[s.live_mask] for s in live_parts])
+            ts = None
+            if live_parts[0].timestamps is not None:
+                ts = np.concatenate(
+                    [s.timestamps[s.live_mask] for s in live_parts])
+            merged = CorpusSegment(
+                seg_id=self._next_seg_id,
+                ids=ids,
+                matrix=np.ascontiguousarray(mat),
+                timestamps=ts,
+                tombstones=np.zeros(ids.shape[0], dtype=bool),
+            )
+            self._next_seg_id += 1
+            for row, cid in enumerate(ids):
+                self._loc[int(cid)] = (merged, row)
+            keep.insert(insert_at, merged)
+        self._segments = keep
+        self.version += 1
+        self.compactions += 1
+        return len(victims)
 
     # -- id lookups ----------------------------------------------------------
 

@@ -31,9 +31,9 @@ import numpy as np
 from repro.core import grammar
 from repro.core import modulations as M
 from repro.core.backends import (ExecutionBackend, finalize_candidates,
-                                 get_backend, score_select_segments)
-from repro.core.segments import (SegmentedCorpusStore, gather_ids,
-                                 gather_rows)
+                                 finalize_segment_candidates, get_backend,
+                                 score_select_segments)
+from repro.core.segments import SegmentedCorpusStore
 
 Engine = Union[str, ExecutionBackend]
 
@@ -178,8 +178,15 @@ class VectorCache:
         return np.asarray(rows, dtype=np.int64)
 
     def embeddings_for_ids(self, chunk_ids: Sequence[int]) -> np.ndarray:
-        rows = self.rows_for_ids(chunk_ids)
-        if rows.size == 0:
+        # ONE view snapshot for both the id lookup and the row gather:
+        # admission-time parse runs on many client threads while the
+        # engine's idle-gap compaction may rebuild the live view, so
+        # resolving rows against one view and indexing another would
+        # gather wrong rows (or IndexError past the compacted end)
+        _, matrix, _, row_of_id = self._live_view()
+        rows = [row_of_id[int(i)] for i in chunk_ids
+                if int(i) in row_of_id]
+        if not rows:
             requested = [int(i) for i in chunk_ids]
             raise grammar.GrammarError(
                 f"centroid: none of the {len(requested)} requested ids "
@@ -187,7 +194,7 @@ class VectorCache:
                 + (f" +{len(requested) - 10} more)" if len(requested) > 10
                    else ")")
             )
-        return self.matrix[rows]
+        return matrix[np.asarray(rows, dtype=np.int64)]
 
     # -- the search entry point ----------------------------------------------
 
@@ -285,21 +292,19 @@ class VectorCache:
             idx, vals = finalize_candidates(matrix, idx, vals, k, plan)
             return [(int(ids[i]), float(v)) for i, v in zip(idx, vals)]
 
-        # Full corpus: per-segment fused score->select + exact union merge.
-        # The store lock spans snapshot + scoring so ingest/delete land
-        # between searches, never inside one.
+        # Full corpus: the two-stage segmented pipeline.  The DEVICE PASS
+        # (score_select_segments) runs under the store lock so ingest /
+        # delete land between searches, never inside one; the HOST TAIL
+        # (finalize_segment_candidates: gather + MMR + id resolution)
+        # needs only the immutable segment snapshot, so it runs outside
+        # the lock — the same split the async engine pipelines.
         with self.store.lock:
             segs = self.store.segments
             if plan.decay is not None and not self.store.has_timestamps:
                 raise ValueError("decay: requires timestamps in the cache")
             n_live = self.store.n_live
             k = min(plan.pool, n_live)
-            (gidx, vals), = score_select_segments(
+            selected = score_select_segments(
                 backend, segs, [plan], [k], now=ref)
-        if gidx.size == 0:
-            return []
-        pool_emb = gather_rows(segs, gidx)
-        loc, vals = finalize_candidates(
-            pool_emb, np.arange(gidx.size, dtype=np.int64), vals, k, plan)
-        chunk_ids = gather_ids(segs, gidx[loc])
-        return [(int(i), float(v)) for i, v in zip(chunk_ids, vals)]
+        (results,) = finalize_segment_candidates(segs, [plan], [k], selected)
+        return results

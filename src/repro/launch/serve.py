@@ -16,8 +16,6 @@ import concurrent.futures as cf
 import sqlite3
 import time
 
-import numpy as np
-
 from repro.data.corpus import build_database, generate_corpus
 from repro.embed import HashEmbedder
 from repro.serve.engine import BatchedRetrievalEngine
@@ -33,6 +31,9 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--sql", default=None,
                     help="run one SQL statement through flex_search and exit")
+    ap.add_argument("--sync-core", action="store_true",
+                    help="serialize the host tail behind the device pass "
+                         "(the pre-async engine behavior, for comparison)")
     args = ap.parse_args()
 
     emb = HashEmbedder(128)
@@ -53,20 +54,23 @@ def main() -> None:
         print(f"-- {len(res.rows)} rows in {res.latency_ms:.1f} ms")
         return
 
-    engine = BatchedRetrievalEngine(svc.cache, max_batch=32, now=NOW)
+    engine = BatchedRetrievalEngine(svc.cache, max_batch=32, now=NOW,
+                                    pipeline=not args.sync_core)
     topics = ["server lifecycle", "identity provenance", "rendering pipeline",
               "auth token", "database migration"]
     reqs = [f"similar:{topics[i % len(topics)]} diverse decay:30"
             for i in range(args.queries)]
     t0 = time.time()
-    lats = []
     with cf.ThreadPoolExecutor(max_workers=32) as ex:
         for out in ex.map(lambda q: engine.search(q, args.k), reqs):
             assert len(out) == args.k
     wall = time.time() - t0
+    stats = engine.stats()
+    core = "sync-core" if args.sync_core else "pipelined"
     print(f"served {args.queries} queries in {wall*1e3:.0f} ms "
           f"({args.queries/wall:.0f} q/s) across "
-          f"{engine.batches_served} fused batches")
+          f"{stats['batches_served']} fused batches [{core}; "
+          f"{stats['overlapped_batches']} overlapped]")
     engine.close()
 
 

@@ -1,56 +1,147 @@
-"""Batched serving engine: request micro-batching over the PEM kernel.
+"""Async continuous-batching serving engine (request micro-batching + pipelining).
 
-The paper serves one agent query at a time (desktop MCP). At fleet scale,
+The paper serves one agent query at a time (desktop MCP).  At fleet scale,
 queries are MICRO-BATCHED so the corpus matrix is streamed once per batch
-(pem_score's (d, B) query panel): the scoring cost is amortized B ways —
-the arithmetic-intensity argument in DESIGN.md §2.1.
+(pem_score's (d, B) query panel) — the arithmetic-intensity argument in
+DESIGN.md §2.1 — and successive batches are PIPELINED: the Phase-2 path
+splits into a device pass (``score_select_segments``: per-segment fused
+score->select under the store lock) and a host tail
+(``finalize_segment_candidates``: gather + MMR + id resolution over the
+immutable segment snapshot, no lock needed), and the scheduler overlaps
+the host tail of batch *i* with the device pass of batch *i+1* instead of
+serializing behind it (Vextra's middleware argument: admission decoupled
+from backend execution; Bruch frames re-ranking as a separable stage).
 
-The engine is synchronous-core with a thread-safe front door: requests
-accumulate until `max_batch` or `max_wait_ms`, then one backend scoring
-pass answers all of them.  Scoring and selection route through the shared
-:mod:`repro.core.backends` dispatch — segment-aware via
-``score_select_segments``, the same code path as the direct
-``VectorCache`` engine, so batched and direct rankings are identical.
+The core is an **asyncio event loop** on a private thread:
+
+* **admission** — ``search`` (sync facade, thread-safe from any thread)
+  and ``asearch`` (awaitable from any event loop) enqueue a
+  :class:`Request`.  The queue is BOUNDED: past ``max_queue`` in-flight
+  requests, admission rejects immediately with :class:`QueueFullError`
+  (backpressure beats unbounded latency).  Parsing/validation happens AT
+  admission, on the caller's thread: a bad request (grammar error, decay
+  without timestamps) fails fast without ever consuming a queue slot,
+  parse work spreads across client threads instead of serializing on the
+  device stage, and the device pass stays dominated by the GIL-releasing
+  matmul — which is what makes the stage overlap real parallelism.
+* **collect** — the scheduler lingers ``max_wait_ms`` after the first
+  arrival (up to ``max_batch``), then drops requests whose deadline
+  already passed (:class:`DeadlineExceededError`, counted in
+  ``deadline_misses``) and serves the rest highest-``priority``-first
+  (FIFO within a priority).
+* **pipeline** — one device pass and one host tail may be in flight at
+  once (two single-thread executors); ``overlapped_batches`` counts
+  batches whose device pass ran while the previous tail was still
+  finishing.  ``pipeline=False`` reproduces the PRE-ASYNC synchronous
+  core faithfully — parsing serialized inside the serve loop (not at
+  admission) and the host tail serialized behind the device pass, the
+  old one-thread strict collect→score→finalize phasing — kept as the
+  benchmark comparator (`serve_throughput`) and conservative fallback.
+* **idle gaps** — between batches the scheduler runs store maintenance:
+  a :class:`~repro.core.segments.CompactionPolicy`, when configured,
+  folds sparse/fragmented segments.  Compaction shares the device
+  executor AND the store lock with the scoring pass, so it can never
+  land inside one.
+
+Latency accounting uses ``time.monotonic()`` end to end, so an NTP step
+can't produce negative or inflated latencies.  ``close()`` drains the
+queue: every request not yet served fails with :class:`EngineClosedError`
+instead of hanging into its timeout.
 
 Live corpora: :meth:`ingest` and :meth:`delete` append/tombstone chunks
-between batches (the store lock spans one scoring pass, so a mutation
-never lands inside a batch).  Appends seal a new segment; warm segments
-keep their device residency and compiled plans.
-
-Failure isolation: a bad request (grammar error, decay without
-timestamps) fails ONLY that request — its error re-raises from ``search``
-— while the rest of the batch is served normally.
+between batches (the store lock spans one device pass, so a mutation
+never lands inside a batch).  Failure isolation is per request: a bad
+request (grammar error, decay without timestamps) fails ONLY that
+request; a backend failure fails its batch loudly.  Scoring routes
+through the shared :mod:`repro.core.backends` dispatch — the same device
+pass + host tail as the direct ``VectorCache`` engine, so batched and
+direct rankings are bit-identical.
 """
 
 from __future__ import annotations
 
+import asyncio
+import concurrent.futures as cf
 import dataclasses
-import queue
+import itertools
 import threading
 import time
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.backends import (ExecutionBackend, finalize_candidates,
-                                 get_backend, score_select_segments)
+from repro.core.backends import (ExecutionBackend,
+                                 finalize_segment_candidates, get_backend,
+                                 score_select_segments)
 from repro.core.grammar import parse
-from repro.core.segments import gather_ids, gather_rows
+from repro.core.segments import CompactionPolicy
 from repro.core.vectorcache import VectorCache
+
+__all__ = [
+    "BatchedRetrievalEngine",
+    "Request",
+    "EngineClosedError",
+    "QueueFullError",
+    "DeadlineExceededError",
+]
+
+_IDLE_TICK_S = 0.05  # scheduler wake period when the queue is empty
+
+
+class EngineClosedError(RuntimeError):
+    """The engine was closed; the request was drained, not served."""
+
+
+class QueueFullError(RuntimeError):
+    """Admission rejected: the bounded queue is at capacity (backpressure)."""
+
+
+class DeadlineExceededError(TimeoutError):
+    """The request's deadline passed before a batch could serve it."""
+
+
+_seq = itertools.count()
 
 
 @dataclasses.dataclass
 class Request:
     tokens: str
     k: int = 10
-    _event: threading.Event = dataclasses.field(default_factory=threading.Event)
-    _result: Optional[List[Tuple[int, float]]] = None
-    _error: Optional[Exception] = None
-    enqueued_at: float = dataclasses.field(default_factory=time.time)
+    priority: int = 0                  # higher serves sooner at collect time
+    deadline_ms: Optional[float] = None  # relative to enqueue; None = never
+    # monotonic clock: NTP steps can't produce negative/inflated latencies
+    enqueued_at: float = dataclasses.field(default_factory=time.monotonic)
     latency_ms: float = 0.0
+    plan: Optional[Any] = None         # parsed at admission (see _submit)
+    seq: int = dataclasses.field(default_factory=lambda: next(_seq))
+    future: "cf.Future[List[Tuple[int, float]]]" = dataclasses.field(
+        default_factory=cf.Future)
+
+    def expired(self, now_monotonic: float) -> bool:
+        if self.deadline_ms is None:
+            return False
+        return (now_monotonic - self.enqueued_at) * 1e3 > self.deadline_ms
+
+
+@dataclasses.dataclass
+class _TailWork:
+    """One batch's hand-off from the device pass to the host tail."""
+
+    requests: List[Request]
+    plans: List[Any]
+    segments: Tuple  # immutable snapshot; safe to read without the lock
+    ks: List[int]
+    selected: List[Tuple[np.ndarray, np.ndarray]]
 
 
 class BatchedRetrievalEngine:
+    """Continuous-batching retrieval engine with a sync facade.
+
+    ``search()`` keeps the original thread-safe blocking contract (the
+    materializer path and every existing caller work unchanged);
+    ``asearch()`` is the awaitable entry point for async servers.
+    """
+
     def __init__(
         self,
         cache: VectorCache,
@@ -58,33 +149,115 @@ class BatchedRetrievalEngine:
         max_wait_ms: float = 2.0,
         now: Optional[float] = None,
         engine: Union[str, ExecutionBackend] = "fused",
+        *,
+        max_queue: int = 256,
+        pipeline: bool = True,
+        compaction: Optional[CompactionPolicy] = None,
     ):
         self.cache = cache
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
         self.now = now
         self.backend = get_backend(engine)
-        self._q: "queue.Queue[Request]" = queue.Queue()
-        self._stop = threading.Event()
-        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self.max_queue = max_queue
+        self.pipeline = pipeline
+        self.compaction = compaction
+
+        # counters (single-writer or benign int bumps, same as the store's)
         self.batches_served = 0
         self.requests_served = 0
-        self._worker.start()
+        self.rejected = 0            # admissions refused at capacity
+        self.deadline_misses = 0     # requests expired at collect time
+        self.overlapped_batches = 0  # device pass ran while prev tail ran
+        self.compactions_run = 0     # idle-gap compactions that folded
 
-    # -- public API --------------------------------------------------------
+        self._depth = 0              # queued, not yet collected into a batch
+        self._admission_lock = threading.Lock()
+        self._closed = False         # no new admissions (set by close())
+        self._closing = False        # loop-confined shutdown flag
+        self._done = threading.Event()
 
-    def search(self, tokens: str, k: int = 10, timeout: float = 30.0):
-        req = Request(tokens=tokens, k=k)
-        self._q.put(req)
-        if not req._event.wait(timeout):
-            raise TimeoutError("retrieval request timed out")
-        if req._error is not None:
-            raise req._error
-        return req._result
+        self._pending: List[Request] = []       # loop-confined
+        self._arrival = asyncio.Event()         # loop-confined
+        self._tail_fut: Optional[asyncio.Future] = None
+
+        # one thread per pipeline stage: the device pass and the host tail
+        # each get a dedicated executor, so exactly one of each runs at a
+        # time and the two stages genuinely overlap
+        self._dev_pool = cf.ThreadPoolExecutor(
+            1, thread_name_prefix="flexvec-device")
+        self._tail_pool = cf.ThreadPoolExecutor(
+            1, thread_name_prefix="flexvec-tail")
+
+        self._loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(
+            target=self._loop.run_forever, name="flexvec-scheduler",
+            daemon=True)
+        self._thread.start()
+        self._scheduler_fut = asyncio.run_coroutine_threadsafe(
+            self._scheduler(), self._loop)
+
+    # -- public API ----------------------------------------------------------
+
+    def search(
+        self,
+        tokens: str,
+        k: int = 10,
+        timeout: float = 30.0,
+        *,
+        priority: int = 0,
+        deadline_ms: Optional[float] = None,
+    ) -> List[Tuple[int, float]]:
+        """Blocking search (thread-safe).  Raises :class:`QueueFullError`
+        at capacity, :class:`DeadlineExceededError` past ``deadline_ms``,
+        :class:`EngineClosedError` after :meth:`close`."""
+        req = Request(tokens=tokens, k=k, priority=priority,
+                      deadline_ms=deadline_ms)
+        self._submit(req)
+        try:
+            return req.future.result(timeout)
+        except DeadlineExceededError:
+            raise
+        except cf.TimeoutError:
+            raise TimeoutError("retrieval request timed out") from None
+
+    async def asearch(
+        self,
+        tokens: str,
+        k: int = 10,
+        *,
+        priority: int = 0,
+        deadline_ms: Optional[float] = None,
+    ) -> List[Tuple[int, float]]:
+        """Awaitable search: usable from ANY event loop (the engine runs
+        its own private loop; results cross via the request future)."""
+        req = Request(tokens=tokens, k=k, priority=priority,
+                      deadline_ms=deadline_ms)
+        self._submit(req)
+        return await asyncio.wrap_future(req.future)
 
     def close(self) -> None:
-        self._stop.set()
-        self._worker.join(timeout=2.0)
+        """Stop the scheduler and DRAIN the queue: every request not yet
+        served fails with :class:`EngineClosedError` immediately — nothing
+        hangs into its timeout."""
+        with self._admission_lock:
+            if self._closed:
+                return
+            self._closed = True
+        try:
+            self._loop.call_soon_threadsafe(self._signal_close)
+        except RuntimeError:  # loop already stopped
+            pass
+        self._done.wait(timeout=30.0)
+        self._thread.join(timeout=2.0)
+        if not self._thread.is_alive():
+            # closing the loop makes a racing _submit's
+            # call_soon_threadsafe raise (-> EngineClosedError) instead
+            # of silently enqueueing onto a dead loop, and releases the
+            # loop's fds
+            self._loop.close()
+        self._dev_pool.shutdown(wait=False)
+        self._tail_pool.shutdown(wait=False)
 
     def ingest(
         self,
@@ -95,7 +268,7 @@ class BatchedRetrievalEngine:
         normalized: bool = False,
     ):
         """Append chunks as one sealed segment; lands between batches
-        (the store lock spans a scoring pass). Returns the new segment."""
+        (the store lock spans one device pass). Returns the new segment."""
         return self.cache.ingest(ids, matrix, timestamps,
                                  normalized=normalized)
 
@@ -103,94 +276,290 @@ class BatchedRetrievalEngine:
         """Tombstone chunks between batches; returns rows tombstoned."""
         return self.cache.delete(ids, strict=strict)
 
-    # -- batching core -------------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        """Requests admitted but not yet collected into a batch."""
+        with self._admission_lock:
+            return self._depth
 
-    def _collect(self) -> List[Request]:
+    def stats(self) -> Dict[str, int]:
+        """Serving counters (surfaced via ``RetrievalService.stats()``)."""
+        return {
+            "queue_depth": self.queue_depth,
+            "max_queue": self.max_queue,
+            "batches_served": self.batches_served,
+            "requests_served": self.requests_served,
+            "rejected": self.rejected,
+            "deadline_misses": self.deadline_misses,
+            "overlapped_batches": self.overlapped_batches,
+            "compactions_run": self.compactions_run,
+        }
+
+    # -- admission -----------------------------------------------------------
+
+    def _submit(self, req: Request) -> None:
+        with self._admission_lock:
+            if self._closed:
+                raise EngineClosedError("engine is closed")
+            if self._depth >= self.max_queue:
+                self.rejected += 1
+                raise QueueFullError(
+                    f"admission queue at capacity ({self.max_queue}); "
+                    f"retry with backoff")
+            self._depth += 1  # slot reserved before the (costly) parse
+        if self.pipeline:
+            try:
+                # parse + validate on the CALLER's thread: bad requests
+                # fail fast (no queue slot held), parse work spreads
+                # across client threads instead of serializing on the
+                # device stage, which stays matmul-dominated.  The sync-
+                # core comparator keeps the legacy behavior (parse inside
+                # the serve loop, errors delivered via the future).
+                req.plan = self._parse(req)
+            except Exception:
+                self._dec_depth(1)
+                raise
         try:
-            first = self._q.get(timeout=0.1)
-        except queue.Empty:
+            self._loop.call_soon_threadsafe(self._admit, req)
+        except RuntimeError:  # loop closed between the check and the call
+            self._dec_depth(1)
+            raise EngineClosedError("engine is closed") from None
+
+    def _dec_depth(self, n: int) -> None:
+        with self._admission_lock:
+            self._depth -= n
+
+    def _parse(self, req: Request):
+        plan = parse(req.tokens, self.cache.embed_fn,
+                     self.cache.embeddings_for_ids)
+        if plan.decay is not None and not self.cache.store.has_timestamps:
+            raise ValueError("decay: requires timestamps in the cache")
+        return plan
+
+    def _admit(self, req: Request) -> None:  # loop thread
+        if self._closing:
+            self._fail(req, EngineClosedError(
+                "engine closed before the request was served"))
+            return
+        self._pending.append(req)
+        self._arrival.set()
+
+    def _signal_close(self) -> None:  # loop thread
+        self._closing = True
+        self._arrival.set()
+
+    # -- scheduler (loop thread) ---------------------------------------------
+
+    async def _scheduler(self) -> None:
+        try:
+            while not self._closing:
+                batch = await self._collect()
+                if self._closing:
+                    # already depth-decremented at collect; fail in place
+                    for req in batch:
+                        self._fail(req, EngineClosedError(
+                            "engine closed before the request was served"),
+                            count_depth=False)
+                    break
+                if not batch:
+                    await self._idle_maintenance()
+                    continue
+                await self._dispatch(batch)
+        finally:
+            pending, self._pending = self._pending, []
+            for req in pending:
+                self._fail(req, EngineClosedError(
+                    "engine closed before the request was served"))
+            if self._tail_fut is not None:
+                try:
+                    await self._tail_fut
+                except Exception:
+                    pass
+            self._done.set()
+            self._loop.call_soon(self._loop.stop)
+
+    async def _collect(self) -> List[Request]:
+        """One admission window: first arrival, then linger ``max_wait_ms``
+        (or until ``max_batch`` are pending); expire deadlines; pick the
+        highest-priority ``max_batch`` (FIFO within a priority)."""
+        if not self._pending:
+            self._arrival.clear()
+            try:
+                await asyncio.wait_for(self._arrival.wait(), _IDLE_TICK_S)
+            except asyncio.TimeoutError:
+                return []
+        if self._closing:
             return []
-        batch = [first]
-        deadline = time.time() + self.max_wait_ms / 1e3
-        while len(batch) < self.max_batch:
-            remaining = deadline - time.time()
+        deadline = self._loop.time() + self.max_wait_ms / 1e3
+        while len(self._pending) < self.max_batch:
+            remaining = deadline - self._loop.time()
             if remaining <= 0:
                 break
+            self._arrival.clear()
             try:
-                batch.append(self._q.get(timeout=remaining))
-            except queue.Empty:
+                await asyncio.wait_for(self._arrival.wait(), remaining)
+            except asyncio.TimeoutError:
                 break
+            if self._closing:
+                return []
+
+        now_mono = time.monotonic()
+        live: List[Request] = []
+        expired: List[Request] = []
+        for req in self._pending:
+            (expired if req.expired(now_mono) else live).append(req)
+        for req in expired:
+            self.deadline_misses += 1
+            self._fail(req, DeadlineExceededError(
+                f"deadline of {req.deadline_ms:.1f} ms passed before the "
+                f"request reached a batch"))
+        live.sort(key=lambda r: (-r.priority, r.seq))
+        batch, self._pending = live[:self.max_batch], live[self.max_batch:]
+        self._dec_depth(len(batch))
         return batch
 
-    def _loop(self) -> None:
-        while not self._stop.is_set():
-            batch = self._collect()
-            if not batch:
-                continue
-            self._serve(batch)
+    async def _idle_maintenance(self) -> None:
+        """Store maintenance in the scheduler's idle gaps.  Compaction
+        runs on the DEVICE executor and takes the store lock, so it can
+        never land inside a scoring pass — and never even queues behind
+        one mid-batch, because the executor is busy exactly then."""
+        policy = self.compaction
+        if policy is None:
+            return
+        store = self.cache.store
+        if not policy.should_compact(store):
+            return
+        folded = await self._loop.run_in_executor(
+            self._dev_pool, store.maybe_compact, policy)
+        if folded:
+            self.compactions_run += 1
 
-    def _fail(self, req: Request, err: Exception) -> None:
-        req._error = err
-        req.latency_ms = (time.time() - req.enqueued_at) * 1e3
-        req._event.set()
+    async def _dispatch(self, batch: List[Request]) -> None:
+        """Two-stage pipeline step: run this batch's device pass while the
+        PREVIOUS batch's host tail is (possibly) still finishing."""
+        prev_tail = self._tail_fut
+        overlapped = prev_tail is not None and not prev_tail.done()
+        try:
+            work = await self._loop.run_in_executor(
+                self._dev_pool, self._device_stage, batch)
+        except Exception as e:  # defensive: _device_stage fails per request
+            for req in batch:
+                if not req.future.done():
+                    self._fail(req, e, count_depth=False)
+            return
+        if overlapped:
+            self.overlapped_batches += 1
+        if prev_tail is not None:
+            # bound the pipeline at ONE outstanding tail (keeps memory and
+            # result latency bounded if tails ever run slower than passes)
+            try:
+                await prev_tail
+            except Exception:
+                pass
+            self._tail_fut = None
+        if work is None:
+            return
+        self._tail_fut = self._loop.run_in_executor(
+            self._tail_pool, self._host_tail, work)
+        if not self.pipeline:
+            # synchronous-core comparator: serialize tail behind the pass
+            try:
+                await self._tail_fut
+            except Exception:
+                pass
+            self._tail_fut = None
 
-    def _finish(self, req: Request, result: List[Tuple[int, float]]) -> None:
-        req._result = result
-        req.latency_ms = (time.time() - req.enqueued_at) * 1e3
-        req._event.set()
-        self.requests_served += 1
+    # -- pipeline stages (executor threads) ----------------------------------
 
-    def _serve(self, batch: List[Request]) -> None:
-        """One fused backend pass: fold every live request's plan into the
-        (d, B) panels and run the segment-aware ``score_select_segments``
-        — every segment is scored ONCE for the whole batch (tombstones
-        masked on device) and only per-request candidate lists come back
-        (the (N, B) panel never reaches this thread)."""
+    def _device_stage(self, batch: List[Request]) -> Optional[_TailWork]:
+        """One fused backend pass: fold every request's (admission-parsed)
+        plan into the (d, B) panels and run the segment-aware
+        ``score_select_segments`` — every segment is scored ONCE for the
+        whole batch (tombstones masked on device) and only per-request
+        candidate lists come back (the (N, B) panel never leaves the
+        backend).  This stage is matmul-dominated (parse happened at
+        admission), so it releases the GIL while the previous batch's
+        host tail finishes — that is the pipeline's overlap.  In
+        sync-core mode requests arrive unparsed and parse HERE,
+        serially, exactly like the legacy one-thread engine."""
         store = self.cache.store
         live: List[Request] = []
-        plans = []
+        plans: List[Any] = []
         for req in batch:
-            try:
-                plan = parse(req.tokens, self.cache.embed_fn,
-                             self.cache.embeddings_for_ids)
-                if plan.decay is not None and not store.has_timestamps:
-                    raise ValueError("decay: requires timestamps in the cache")
-            except Exception as e:  # bad request: fail it, keep the batch
-                self._fail(req, e)
-                continue
+            if req.plan is None:  # sync-core comparator: parse in-loop
+                try:
+                    req.plan = self._parse(req)
+                except Exception as e:  # bad request: fail it, keep the batch
+                    self._fail(req, e, count_depth=False)
+                    continue
             live.append(req)
-            plans.append(plan)
+            plans.append(req.plan)
 
         self.batches_served += 1
         if not live:
-            return
+            return None
 
         ref = self.now if self.now is not None else time.time()
         try:
-            # the lock spans snapshot + scoring: ingest/delete land
-            # BETWEEN batches, never inside one
+            # the lock spans snapshot + scoring: ingest/delete/compaction
+            # land BETWEEN batches, never inside one
             with store.lock:
                 segs = store.segments
                 n_live = store.n_live
                 ks = [min(req.k, n_live) for req in live]
-                # per-plan (global_rows, scores) candidates — (pool,)-sized
                 selected = score_select_segments(
                     self.backend, segs, plans, ks, now=ref)
         except Exception as e:  # backend failure: fail the whole batch loudly
             for req in live:
-                self._fail(req, e)
-            return
+                self._fail(req, e, count_depth=False)
+            return None
+        return _TailWork(live, plans, segs, ks, selected)
 
-        for req, plan, k, (gidx, vals) in zip(live, plans, ks, selected):
+    def _host_tail(self, work: _TailWork) -> None:
+        """Finish each request over the immutable segment snapshot (no
+        lock): gather the candidate pool, truncate/MMR, resolve ids —
+        exactly :func:`finalize_segment_candidates`, the same host tail
+        the direct path runs, called per request so one bad finish fails
+        only its request.
+
+        Results are computed for the WHOLE batch first and delivered in
+        one burst at the end: each delivery wakes a (possibly closed-loop)
+        client whose next admission parse grabs the GIL, so delivering
+        mid-loop would let those parses convoy against the remaining MMR
+        work.  Delivered at the end, the wake-up storm lands during the
+        next batch's GIL-releasing device pass instead."""
+        done: List[Tuple[Request, Optional[List[Tuple[int, float]]],
+                         Optional[Exception]]] = []
+        for req, plan, k, sel in zip(work.requests, work.plans, work.ks,
+                                     work.selected):
             try:
-                pool_emb = gather_rows(segs, gidx)
-                loc, vals = finalize_candidates(
-                    pool_emb, np.arange(gidx.size, dtype=np.int64),
-                    vals, k, plan)
-                chunk_ids = gather_ids(segs, gidx[loc])
-                self._finish(
-                    req,
-                    [(int(i), float(v)) for i, v in zip(chunk_ids, vals)],
-                )
+                (results,) = finalize_segment_candidates(
+                    work.segments, [plan], [k], [sel])
+                done.append((req, results, None))
             except Exception as e:
-                self._fail(req, e)
+                done.append((req, None, e))
+        for req, results, err in done:
+            if err is not None:
+                self._fail(req, err, count_depth=False)
+            else:
+                self._finish(req, results)
+
+    # -- completion ----------------------------------------------------------
+
+    def _fail(self, req: Request, err: Exception, *,
+              count_depth: bool = True) -> None:
+        req.latency_ms = (time.monotonic() - req.enqueued_at) * 1e3
+        if count_depth:
+            self._dec_depth(1)
+        try:
+            req.future.set_exception(err)
+        except cf.InvalidStateError:  # pragma: no cover - already completed
+            pass
+
+    def _finish(self, req: Request, result: List[Tuple[int, float]]) -> None:
+        req.latency_ms = (time.monotonic() - req.enqueued_at) * 1e3
+        self.requests_served += 1
+        try:
+            req.future.set_result(result)
+        except cf.InvalidStateError:  # pragma: no cover - already completed
+            pass

@@ -11,12 +11,24 @@ Live corpora: ``INSERT INTO chunks`` / ``DELETE FROM chunks`` through
 segmented VectorCache in sync — only the touched segment changes.
 :meth:`stats` surfaces query/error counts plus the engine's PlanCache
 (hit/trace/eviction) and device-upload counters and the store shape.
+
+Async serving: :meth:`serving` attaches the continuous-batching
+:class:`~repro.serve.engine.BatchedRetrievalEngine` (admission queue with
+backpressure, per-request priorities/deadlines, pipelined device/host
+overlap) over the SAME VectorCache, and the ``*_async`` variants
+(:meth:`search_async`, :meth:`flex_search_async`, :meth:`ingest_async`,
+:meth:`delete_async`) make every entry point awaitable without blocking
+the caller's event loop.  Once attached, :meth:`stats` grows a
+``serving`` section — queue depth, rejections, deadline misses, the
+pipeline-overlap counter, idle-gap compactions.
 """
 
 from __future__ import annotations
 
+import asyncio
 import dataclasses
 import sqlite3
+import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -63,6 +75,8 @@ class RetrievalService:
         self.engine = get_backend(engine)
         self.query_count = 0
         self.error_count = 0
+        self._serving = None  # lazy BatchedRetrievalEngine (see serving())
+        self._serving_lock = threading.Lock()
 
     def flex_search(self, query: str) -> SearchResult:
         """SQL or @preset -> rows. The agent's single endpoint."""
@@ -88,6 +102,63 @@ class RetrievalService:
             self.error_count += 1
             return SearchResult(False, error=f"{type(e).__name__}: {e}",
                                 latency_ms=(time.time() - t0) * 1e3)
+
+    # -- async serving surface ----------------------------------------------
+
+    def serving(self, **engine_kwargs) -> "Any":
+        """The service's continuous-batching engine, created on first use
+        over the same VectorCache (same store, same compiled plans, same
+        backend — batched and direct rankings stay bit-identical).
+
+        ``engine_kwargs`` (``max_batch``, ``max_wait_ms``, ``max_queue``,
+        ``pipeline``, ``compaction``, ...) apply only on first creation.
+        """
+        with self._serving_lock:  # two racing first calls = one engine
+            if self._serving is None:
+                from repro.serve.engine import BatchedRetrievalEngine
+
+                self._serving = BatchedRetrievalEngine(
+                    self.cache, now=self.now, engine=self.engine,
+                    **engine_kwargs)
+            return self._serving
+
+    async def search_async(
+        self,
+        tokens: str,
+        k: int = 10,
+        *,
+        priority: int = 0,
+        deadline_ms: Optional[float] = None,
+    ) -> List[Tuple[int, float]]:
+        """Awaitable token search through the batched engine: admission
+        (with backpressure), micro-batching, pipelined scoring — without
+        ever blocking the caller's event loop."""
+        return await self.serving().asearch(
+            tokens, k, priority=priority, deadline_ms=deadline_ms)
+
+    async def flex_search_async(self, query: str) -> SearchResult:
+        """Awaitable ``flex_search`` (SQL / @preset): the materializer is
+        synchronous SQLite, so it runs on a worker thread."""
+        return await asyncio.to_thread(self.flex_search, query)
+
+    async def ingest_async(
+        self,
+        rows: Sequence[tuple],
+        embeddings: Optional[np.ndarray] = None,
+    ) -> int:
+        """Awaitable :meth:`ingest` — the store lock may briefly wait for
+        an in-flight scoring pass, so keep it off the event loop."""
+        return await asyncio.to_thread(self.ingest, rows, embeddings)
+
+    async def delete_async(self, ids: Sequence[int]) -> int:
+        """Awaitable :meth:`delete` (same reasoning as ingest_async)."""
+        return await asyncio.to_thread(self.delete, ids)
+
+    def close(self) -> None:
+        """Shut down the attached serving engine (drains its queue)."""
+        if self._serving is not None:
+            self._serving.close()
+            self._serving = None
 
     # -- live-corpus entry points -------------------------------------------
 
@@ -135,6 +206,9 @@ class RetrievalService:
         ``device_cache`` (uploads/hits/evictions) appear when the resolved
         backend compiles executables / keeps device-resident segments —
         the observability half of the PlanCache productionization.
+        ``serving`` (queue_depth / rejected / deadline_misses /
+        overlapped_batches / compactions_run) appears once the async
+        batched engine is attached via :meth:`serving`.
         """
         out: Dict[str, Any] = {
             "engine": self.engine.name,
@@ -142,6 +216,8 @@ class RetrievalService:
             "errors": self.error_count,
             "store": self.cache.store.stats(),
         }
+        if self._serving is not None:
+            out["serving"] = self._serving.stats()
         plan_cache = getattr(self.engine, "plan_cache", None)
         if plan_cache is not None:
             out["plan_cache"] = plan_cache.stats()

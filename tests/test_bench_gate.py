@@ -128,9 +128,35 @@ def test_delta_section_dropped_entirely_fails():
     base["delta_backends"] = {"jit-jax": _row(40.0)}
     new = _snap({"jit-jax": _row(30.0)})
     failures, _ = compare_all(new, base, DEFAULT_TOL)
-    assert len(failures) == 1 and "delta-ingest" in failures[0]
+    assert len(failures) == 1
+    assert "delta_backends" in failures[0] and "dropped" in failures[0]
     old_base = _snap({"jit-jax": _row(30.0)})
     assert compare_all(new, old_base, DEFAULT_TOL)[0] == []
+
+
+def test_serve_section_gated_and_drop_fails():
+    """The serving scenario (rows keyed by scheduler mode) gates under
+    the same rules: a pipelined-core regression past tolerance fails,
+    and dropping the whole section is silent omission."""
+    base = _snap({"jit-jax": _row(30.0)})
+    base["serve_throughput"] = {"sync_core": _row(300.0),
+                                "pipelined": _row(200.0)}
+    ok = _snap({"jit-jax": _row(30.0)})
+    ok["serve_throughput"] = {"sync_core": _row(310.0),
+                              "pipelined": _row(210.0)}
+    failures, notes = compare_all(ok, base, DEFAULT_TOL)
+    assert failures == []
+    assert any(n.startswith("serve_throughput/") for n in notes)
+    # breaking the pipeline shows up as a gated regression of its row
+    broken = _snap({"jit-jax": _row(30.0)})
+    broken["serve_throughput"] = {"sync_core": _row(300.0),
+                                  "pipelined": _row(320.0)}
+    failures, _ = compare_all(broken, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "serve_throughput/pipelined" in failures[0]
+    dropped = _snap({"jit-jax": _row(30.0)})
+    failures, _ = compare_all(dropped, base, DEFAULT_TOL)
+    assert len(failures) == 1 and "serve_throughput" in failures[0]
 
 
 def test_merge_min_folds_delta_section():

@@ -1,0 +1,484 @@
+"""Async continuous-batching engine: admission, deadlines, pipeline, drain.
+
+Deterministic control comes from a gate backend (``score_select`` blocks
+until the test releases it), so queue states are pinned exactly — no
+sleep-and-hope.  The pipeline-overlap test uses sleeps INSIDE the two
+stages (pure waiting, not CPU), so the wall-clock comparison is a
+scheduling property, robust on loaded CI runners.
+"""
+
+import asyncio
+import concurrent.futures as cf
+import sqlite3
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.serve.engine as engine_mod
+from repro.core.backends import FusedNumpyBackend
+from repro.core.segments import CompactionPolicy, SegmentedCorpusStore
+from repro.core.vectorcache import VectorCache
+from repro.data.corpus import build_database, generate_corpus
+from repro.embed import HashEmbedder
+from repro.serve.engine import (BatchedRetrievalEngine, DeadlineExceededError,
+                                EngineClosedError, QueueFullError, Request)
+from repro.serve.retrieval import RetrievalService
+
+NOW = 90 * 86400.0
+
+# captured ONCE at import: _run_staged patches this name per engine run,
+# and grabbing it inside the helper would wrap the previous run's wrapper
+_ORIG_TAIL = engine_mod.finalize_segment_candidates
+
+
+class GateBackend(FusedNumpyBackend):
+    """Backend whose scoring pass blocks until the test releases it (and
+    optionally sleeps, to give the device stage a controllable duration)."""
+
+    name = "gate"
+
+    def __init__(self, *, released: bool = False, delay_s: float = 0.0):
+        self.release = threading.Event()
+        if released:
+            self.release.set()
+        self.entered = threading.Event()
+        self.delay_s = delay_s
+        self.calls = 0
+
+    def score_select(self, *args, **kwargs):
+        self.calls += 1
+        self.entered.set()
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        if not self.release.wait(timeout=15.0):
+            raise RuntimeError("gate backend never released (test bug)")
+        return super().score_select(*args, **kwargs)
+
+
+def make_cache(n=200, dim=32):
+    emb = HashEmbedder(dim)
+    texts = [f"item group {i % 7} tail {i}" for i in range(n)]
+    return VectorCache(np.arange(n), emb.embed_batch(texts),
+                       np.linspace(0, 89 * 86400, n), emb), emb
+
+
+def wait_for(predicate, timeout=10.0, interval=0.005):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# admission: backpressure + bounded queue
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_rejects_at_capacity():
+    cache, _ = make_cache()
+    gate = GateBackend()
+    eng = BatchedRetrievalEngine(cache, max_batch=1, engine=gate, max_queue=2)
+    try:
+        with cf.ThreadPoolExecutor(4) as ex:
+            first = ex.submit(eng.search, "similar:group 1 tail", 5)
+            assert gate.entered.wait(5.0)  # first request is IN the device pass
+            queued = [ex.submit(eng.search, f"similar:group {i} tail", 5)
+                      for i in (2, 3)]
+            assert wait_for(lambda: eng.queue_depth == 2)
+            with pytest.raises(QueueFullError):
+                eng.search("similar:group 4 tail", 5, timeout=5.0)
+            assert eng.rejected == 1
+            gate.release.set()
+            assert len(first.result(10.0)) == 5
+            for f in queued:
+                assert len(f.result(10.0)) == 5
+        assert eng.queue_depth == 0
+        assert eng.stats()["rejected"] == 1
+    finally:
+        gate.release.set()
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# deadlines + priorities at collect time
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_miss_fails_at_collect():
+    cache, _ = make_cache()
+    gate = GateBackend()
+    eng = BatchedRetrievalEngine(cache, max_batch=1, engine=gate)
+    try:
+        with cf.ThreadPoolExecutor(2) as ex:
+            blocker = ex.submit(eng.search, "similar:group 1 tail", 5)
+            assert gate.entered.wait(5.0)
+            doomed = ex.submit(eng.search, "similar:group 2 tail", 5,
+                               10.0, deadline_ms=20.0)
+            assert wait_for(lambda: eng.queue_depth == 1)
+            time.sleep(0.1)  # let the 20 ms deadline lapse while queued
+            gate.release.set()
+            assert len(blocker.result(10.0)) == 5
+            with pytest.raises(DeadlineExceededError):
+                doomed.result(10.0)
+        assert eng.deadline_misses == 1
+    finally:
+        gate.release.set()
+        eng.close()
+
+
+def test_priority_orders_collect():
+    cache, _ = make_cache()
+    gate = GateBackend()
+    eng = BatchedRetrievalEngine(cache, max_batch=1, engine=gate)
+    order = []
+    try:
+        with cf.ThreadPoolExecutor(4) as ex:
+            blocker = ex.submit(eng.search, "similar:group 1 tail", 5)
+            assert gate.entered.wait(5.0)
+
+            def tagged(tokens, tag, priority):
+                eng.search(tokens, 5, priority=priority)
+                order.append(tag)
+
+            low = ex.submit(tagged, "similar:group 2 tail", "low", 0)
+            assert wait_for(lambda: eng.queue_depth == 1)
+            high = ex.submit(tagged, "similar:group 3 tail", "high", 5)
+            assert wait_for(lambda: eng.queue_depth == 2)
+            gate.release.set()
+            blocker.result(10.0)
+            low.result(10.0)
+            high.result(10.0)
+        # max_batch=1: the two queued requests served one per batch,
+        # highest priority first despite arriving second
+        assert order == ["high", "low"]
+    finally:
+        gate.release.set()
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# close() drains the queue (no 30 s hang)
+# ---------------------------------------------------------------------------
+
+
+def test_close_drains_pending_requests():
+    cache, _ = make_cache()
+    gate = GateBackend()
+    eng = BatchedRetrievalEngine(cache, max_batch=1, engine=gate)
+    with cf.ThreadPoolExecutor(4) as ex:
+        in_flight = ex.submit(eng.search, "similar:group 1 tail", 5)
+        assert gate.entered.wait(5.0)
+        queued = [ex.submit(eng.search, f"similar:group {i} tail", 5)
+                  for i in (2, 3)]
+        assert wait_for(lambda: eng.queue_depth == 2)
+        t0 = time.monotonic()
+        closer = ex.submit(eng.close)
+        time.sleep(0.05)
+        gate.release.set()
+        closer.result(10.0)
+        # in-flight batch completes; everything queued fails FAST with a
+        # clear shutdown error instead of hanging into its 30 s timeout
+        assert len(in_flight.result(10.0)) == 5
+        for f in queued:
+            with pytest.raises(EngineClosedError):
+                f.result(10.0)
+        assert time.monotonic() - t0 < 10.0
+    with pytest.raises(EngineClosedError):
+        eng.search("similar:anything", 3)
+
+
+# ---------------------------------------------------------------------------
+# monotonic latency accounting
+# ---------------------------------------------------------------------------
+
+
+def test_latency_clock_is_monotonic_not_wall():
+    # time.time() is ~1.7e9 s; time.monotonic() is process/boot-relative.
+    # If someone reverts enqueued_at to wall clock, this pins it.
+    req = Request(tokens="similar:x")
+    assert abs(req.enqueued_at - time.monotonic()) < 60.0
+    cache, _ = make_cache()
+    eng = BatchedRetrievalEngine(cache, engine="fused")
+    try:
+        req2 = Request(tokens="similar:group 1 tail", k=3)
+        eng._submit(req2)
+        req2.future.result(10.0)
+        assert 0.0 <= req2.latency_ms < 60_000.0
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# async facade + equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_asearch_matches_direct_path():
+    cache, _ = make_cache(300)
+    eng = BatchedRetrievalEngine(cache, max_batch=16, now=NOW, engine="fused")
+    tokens = [f"similar:group {i % 7} tail decay:14" for i in range(20)]
+    try:
+        async def main():
+            return await asyncio.gather(
+                *[eng.asearch(t, 5) for t in tokens])
+
+        batched = asyncio.run(main())
+        direct = [cache.search(t, now=NOW)[:5] for t in tokens]
+        # rankings bit-identical; scores to fp tolerance (the (d, B) panel
+        # matmul and the single-query matvec reassociate differently)
+        for b, d in zip(batched, direct):
+            assert [i for i, _ in b] == [i for i, _ in d]
+            np.testing.assert_allclose([v for _, v in b],
+                                       [v for _, v in d], rtol=1e-5)
+        assert eng.batches_served < len(tokens)  # batching actually batched
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# the pipeline: overlap counter + wall-clock win
+# ---------------------------------------------------------------------------
+
+
+def _run_staged(monkeypatch, *, pipeline: bool, n_requests: int = 8,
+                stage_s: float = 0.03):
+    """Serve n_requests with both stages stubbed to sleep ``stage_s``
+    (sleeps release the GIL and cost no CPU, so the comparison measures
+    SCHEDULING, not machine load)."""
+    cache, _ = make_cache(50)
+    gate = GateBackend(released=True, delay_s=stage_s)
+
+    def slow_tail(*args, **kwargs):
+        time.sleep(stage_s)
+        return _ORIG_TAIL(*args, **kwargs)
+
+    monkeypatch.setattr(engine_mod, "finalize_segment_candidates", slow_tail)
+    eng = BatchedRetrievalEngine(cache, max_batch=1, max_wait_ms=0.5,
+                                 engine=gate, pipeline=pipeline)
+    try:
+        t0 = time.monotonic()
+        with cf.ThreadPoolExecutor(n_requests) as ex:
+            futs = [ex.submit(eng.search, f"similar:group {i % 7} tail", 3)
+                    for i in range(n_requests)]
+            for f in futs:
+                assert len(f.result(30.0)) == 3
+        wall = time.monotonic() - t0
+        return wall, eng.overlapped_batches
+    finally:
+        eng.close()
+
+
+def test_pipeline_overlaps_and_beats_sync_core(monkeypatch):
+    wall_sync, overlap_sync = _run_staged(monkeypatch, pipeline=False)
+    wall_pipe, overlap_pipe = _run_staged(monkeypatch, pipeline=True)
+    # sync core serializes device+tail (~2*stage per batch); the pipeline
+    # overlaps tail i with device pass i+1 (~1*stage per batch in steady
+    # state).  Generous margin: pipelined must be at least 20% faster.
+    assert overlap_sync == 0
+    assert overlap_pipe > 0
+    assert wall_pipe < wall_sync * 0.8, (wall_pipe, wall_sync)
+
+
+# ---------------------------------------------------------------------------
+# background compaction: idle gaps only, never inside a scoring pass
+# ---------------------------------------------------------------------------
+
+
+def test_compaction_policy_picks_victims():
+    store = SegmentedCorpusStore(dim=4)
+    rng = np.random.default_rng(0)
+    for s in range(6):
+        store.append(np.arange(s * 10, s * 10 + 10),
+                     rng.standard_normal((10, 4)).astype(np.float32))
+    # liveness pressure: tombstone 6/10 of segment 0
+    store.delete(list(range(6)))
+    pol = CompactionPolicy(min_live_fraction=0.5, max_segments=10)
+    assert pol.should_compact(store)
+    assert store.maybe_compact(pol) == 1          # folds the sparse segment
+    assert store.n_segments == 6                  # 5 survivors + 1 merged
+    assert not pol.should_compact(store)
+    # count pressure: cap at 3 segments -> the smallest fold together
+    pol2 = CompactionPolicy(min_live_fraction=0.1, max_segments=3)
+    assert pol2.should_compact(store)
+    assert store.maybe_compact(pol2) >= 3
+    assert store.n_segments <= 3
+    assert store.n_live == 54                     # no live row lost
+    assert store.maybe_compact(pol2) == 0         # converged, no churn
+
+
+def test_idle_compaction_never_inside_scoring_pass(monkeypatch):
+    cache, _ = make_cache(300)
+    store = cache.store
+    windows = {"score": [], "fold": []}
+
+    orig_sss = engine_mod.score_select_segments
+
+    def recording_sss(*args, **kwargs):
+        t0 = time.monotonic()
+        out = orig_sss(*args, **kwargs)
+        windows["score"].append((t0, time.monotonic()))
+        return out
+
+    monkeypatch.setattr(engine_mod, "score_select_segments", recording_sss)
+
+    orig_fold = SegmentedCorpusStore._fold
+
+    def recording_fold(self, victims):
+        t0 = time.monotonic()
+        out = orig_fold(self, victims)
+        if out:
+            windows["fold"].append((t0, time.monotonic()))
+        return out
+
+    monkeypatch.setattr(SegmentedCorpusStore, "_fold", recording_fold)
+
+    pol = CompactionPolicy(min_live_fraction=0.9, max_segments=4)
+    eng = BatchedRetrievalEngine(cache, max_batch=8, now=NOW, engine="fused",
+                                 compaction=pol)
+    emb = HashEmbedder(32)
+    try:
+        stop = threading.Event()
+
+        def searcher(seed):
+            i = seed
+            while not stop.is_set():
+                eng.search(f"similar:group {i % 7} tail decay:14", 5)
+                i += 1
+
+        threads = [threading.Thread(target=searcher, args=(i,))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        # fragment the store while queries race: appends + deletes
+        next_id = 10_000
+        rng = np.random.default_rng(1)
+        for cycle in range(8):
+            ids = np.arange(next_id, next_id + 12)
+            next_id += 12
+            eng.ingest(ids, rng.standard_normal((12, 32)).astype(np.float32),
+                       np.full(12, NOW - 1000.0))
+            eng.delete(ids[:8].tolist())
+            time.sleep(0.02)
+        stop.set()
+        for t in threads:
+            t.join(10.0)
+        # idle gap: the scheduler should now run the compaction policy
+        assert wait_for(lambda: eng.compactions_run >= 1, timeout=10.0)
+        assert store.compactions >= 1
+    finally:
+        eng.close()
+
+    assert windows["fold"], "compaction never ran"
+    for fs, fe in windows["fold"]:
+        for ss, se in windows["score"]:
+            assert fe <= ss or se <= fs, (
+                f"compaction [{fs:.4f},{fe:.4f}] landed inside scoring "
+                f"pass [{ss:.4f},{se:.4f}]")
+
+
+# ---------------------------------------------------------------------------
+# concurrent ingest/delete racing the scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_mutations_stay_bit_identical():
+    cache, _ = make_cache(250)
+    eng = BatchedRetrievalEngine(
+        cache, max_batch=8, now=NOW, engine="fused",
+        compaction=CompactionPolicy(min_live_fraction=0.6, max_segments=5))
+    tokens = [f"similar:group {i} tail decay:14" for i in range(7)]
+    tokens.append("similar:group 2 tail diverse decay:14")
+    errors = []
+    try:
+        stop = threading.Event()
+
+        def searcher(seed):
+            i = seed
+            while not stop.is_set():
+                try:
+                    out = eng.search(tokens[i % len(tokens)], 5)
+                    assert out, "search returned empty on a live corpus"
+                except Exception as e:  # pragma: no cover - failure path
+                    errors.append(e)
+                    return
+                i += 1
+
+        threads = [threading.Thread(target=searcher, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+
+        # mutate in bursts; between bursts (mutations quiesced, searches
+        # still racing) batched rankings must be bit-identical to the
+        # direct VectorCache path on the SAME store state
+        rng = np.random.default_rng(7)
+        next_id = 50_000
+        for burst in range(5):
+            ids = np.arange(next_id, next_id + 30)
+            next_id += 30
+            eng.ingest(ids,
+                       rng.standard_normal((30, 32)).astype(np.float32),
+                       np.linspace(0, 80 * 86400, 30))
+            eng.delete(rng.choice(ids, size=10, replace=False).tolist())
+            time.sleep(0.01)
+            for t_q in tokens:
+                batched = eng.search(t_q, 5)
+                direct = cache.search(t_q, now=NOW)[:5]
+                assert ([i for i, _ in batched] == [i for i, _ in direct]
+                        ), (burst, t_q, batched, direct)
+                np.testing.assert_allclose([v for _, v in batched],
+                                           [v for _, v in direct],
+                                           rtol=1e-5)
+        stop.set()
+        for t in threads:
+            t.join(10.0)
+        assert not errors, errors
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# service surface: async entry points + serving stats
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def async_service():
+    emb = HashEmbedder(64)
+    chunks = generate_corpus(n_chunks=300, n_sessions=20, seed=5)
+    conn = sqlite3.connect(":memory:", check_same_thread=False)
+    build_database(conn, chunks, emb)
+    svc = RetrievalService(conn, dim=64, embedder=emb, now=1_770_000_000.0)
+    yield svc
+    svc.close()
+
+
+def test_service_async_surface(async_service):
+    svc = async_service
+
+    async def main():
+        res = await svc.flex_search_async(
+            "SELECT v.id FROM vec_ops('similar:server pool:5') v LIMIT 3")
+        assert res.ok, res.error
+        hits = await svc.search_async("similar:server lifecycle decay:30", 5)
+        assert len(hits) == 5
+        row = (9001, "s1", "user", "fresh doc text", 1_769_000_000.0, 0,
+               "proj", None, None, None)
+        assert await svc.ingest_async([row]) == 1
+        hit_ids = [i for i, _ in
+                   await svc.search_async("similar:fresh doc text", 3)]
+        assert 9001 in hit_ids
+        assert await svc.delete_async([9001]) == 1
+        return svc.stats()
+
+    stats = asyncio.run(main())
+    serving = stats["serving"]
+    assert serving["requests_served"] >= 2
+    assert serving["queue_depth"] == 0
+    for key in ("rejected", "deadline_misses", "overlapped_batches",
+                "compactions_run", "max_queue", "batches_served"):
+        assert key in serving
