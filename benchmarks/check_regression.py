@@ -13,9 +13,13 @@ while a real regression shows up in every run.
 
 Per-row ``total_ms`` — the ``backends`` section (fused score->select
 latency), the ``delta_backends`` section (the append+query / delete+query
-liveness cycle over the segmented store) and the ``serve_throughput``
+liveness cycle over the segmented store), the ``serve_throughput``
 section (the offered-load sweep through the continuous-batching engine,
-one row per scheduler mode: ``sync_core`` / ``pipelined``) — is
+one row per scheduler mode: ``sync_core`` / ``pipelined``) and the
+``prefilter_backends`` section (the Phase-1 filtered-retrieval
+selectivity sweep; ``total_ms`` sums the ROUTED path across
+selectivities, so a mis-tuned router or a slowed masked path both
+gate) — is
 compared against the committed ``BENCH_pem.smoke.json`` baseline; the gate
 fails on a > ``FLEX_BENCH_TOL`` (default 1.5) ratio for ANY backend that
 is not recorded as skipped in the baseline.  A backend present in the
@@ -49,9 +53,10 @@ def compare(
     """Diff one per-backend section of two snapshot dicts.
 
     ``section`` is ``"backends"`` (the fused query path),
-    ``"delta_backends"`` (the append+query/delete+query liveness cycle)
-    or ``"serve_throughput"`` (the offered-load serving sweep, rows keyed
-    by scheduler mode); all gate under the same tolerance and
+    ``"delta_backends"`` (the append+query/delete+query liveness cycle),
+    ``"serve_throughput"`` (the offered-load serving sweep, rows keyed
+    by scheduler mode) or ``"prefilter_backends"`` (the filtered-
+    retrieval selectivity sweep); all gate under the same tolerance and
     skipped-row rules.  Returns (failures, notes)."""
     failures: List[str] = []
     notes: List[str] = []
@@ -111,7 +116,8 @@ def compare_all(
     of silent omission."""
     failures: List[str] = []
     notes: List[str] = []
-    for section in ("backends", "delta_backends", "serve_throughput"):
+    for section in ("backends", "delta_backends", "serve_throughput",
+                    "prefilter_backends"):
         if section not in baseline:
             continue
         if section != "backends" and section not in new:
@@ -130,7 +136,8 @@ def merge_min(snapshots: List[Dict]) -> Dict:
     the fastest measured row wins (one-sided noise); skips survive only
     if a backend never measured."""
     merged: Dict = dict(snapshots[0])
-    for section in ("backends", "delta_backends", "serve_throughput"):
+    for section in ("backends", "delta_backends", "serve_throughput",
+                    "prefilter_backends"):
         backends: Dict[str, Dict] = {}
         for snap in snapshots:
             for name, row in snap.get(section, {}).items():

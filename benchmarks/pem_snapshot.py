@@ -26,6 +26,17 @@ the regression gate diffs — so a change that silently re-uploads or
 re-traces warm segments on ingest shows up as a gate failure, not an
 assumption.
 
+``prefilter_backends`` measures Phase-1 FILTERED retrieval (the paper's
+headline SQL-pre-filter scenario, formerly the standalone ``table3``
+suite): a selectivity sweep (~0.1% / 5% / 50% of the corpus as
+candidates) timing the masked-device path (candidates ∧ live masked to
+-inf over the warm per-segment device matrices — zero per-query
+gather/upload) against the gather-host path (scratch sub-corpus per
+query) with the router forced each way.  ``total_ms`` — the gated
+number — sums the path the DEFAULT router picks across the sweep, and
+``crossover`` records the measured selectivity where masked first beats
+gather on this platform.
+
 ``serve_throughput`` measures the SERVING core, not a single pass: an
 offered-load sweep (closed loop, ``load`` concurrent clients) through the
 continuous-batching engine in both modes — ``sync_core`` (the legacy
@@ -160,6 +171,92 @@ def _bench_delta():
              f"append {m} + query + delete + query")
         rows[name] = {"delta_rows": m,
                       "total_ms": round(t_cycle * 1e3, 3)}
+    return rows
+
+
+PREFILTER_SELECTIVITIES = (0.001, 0.05, 0.5)
+PREFILTER_TOKENS = (
+    # no diverse/MMR: the host finishing tail would drown the routing
+    # difference the scenario exists to measure
+    "similar:how the system works architecture "
+    "suppress:website landing page design decay:30 pool:100"
+)
+
+
+def _bench_prefilter():
+    """Phase-1 filtered retrieval: masked-device vs gather-host sweep.
+
+    For each backend and each selectivity (candidate fraction of the
+    corpus), times ``search_plan(plan, candidate_ids)`` end to end with
+    the router FORCED down each path, then records which path the default
+    router picks.  ``total_ms`` — the gated number — sums the ROUTED path
+    across the sweep, so both a slowed masked path and a mis-tuned
+    threshold regress it.  ``crossover`` is the measured selectivity
+    where masked first beats gather (the number the default
+    ``mask_threshold`` should sit near on this platform class).
+    """
+    import jax
+
+    from repro.core.backends import PrefilterRouter
+
+    conn, cache, chunks, emb = production_db()
+    plan = parse(PREFILTER_TOKENS, emb, cache.embeddings_for_ids)
+    ids = cache.ids
+    n = ids.shape[0]
+    rng = np.random.default_rng(7)
+    cand_sets = {
+        sel: rng.choice(ids, size=max(1, int(round(n * sel))), replace=False)
+        for sel in PREFILTER_SELECTIVITIES
+    }
+
+    on_tpu = jax.default_backend() == "tpu"
+    default_router = PrefilterRouter()
+    saved_router = cache.prefilter
+    rows = {}
+    try:
+        for name in list_backends():
+            if name == "pallas" and not on_tpu:
+                rows[name] = {"skipped": "requires TPU (interpret mode "
+                                         "measures the emulator, not the "
+                                         "kernel)"}
+                emit(f"pem/skip_prefilter_{name}", 0.0, "off-TPU")
+                continue
+            backend = get_backend(name)
+            cache.search_plan(plan, now=NOW, engine=backend)  # warm segments
+            sweep = {}
+            total_s = 0.0
+            crossover = None
+            for sel in PREFILTER_SELECTIVITIES:
+                cand = cand_sets[sel]
+                cache.prefilter = PrefilterRouter(mask_threshold=0.0)
+                t_masked = timed(lambda: cache.search_plan(
+                    plan, cand, now=NOW, engine=backend))
+                cache.prefilter = PrefilterRouter(mask_threshold=2.0)
+                t_gather = timed(lambda: cache.search_plan(
+                    plan, cand, now=NOW, engine=backend))
+                routed = ("masked" if default_router.use_masked(len(cand), n)
+                          else "gather")
+                t_routed = t_masked if routed == "masked" else t_gather
+                total_s += t_routed
+                if crossover is None and t_masked <= t_gather:
+                    crossover = sel
+                sweep[str(sel)] = {
+                    "candidates": int(len(cand)),
+                    "masked_ms": round(t_masked * 1e3, 3),
+                    "gather_ms": round(t_gather * 1e3, 3),
+                    "routed": routed,
+                }
+                emit(f"pem/prefilter_{name}_sel{sel}", t_routed,
+                     f"cand={len(cand)} masked={t_masked*1e3:.2f}ms "
+                     f"gather={t_gather*1e3:.2f}ms routed={routed}")
+            rows[name] = {
+                "total_ms": round(total_s * 1e3, 3),
+                "threshold": default_router.mask_threshold,
+                "crossover": crossover,
+                "sweep": sweep,
+            }
+    finally:
+        cache.prefilter = saved_router
     return rows
 
 
@@ -358,9 +455,16 @@ def _bench_serve_emudev():
     return rows
 
 
+def run_prefilter() -> None:
+    """Standalone filtered-retrieval sweep (the old ``table3`` suite,
+    folded into the snapshot's gated ``prefilter_backends`` scenario)."""
+    _bench_prefilter()
+
+
 def run() -> None:
     n, rows = _bench_backends()
     delta_rows = _bench_delta()
+    prefilter_rows = _bench_prefilter()
     serve_rows = _bench_serve()
     snapshot = {
         "bench": "pem_phase2_composed",
@@ -372,6 +476,7 @@ def run() -> None:
         "host": {"parallel_efficiency": _measure_parallel_efficiency()},
         "backends": rows,
         "delta_backends": delta_rows,
+        "prefilter_backends": prefilter_rows,
         "serve_throughput": serve_rows,
     }
     SNAPSHOT_PATH.write_text(json.dumps(snapshot, indent=2) + "\n")

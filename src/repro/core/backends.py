@@ -10,6 +10,9 @@ backend from ONE registry and calls the same primitives:
     score_panel(matrix, days_ago, plans)             -> (N, B) a micro-batch
     score_select(matrix, days_ago, plans, ks, mask=) -> per-plan top candidates
     score_select_segments(backend, segments, ...)    -> segmented corpus driver
+    score_select_prefiltered(backend, store, ...)    -> Phase-1 filtered driver
+                                                        (masked-device vs
+                                                        gather-host router)
 
 ``score_select`` is the fused score->select stage: it returns ONLY the
 top-:func:`selection_width` candidate ``(indices, scores)`` per plan, so
@@ -78,7 +81,9 @@ __all__ = [
     "selection_width",
     "finalize_candidates",
     "score_select_segments",
+    "score_select_prefiltered",
     "finalize_segment_candidates",
+    "PrefilterRouter",
 ]
 
 Candidates = Tuple[np.ndarray, np.ndarray]  # (indices, scores), descending
@@ -795,6 +800,7 @@ def score_select_segments(
     ks: Sequence[int],
     *,
     now: Optional[float] = None,
+    candidate_masks: Optional[Sequence[Optional[np.ndarray]]] = None,
 ) -> List[Candidates]:
     """Fused score->select over a SEGMENTED corpus (repro.core.segments).
 
@@ -827,42 +833,72 @@ def score_select_segments(
     come back as the oversampled MMR pool (callers finish with
     :func:`finalize_candidates` over gathered candidate embeddings),
     exactly like the monolithic ``score_select``.
+
+    ``candidate_masks`` is the Phase-1 filtered-retrieval hook: per-segment
+    bool masks (``SegmentedCorpusStore.candidate_masks``; None = segment
+    holds no candidate, skipped entirely).  Each mask composes with the
+    segment's tombstones — candidates ∧ live score, everything else hits
+    -inf ON DEVICE before selection — so a pre-filtered query scores the
+    same warm device-resident segment matrices as an unfiltered one: zero
+    per-query gather, zero per-query upload, plan-cache row buckets
+    unchanged.  Selection widths shrink to the eligible-row count, and the
+    union merge is bit-identical to host-gathering the candidate rows (in
+    global-row order) and scoring them monolithically.
     """
     from repro.core.segments import segment_offsets
 
     backend = get_backend(backend)
-    n_live = sum(s.live_count for s in segments)
-    if n_live == 0:
+    if candidate_masks is not None and len(candidate_masks) != len(segments):
+        raise ValueError("candidate_masks misaligned with segments")
+    # per-segment eligible mask: candidates ∧ live (None = every row)
+    scored: List[Tuple[int, object, Optional[np.ndarray], int]] = []
+    for i, s in enumerate(segments):
+        if not s.n_rows or not s.live_count:
+            continue
+        if candidate_masks is not None:
+            cm = candidate_masks[i]
+            if cm is None:
+                continue
+            m = (cm & s.live_mask) if s.n_dead else cm
+            c = int(np.count_nonzero(m))
+            if c == 0:
+                continue
+            if c == s.n_rows:
+                m = None  # every row eligible: the unmasked fast shape
+        else:
+            m = s.live_mask if s.n_dead else None
+            c = s.live_count
+        scored.append((i, s, m, c))
+    n_elig = sum(c for _, _, _, c in scored)
+    if n_elig == 0:
         return [_empty_candidates() for _ in plans]
     if now is None:
         now = time.time()
     offsets = segment_offsets(segments)
-    scored = [(i, s) for i, s in enumerate(segments)
-              if s.n_rows and s.live_count]
 
-    # fast path: one fully-live segment IS the monolithic corpus — same
-    # call, same candidates, zero segmentation overhead
-    if len(scored) == 1 and scored[0][1].live_count == scored[0][1].n_rows:
-        i, seg = scored[0]
+    # fast path: one segment with every row eligible IS the monolithic
+    # corpus — same call, same candidates, zero segmentation overhead
+    if len(scored) == 1 and scored[0][2] is None:
+        i, seg, _, _ = scored[0]
         out = backend.score_select(
             seg.matrix, seg.days_ago(now), plans,
-            [min(k, n_live) for k in ks])
+            [min(k, n_elig) for k in ks])
         if offsets[i]:
             out = [(idx + offsets[i], vals) for idx, vals in out]
         return out
 
-    # per-plan GLOBAL selection widths (diverse oversampling applies once,
-    # at corpus level; per-segment requests are plain top-w)
-    widths = [selection_width(p, min(k, n_live), n_live)
+    # per-plan GLOBAL selection widths over the ELIGIBLE rows (diverse
+    # oversampling applies once, at corpus level; per-segment requests
+    # are plain top-w)
+    widths = [selection_width(p, min(k, n_elig), n_elig)
               for p, k in zip(plans, ks)]
     seg_plans = [dataclasses.replace(p, diverse=None)
                  if p.diverse is not None else p for p in plans]
 
     parts: List[List[Candidates]] = []
-    for i, seg in scored:
+    for i, seg, m, _ in scored:
         sel = backend.score_select(
-            seg.matrix, seg.days_ago(now), seg_plans, widths,
-            mask=seg.live_mask if seg.n_dead else None)
+            seg.matrix, seg.days_ago(now), seg_plans, widths, mask=m)
         parts.append([(idx + offsets[i], vals) for idx, vals in sel])
 
     merged: List[Candidates] = []
@@ -877,6 +913,122 @@ def score_select_segments(
         order = np.argsort(-cat_v, kind="stable")[:w]
         merged.append((cat_i[order], cat_v[order]))
     return merged
+
+
+@dataclasses.dataclass
+class PrefilterRouter:
+    """Selectivity-aware router for Phase-1 filtered retrieval.
+
+    Two ways to score a pre-filtered sub-corpus, with opposite cost
+    shapes (Bruch, *Foundations of Vector Retrieval* §filtered search):
+
+    * **masked-device** — score the warm device-resident segment matrices
+      with non-candidates masked to -inf before selection.  Cost is
+      O(corpus) but every byte is already on device: zero gather, zero
+      upload, plan-cache hits preserved.  Wins when the filter is weak
+      (candidates are a large fraction of the corpus).
+    * **gather-host** — resolve the candidate rows through the id index
+      (O(candidates)), gather them into a scratch matrix and score that.
+      Pays a host gather + device upload + (first time) a trace per row
+      bucket EVERY query, but touches only candidate rows.  Wins when the
+      filter is sharp (a few hundred rows out of a million).
+
+    The router picks per query on REQUESTED selectivity — unique
+    candidate count over live rows — against ``mask_threshold`` (the
+    measured crossover lives in ``BENCH_pem.json``'s
+    ``prefilter_backends`` scenario; tune the threshold per deployment).
+    Counters are benign int/float bumps (same convention as the store's)
+    surfaced through ``RetrievalService.stats()["prefilter"]``.
+    """
+
+    mask_threshold: float = 0.2  # selectivity at/above which masked wins
+    routed_masked: int = 0       # queries served by the masked-device path
+    routed_gather: int = 0       # queries served by the gather-host path
+    mask_build_ms: float = 0.0   # cumulative candidate-mask build time
+    # routed_* count QUERIES: a batched scoring call serving n folded
+    # identical filters bumps by n (score_select_prefiltered's weight=)
+
+    def use_masked(self, n_candidates: int, n_live: int) -> bool:
+        return n_live > 0 and n_candidates >= self.mask_threshold * n_live
+
+    def stats(self) -> Dict[str, Union[int, float]]:
+        return {
+            "threshold": self.mask_threshold,
+            "routed_masked": self.routed_masked,
+            "routed_gather": self.routed_gather,
+            "mask_build_ms": round(self.mask_build_ms, 3),
+        }
+
+
+def score_select_prefiltered(
+    backend: Union[str, "ExecutionBackend"],
+    store,
+    segments: Sequence,
+    plans: Sequence[M.ModulationPlan],
+    ks: Sequence[int],
+    candidate_ids: Sequence[int],
+    *,
+    now: Optional[float] = None,
+    router: Optional[PrefilterRouter] = None,
+    weight: int = 1,
+) -> List[Candidates]:
+    """Device pass for a Phase-1 FILTERED micro-batch (one candidate set
+    shared by every plan in the call).  ``weight`` is how many QUERIES
+    this call serves (the batched engine folds identical filters into one
+    call), so the router's counters stay per-query on every path.
+
+    Routes through ``router`` (masked-device vs gather-host, see
+    :class:`PrefilterRouter`) and returns per-plan ``(global_rows,
+    scores)`` — the same contract as :func:`score_select_segments`, so
+    :func:`finalize_segment_candidates` finishes both filtered and
+    unfiltered batches identically.  Callers needing a consistent pass
+    hold ``store.lock`` across snapshot + this call, exactly like the
+    unfiltered driver.
+
+    Non-strict on both routes: candidate ids deleted between the Phase-1
+    SQL and this pass (or never known) are silently dropped —
+    ``candidate_masks`` never sets their bit, ``locate_rows`` skips them.
+    Duplicates collapse (``np.unique``), and ties break by global row on
+    both routes, so the two are bit-identical.
+    """
+    from repro.core.segments import gather_days, gather_rows
+
+    backend = get_backend(backend)
+    # avoid python-int boxing for array inputs (the engine already hands
+    # over the canonical unique-sorted array from Request admission; the
+    # sortedness check below then skips the redundant O(c log c) sort)
+    cand = (candidate_ids if isinstance(candidate_ids, np.ndarray)
+            else np.asarray(list(candidate_ids), dtype=np.int64))
+    cand = cand.astype(np.int64, copy=False).ravel()
+    if cand.size > 1 and not np.all(cand[1:] > cand[:-1]):
+        cand = np.unique(cand)
+    n_live = sum(s.live_count for s in segments)
+    if cand.size == 0 or n_live == 0:
+        return [_empty_candidates() for _ in plans]
+    if router is None:
+        router = PrefilterRouter()
+    if now is None:
+        now = time.time()
+
+    if router.use_masked(int(cand.size), n_live):
+        t0 = time.perf_counter()
+        masks, matched = store.candidate_masks(cand, segments)
+        router.mask_build_ms += (time.perf_counter() - t0) * 1e3
+        router.routed_masked += weight
+        if matched == 0:
+            return [_empty_candidates() for _ in plans]
+        return score_select_segments(
+            backend, segments, plans, ks, now=now, candidate_masks=masks)
+
+    router.routed_gather += weight
+    rows = store.locate_rows(cand, segments)
+    if rows.size == 0:
+        return [_empty_candidates() for _ in plans]
+    sub = gather_rows(segments, rows)
+    days = gather_days(segments, rows, now)
+    sel = backend.score_select(
+        sub, days, plans, [min(k, int(rows.size)) for k in ks])
+    return [(rows[idx], vals) for idx, vals in sel]
 
 
 def finalize_segment_candidates(

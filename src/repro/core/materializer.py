@@ -194,6 +194,7 @@ class Materializer:
         fts_table: str = "chunks_fts",
         now: Optional[float] = None,
         engine: Union[str, ExecutionBackend] = "reference",
+        serving=None,
     ) -> None:
         self.conn = conn
         self.cache = cache
@@ -202,6 +203,11 @@ class Materializer:
         # resolve through the shared backend registry up front so an unknown
         # engine fails at construction, not mid-rewrite
         self.engine = get_backend(engine)
+        # optional async batched engine: when attached, vec_ops base
+        # rankings route through it so SQL-surface queries — filtered ones
+        # included — micro-batch and pipeline with all other traffic
+        # instead of scoring synchronously on this thread
+        self.serving = serving
 
     # -- public API ----------------------------------------------------------
 
@@ -283,8 +289,15 @@ class Materializer:
                 return table
 
         try:
+            base_search = None
+            if self.serving is not None:
+                # hand the parsed plan over so admission skips the
+                # duplicate parse+embed of the same tokens
+                base_search = (lambda plan, k: self.serving.search(
+                    tokens, k=k, candidate_ids=candidate_ids, plan=plan))
             cols, results = self.cache.search_full(
-                tokens, candidate_ids, now=self.now, engine=self.engine
+                tokens, candidate_ids, now=self.now, engine=self.engine,
+                base_search=base_search,
             )
         except Exception as e:  # grammar errors -> explicit failure
             raise MaterializeError(f"vec_ops failed: {e}") from e

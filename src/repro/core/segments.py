@@ -46,6 +46,7 @@ __all__ = [
     "segment_offsets",
     "gather_rows",
     "gather_ids",
+    "gather_days",
 ]
 
 SECONDS_PER_DAY = 86400.0
@@ -139,6 +140,24 @@ def gather_ids(
         sel = seg_idx == s
         out[sel] = segments[s].ids[local[sel]]
     return out
+
+
+def gather_days(
+    segments: Sequence[CorpusSegment], global_rows: np.ndarray, now: float
+) -> Optional[np.ndarray]:
+    """Per-row age in days at ``now`` for global row offsets (None when the
+    segments carry no timestamps — decay plans are rejected upstream)."""
+    if not segments or segments[0].timestamps is None:
+        return None
+    gidx = np.asarray(global_rows, dtype=np.int64)
+    if gidx.size == 0:
+        return np.zeros(0, dtype=np.float32)
+    seg_idx, local = _locate(segments, gidx)
+    ts = np.empty(gidx.size, dtype=np.float64)
+    for s in np.unique(seg_idx):
+        sel = seg_idx == s
+        ts[sel] = segments[s].timestamps[local[sel]]
+    return np.maximum((now - ts) / SECONDS_PER_DAY, 0.0).astype(np.float32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -426,3 +445,99 @@ class SegmentedCorpusStore:
             return None
         seg, row = loc
         return seg.matrix[row]
+
+    def gather_embeddings(
+        self, chunk_ids: Sequence[int]
+    ) -> Tuple[np.ndarray, List[int]]:
+        """Embedding rows for ``chunk_ids`` straight off the id index —
+        no live-view materialization (the view concatenates EVERY live row
+        just to gather a handful).  Returns ``(rows, missing)`` where
+        ``rows`` stacks the found ids' embeddings in request order and
+        ``missing`` lists ids not live in the store (non-strict: the
+        caller decides whether that is an error)."""
+        rows: List[np.ndarray] = []
+        missing: List[int] = []
+        with self.lock:
+            for cid in chunk_ids:
+                loc = self._loc.get(int(cid))
+                if loc is None:
+                    missing.append(int(cid))
+                else:
+                    seg, row = loc
+                    rows.append(seg.matrix[row])
+        mat = (np.stack(rows).astype(np.float32, copy=False) if rows
+               else np.zeros((0, self.dim), dtype=np.float32))
+        return mat, missing
+
+    # -- Phase-1 candidate lookups (the filtered-retrieval batch APIs) -------
+
+    def candidate_masks(
+        self,
+        candidate_ids: np.ndarray,
+        segments: Optional[Sequence[CorpusSegment]] = None,
+    ) -> Tuple[List[Optional[np.ndarray]], int]:
+        """Batch candidate lookup: id set -> per-segment row bitmasks.
+
+        ``masks[i]`` is a ``(segments[i].n_rows,)`` bool array, True on the
+        LIVE rows whose chunk id is in ``candidate_ids`` — candidates ∧
+        ¬tombstones, ready to hand to ``score_select``'s ``mask`` argument
+        so the warm device-resident segment matrices score with
+        non-candidates at -inf instead of gathering a scratch sub-corpus.
+        Segments holding no candidate stay ``None`` (skipped entirely by
+        the segment driver).  Returns ``(masks, n_matched)``.
+
+        Non-strict by construction: ids unknown to the store — including
+        ids tombstoned between the Phase-1 SQL and this lookup — simply
+        never set a bit.  The scan is vectorized (``np.isin`` per sealed
+        ``ids`` array), so cost is O(corpus), independent of how the ids
+        scatter across segments — the selectivity router only takes this
+        path when the candidate set is a large fraction of the corpus.
+        """
+        cand = np.asarray(candidate_ids, dtype=np.int64)
+        if segments is None:
+            segments = self.segments
+        masks: List[Optional[np.ndarray]] = []
+        matched = 0
+        for seg in segments:
+            if cand.size == 0 or seg.n_rows == 0 or not seg.live_count:
+                masks.append(None)
+                continue
+            m = np.isin(seg.ids, cand)
+            if seg.n_dead:
+                m &= seg.live_mask
+            hits = int(np.count_nonzero(m))
+            if hits == 0:
+                masks.append(None)
+            else:
+                masks.append(m)
+                matched += hits
+        return masks, matched
+
+    def locate_rows(
+        self,
+        candidate_ids: np.ndarray,
+        segments: Sequence[CorpusSegment],
+    ) -> np.ndarray:
+        """Global row offsets (ascending) of the live candidate ids within
+        the ``segments`` snapshot — the gather-path counterpart of
+        :meth:`candidate_masks`.  O(candidates) via the id index, so a
+        highly selective Phase-1 filter resolves without touching the rest
+        of the corpus.  Non-strict: unknown/tombstoned ids are dropped, and
+        ids living in a segment not part of the snapshot (compacted away
+        after it was taken) are dropped too.  Ascending order is the
+        canonical tie order — it matches the masked path's segment-major
+        merge bit for bit."""
+        off = segment_offsets(segments)
+        seg_index = {id(s): i for i, s in enumerate(segments)}
+        rows: List[int] = []
+        with self.lock:
+            for cid in np.asarray(candidate_ids, dtype=np.int64):
+                loc = self._loc.get(int(cid))
+                if loc is None:
+                    continue
+                i = seg_index.get(id(loc[0]))
+                if i is None:
+                    continue
+                rows.append(int(off[i]) + loc[1])
+        rows.sort()
+        return np.asarray(rows, dtype=np.int64)

@@ -11,7 +11,13 @@ Execution is dispatched through the :mod:`repro.core.backends` registry
 via the fused ``score_select`` stage — full-corpus searches route through
 :func:`~repro.core.backends.score_select_segments` (per-segment scoring
 with on-device tombstone masking + exact union merge), so only
-(pool,)-sized candidate lists ever come back from the backend.
+(pool,)-sized candidate lists ever come back from the backend.  Phase-1
+pre-filtered searches route through
+:func:`~repro.core.backends.score_select_prefiltered`: a selectivity-aware
+:class:`~repro.core.backends.PrefilterRouter` picks masked-device scoring
+(candidates ∧ live masked to -inf over the SAME warm segment matrices —
+zero per-query gather/upload) or host-gathering the candidate rows when
+the filter is sharp, bit-identical either way.
 ``engine`` accepts any registered backend name (``reference-numpy``,
 ``fused-numpy``, ``jit-jax``, ``pallas``, ``sharded``; the seed's
 ``"reference"``/``"fused"`` aliases keep working) or an
@@ -30,14 +36,13 @@ import numpy as np
 
 from repro.core import grammar
 from repro.core import modulations as M
-from repro.core.backends import (ExecutionBackend, finalize_candidates,
+from repro.core.backends import (ExecutionBackend, PrefilterRouter,
                                  finalize_segment_candidates, get_backend,
+                                 score_select_prefiltered,
                                  score_select_segments)
 from repro.core.segments import SegmentedCorpusStore
 
 Engine = Union[str, ExecutionBackend]
-
-SECONDS_PER_DAY = 86400.0
 
 
 class VectorCache:
@@ -59,6 +64,7 @@ class VectorCache:
         *,
         normalized: bool = False,
         store: Optional[SegmentedCorpusStore] = None,
+        prefilter: Optional[PrefilterRouter] = None,
     ) -> None:
         if store is not None:
             if matrix is not None or len(ids):
@@ -76,6 +82,10 @@ class VectorCache:
             self.store = SegmentedCorpusStore(dim=matrix.shape[1])
             self.store.append(ids, matrix, timestamps, normalized=normalized)
         self.embed_fn = embed_fn
+        # Phase-1 filtered retrieval: the selectivity-aware router (shared
+        # with the batched engine, so direct and batched filtered queries
+        # route — and count — identically)
+        self.prefilter = prefilter or PrefilterRouter()
         self._view: Optional[Tuple] = None
         self._view_version = -1
 
@@ -178,15 +188,12 @@ class VectorCache:
         return np.asarray(rows, dtype=np.int64)
 
     def embeddings_for_ids(self, chunk_ids: Sequence[int]) -> np.ndarray:
-        # ONE view snapshot for both the id lookup and the row gather:
-        # admission-time parse runs on many client threads while the
-        # engine's idle-gap compaction may rebuild the live view, so
-        # resolving rows against one view and indexing another would
-        # gather wrong rows (or IndexError past the compacted end)
-        _, matrix, _, row_of_id = self._live_view()
-        rows = [row_of_id[int(i)] for i in chunk_ids
-                if int(i) in row_of_id]
-        if not rows:
+        # straight off the store's id index under its lock — no live-view
+        # materialization (the view concatenates EVERY live row just to
+        # gather a handful), and no torn view/version reads while the
+        # engine's idle-gap compaction rebuilds segments
+        rows, missing = self.store.gather_embeddings(chunk_ids)
+        if rows.shape[0] == 0:
             requested = [int(i) for i in chunk_ids]
             raise grammar.GrammarError(
                 f"centroid: none of the {len(requested)} requested ids "
@@ -194,7 +201,7 @@ class VectorCache:
                 + (f" +{len(requested) - 10} more)" if len(requested) > 10
                    else ")")
             )
-        return matrix[np.asarray(rows, dtype=np.int64)]
+        return rows
 
     # -- the search entry point ----------------------------------------------
 
@@ -227,15 +234,25 @@ class VectorCache:
         *,
         now: Optional[float] = None,
         engine: Engine = "reference",
+        base_search=None,
     ):
         """Like :meth:`search` but also computes the §3.2 STRUCTURAL
         operators (`cluster:K`, `central`) over the selected candidates.
         Returns (column_names, rows) — the materializer's temp-table shape.
+
+        ``base_search(plan, k)``, when given, produces the base ranking in
+        place of :meth:`search_plan` — the materializer uses it to route
+        queries through the async batched engine so SQL-surface traffic
+        micro-batches and pipelines with everything else.
         """
         if self.embed_fn is None:
             raise ValueError("VectorCache.search_full requires an embed function")
         plan = grammar.parse(tokens, self.embed_fn, self.embeddings_for_ids)
-        base = self.search_plan(plan, candidate_ids, now=now, engine=engine)
+        if base_search is not None:
+            base = base_search(plan, plan.pool)
+        else:
+            base = self.search_plan(plan, candidate_ids, now=now,
+                                    engine=engine)
         # ONE column-assembly block shared by the early-return and
         # structural paths (they previously each built their own)
         cols = ["id", "score"]
@@ -247,8 +264,16 @@ class VectorCache:
             return cols, base
         from repro.core import structural
 
-        sel_rows = self.rows_for_ids([i for i, _ in base])
-        embeds = self.matrix[sel_rows]
+        # gather the <=pool selected rows straight off the store's id
+        # index — materializing the full live-view matrix for this gather
+        # cost O(corpus) per structural query; a racing delete between
+        # scoring and this gather just drops the affected rows
+        embeds, missing = self.store.gather_embeddings([i for i, _ in base])
+        if missing:
+            gone = set(missing)
+            base = [r for r in base if int(r[0]) not in gone]
+            if not base:
+                return cols, base
         extra = []
         if plan.cluster is not None:
             extra.append(structural.kmeans_labels(embeds, plan.cluster))
@@ -273,24 +298,25 @@ class VectorCache:
         ref = time.time() if now is None else now
 
         if candidate_ids is not None:
-            # Phase-1 pre-filtered sub-corpus: gather the (small) live rows
-            # and score them monolithically, as before
-            sub_rows = self.rows_for_ids(candidate_ids)
-            if sub_rows.size == 0:
-                return []
-            matrix = self.matrix[sub_rows]
-            ids = self.ids[sub_rows]
-            days_ago = None
-            if plan.decay is not None:
-                if self.timestamps is None:
+            # Phase-1 pre-filtered query: the selectivity-aware router
+            # (self.prefilter) picks masked-device scoring of the warm
+            # per-segment matrices vs gathering the candidate rows into a
+            # scratch matrix — same device-pass/host-tail split as the
+            # full-corpus path, same lock discipline.  Non-strict: ids
+            # deleted between the Phase-1 SQL and this pass drop silently.
+            with self.store.lock:
+                segs = self.store.segments
+                n_live = self.store.n_live
+                if (plan.decay is not None
+                        and not self.store.has_timestamps):
                     raise ValueError("decay: requires timestamps in the cache")
-                days_ago = np.maximum(
-                    (ref - self.timestamps[sub_rows]) / SECONDS_PER_DAY, 0.0
-                ).astype(np.float32)
-            k = min(plan.pool, matrix.shape[0])
-            (idx, vals), = backend.score_select(matrix, days_ago, [plan], [k])
-            idx, vals = finalize_candidates(matrix, idx, vals, k, plan)
-            return [(int(ids[i]), float(v)) for i, v in zip(idx, vals)]
+                k = min(plan.pool, n_live)
+                selected = score_select_prefiltered(
+                    backend, self.store, segs, [plan], [k], candidate_ids,
+                    now=ref, router=self.prefilter)
+            (results,) = finalize_segment_candidates(
+                segs, [plan], [k], selected)
+            return results
 
         # Full corpus: the two-stage segmented pipeline.  The DEVICE PASS
         # (score_select_segments) runs under the store lock so ingest /

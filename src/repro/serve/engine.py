@@ -48,6 +48,14 @@ can't produce negative or inflated latencies.  ``close()`` drains the
 queue: every request not yet served fails with :class:`EngineClosedError`
 instead of hanging into its timeout.
 
+Phase-1 filtered queries are first-class batch citizens: ``search`` /
+``asearch`` take ``candidate_ids`` and the device stage groups requests
+by canonical candidate set — unfiltered requests share one segment pass,
+each distinct filter shares one :func:`score_select_prefiltered` call
+(the cache's selectivity router picks masked-device vs gather-host), and
+every group produces the same ``(global_rows, scores)`` contract, so the
+host tail and the pipeline overlap are untouched.
+
 Live corpora: :meth:`ingest` and :meth:`delete` append/tombstone chunks
 between batches (the store lock spans one device pass, so a mutation
 never lands inside a batch).  Failure isolation is per request: a bad
@@ -66,12 +74,14 @@ import dataclasses
 import itertools
 import threading
 import time
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.backends import (ExecutionBackend,
                                  finalize_segment_candidates, get_backend,
+                                 score_select_prefiltered,
                                  score_select_segments)
 from repro.core.grammar import parse
 from repro.core.segments import CompactionPolicy
@@ -106,9 +116,13 @@ _seq = itertools.count()
 @dataclasses.dataclass
 class Request:
     tokens: str
-    k: int = 10
+    k: Optional[int] = 10              # None = the parsed plan's pool size
     priority: int = 0                  # higher serves sooner at collect time
     deadline_ms: Optional[float] = None  # relative to enqueue; None = never
+    # Phase-1 pre-filter output; canonicalized (unique, sorted) at
+    # construction on the CALLER's thread so identical filters from
+    # different clients group into one scoring call at the device stage
+    candidate_ids: Optional[np.ndarray] = None
     # monotonic clock: NTP steps can't produce negative/inflated latencies
     enqueued_at: float = dataclasses.field(default_factory=time.monotonic)
     latency_ms: float = 0.0
@@ -116,6 +130,23 @@ class Request:
     seq: int = dataclasses.field(default_factory=lambda: next(_seq))
     future: "cf.Future[List[Tuple[int, float]]]" = dataclasses.field(
         default_factory=cf.Future)
+
+    def __post_init__(self) -> None:
+        if self.candidate_ids is None:
+            self._filter_key = None
+        else:
+            arr = (self.candidate_ids
+                   if isinstance(self.candidate_ids, np.ndarray)
+                   else np.asarray(list(self.candidate_ids), dtype=np.int64))
+            self.candidate_ids = np.unique(arr.astype(np.int64, copy=False))
+            self._filter_key = self.candidate_ids.tobytes()
+
+    @property
+    def filter_key(self) -> Optional[bytes]:
+        """Batch-grouping key: requests with the same canonical candidate
+        set share one filtered scoring call (None = unfiltered); computed
+        once at admission, not per batch."""
+        return self._filter_key
 
     def expired(self, now_monotonic: float) -> bool:
         if self.deadline_ms is None:
@@ -202,17 +233,28 @@ class BatchedRetrievalEngine:
     def search(
         self,
         tokens: str,
-        k: int = 10,
+        k: Optional[int] = 10,
         timeout: float = 30.0,
         *,
         priority: int = 0,
         deadline_ms: Optional[float] = None,
+        candidate_ids: Optional[Sequence[int]] = None,
+        plan: Optional[Any] = None,
     ) -> List[Tuple[int, float]]:
         """Blocking search (thread-safe).  Raises :class:`QueueFullError`
         at capacity, :class:`DeadlineExceededError` past ``deadline_ms``,
-        :class:`EngineClosedError` after :meth:`close`."""
+        :class:`EngineClosedError` after :meth:`close`.
+
+        ``candidate_ids`` is the Phase-1 pre-filter output (None = full
+        corpus); filtered requests batch and pipeline like everything
+        else, routed masked-device vs gather-host by the cache's
+        selectivity router.  ``k=None`` serves the plan's full pool.
+        ``plan`` hands over an already-parsed ModulationPlan for
+        ``tokens`` — admission skips re-parsing (the materializer uses
+        this so SQL-surface queries don't pay the parse+embed twice)."""
         req = Request(tokens=tokens, k=k, priority=priority,
-                      deadline_ms=deadline_ms)
+                      deadline_ms=deadline_ms, candidate_ids=candidate_ids,
+                      plan=plan)
         self._submit(req)
         try:
             return req.future.result(timeout)
@@ -224,15 +266,18 @@ class BatchedRetrievalEngine:
     async def asearch(
         self,
         tokens: str,
-        k: int = 10,
+        k: Optional[int] = 10,
         *,
         priority: int = 0,
         deadline_ms: Optional[float] = None,
+        candidate_ids: Optional[Sequence[int]] = None,
+        plan: Optional[Any] = None,
     ) -> List[Tuple[int, float]]:
         """Awaitable search: usable from ANY event loop (the engine runs
         its own private loop; results cross via the request future)."""
         req = Request(tokens=tokens, k=k, priority=priority,
-                      deadline_ms=deadline_ms)
+                      deadline_ms=deadline_ms, candidate_ids=candidate_ids,
+                      plan=plan)
         self._submit(req)
         return await asyncio.wrap_future(req.future)
 
@@ -307,8 +352,13 @@ class BatchedRetrievalEngine:
                     f"admission queue at capacity ({self.max_queue}); "
                     f"retry with backoff")
             self._depth += 1  # slot reserved before the (costly) parse
-        if self.pipeline:
-            try:
+        try:
+            if req.plan is not None:
+                # pre-parsed plan handed over (materializer path): skip
+                # the duplicate parse+embed, but still validate at
+                # admission so a bad request fails fast in BOTH modes
+                self._validate(req.plan)
+            elif self.pipeline:
                 # parse + validate on the CALLER's thread: bad requests
                 # fail fast (no queue slot held), parse work spreads
                 # across client threads instead of serializing on the
@@ -316,9 +366,9 @@ class BatchedRetrievalEngine:
                 # core comparator keeps the legacy behavior (parse inside
                 # the serve loop, errors delivered via the future).
                 req.plan = self._parse(req)
-            except Exception:
-                self._dec_depth(1)
-                raise
+        except Exception:
+            self._dec_depth(1)
+            raise
         try:
             self._loop.call_soon_threadsafe(self._admit, req)
         except RuntimeError:  # loop closed between the check and the call
@@ -332,9 +382,12 @@ class BatchedRetrievalEngine:
     def _parse(self, req: Request):
         plan = parse(req.tokens, self.cache.embed_fn,
                      self.cache.embeddings_for_ids)
+        self._validate(plan)
+        return plan
+
+    def _validate(self, plan) -> None:
         if plan.decay is not None and not self.cache.store.has_timestamps:
             raise ValueError("decay: requires timestamps in the cache")
-        return plan
 
     def _admit(self, req: Request) -> None:  # loop thread
         if self._closing:
@@ -506,9 +559,30 @@ class BatchedRetrievalEngine:
             with store.lock:
                 segs = store.segments
                 n_live = store.n_live
-                ks = [min(req.k, n_live) for req in live]
-                selected = score_select_segments(
-                    self.backend, segs, plans, ks, now=ref)
+                ks = [min(req.k if req.k is not None else req.plan.pool,
+                          n_live) for req in live]
+                # group by Phase-1 filter: unfiltered requests share one
+                # segment pass; each distinct candidate set shares one
+                # routed (masked-device / gather-host) pass — identical
+                # filters from different clients fold into one call
+                groups: "OrderedDict[Optional[bytes], List[int]]"
+                groups = OrderedDict()
+                for j, req in enumerate(live):
+                    groups.setdefault(req.filter_key, []).append(j)
+                selected: List = [None] * len(live)
+                for key, idxs in groups.items():
+                    g_plans = [plans[j] for j in idxs]
+                    g_ks = [ks[j] for j in idxs]
+                    if key is None:
+                        sel = score_select_segments(
+                            self.backend, segs, g_plans, g_ks, now=ref)
+                    else:
+                        sel = score_select_prefiltered(
+                            self.backend, store, segs, g_plans, g_ks,
+                            live[idxs[0]].candidate_ids, now=ref,
+                            router=self.cache.prefilter, weight=len(idxs))
+                    for j, s in zip(idxs, sel):
+                        selected[j] = s
         except Exception as e:  # backend failure: fail the whole batch loudly
             for req in live:
                 self._fail(req, e, count_depth=False)

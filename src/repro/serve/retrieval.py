@@ -10,7 +10,9 @@ Live corpora: ``INSERT INTO chunks`` / ``DELETE FROM chunks`` through
 :meth:`RetrievalService.delete` methods) keep SQLite, FTS5 and the
 segmented VectorCache in sync — only the touched segment changes.
 :meth:`stats` surfaces query/error counts plus the engine's PlanCache
-(hit/trace/eviction) and device-upload counters and the store shape.
+(hit/trace/eviction) and device-upload counters, the store shape, and the
+Phase-1 ``prefilter`` router counters (``routed_masked`` /
+``routed_gather`` / ``mask_build_ms``).
 
 Async serving: :meth:`serving` attaches the continuous-batching
 :class:`~repro.serve.engine.BatchedRetrievalEngine` (admission queue with
@@ -93,7 +95,7 @@ class RetrievalService:
                 return SearchResult(True, cols, rows,
                                     latency_ms=(time.time() - t0) * 1e3)
             mz = Materializer(self.conn, self.cache, now=self.now,
-                              engine=self.engine)
+                              engine=self.engine, serving=self._serving)
             cols, rows = mz.execute(query)
             return SearchResult(True, cols, rows,
                                 latency_ms=(time.time() - t0) * 1e3)
@@ -125,16 +127,20 @@ class RetrievalService:
     async def search_async(
         self,
         tokens: str,
-        k: int = 10,
+        k: Optional[int] = 10,
         *,
         priority: int = 0,
         deadline_ms: Optional[float] = None,
+        candidate_ids: Optional[Sequence[int]] = None,
     ) -> List[Tuple[int, float]]:
         """Awaitable token search through the batched engine: admission
         (with backpressure), micro-batching, pipelined scoring — without
-        ever blocking the caller's event loop."""
+        ever blocking the caller's event loop.  ``candidate_ids`` is the
+        Phase-1 pre-filter output; filtered requests batch and route
+        (masked-device vs gather-host) like every other request."""
         return await self.serving().asearch(
-            tokens, k, priority=priority, deadline_ms=deadline_ms)
+            tokens, k, priority=priority, deadline_ms=deadline_ms,
+            candidate_ids=candidate_ids)
 
     async def flex_search_async(self, query: str) -> SearchResult:
         """Awaitable ``flex_search`` (SQL / @preset): the materializer is
@@ -208,13 +214,16 @@ class RetrievalService:
         the observability half of the PlanCache productionization.
         ``serving`` (queue_depth / rejected / deadline_misses /
         overlapped_batches / compactions_run) appears once the async
-        batched engine is attached via :meth:`serving`.
+        batched engine is attached via :meth:`serving`.  ``prefilter``
+        (threshold / routed_masked / routed_gather / mask_build_ms) is the
+        Phase-1 selectivity router's ledger.
         """
         out: Dict[str, Any] = {
             "engine": self.engine.name,
             "queries": self.query_count,
             "errors": self.error_count,
             "store": self.cache.store.stats(),
+            "prefilter": self.cache.prefilter.stats(),
         }
         if self._serving is not None:
             out["serving"] = self._serving.stats()

@@ -159,6 +159,31 @@ def test_serve_section_gated_and_drop_fails():
     assert len(failures) == 1 and "serve_throughput" in failures[0]
 
 
+def test_prefilter_section_gated_and_drop_fails():
+    """The filtered-retrieval scenario gates under the same rules: a
+    routed-path regression past tolerance fails, and dropping the whole
+    section is section-level silent omission."""
+    base = _snap({"jit-jax": _row(30.0)})
+    base["prefilter_backends"] = {"jit-jax": _row(25.0),
+                                  "pallas": {"skipped": "requires TPU"}}
+    ok = _snap({"jit-jax": _row(30.0)})
+    ok["prefilter_backends"] = {"jit-jax": _row(28.0),
+                                "pallas": {"skipped": "requires TPU"}}
+    failures, notes = compare_all(ok, base, DEFAULT_TOL)
+    assert failures == []
+    assert any(n.startswith("prefilter_backends/") for n in notes)
+    bad = _snap({"jit-jax": _row(30.0)})
+    bad["prefilter_backends"] = {"jit-jax": _row(60.0),
+                                 "pallas": {"skipped": "requires TPU"}}
+    failures, _ = compare_all(bad, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "prefilter_backends/jit-jax" in failures[0]
+    dropped = _snap({"jit-jax": _row(30.0)})
+    failures, _ = compare_all(dropped, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "prefilter_backends" in failures[0] and "dropped" in failures[0]
+
+
 def test_merge_min_folds_delta_section():
     a = _snap({"jit-jax": _row(30.0)})
     a["delta_backends"] = {"jit-jax": _row(50.0)}

@@ -1,0 +1,397 @@
+"""Phase-1 filtered retrieval: masked-device path, router, engine threading.
+
+The filtered-search invariants this suite pins:
+
+1. **Masked == gather == oracle** — a pre-filtered search through the
+   masked-device path (candidates ∧ live masked to -inf over the warm
+   per-segment matrices) and through the gather-host path (scratch
+   sub-corpus) are bit-identical to each other and to a monolithic
+   host-gather oracle, on ALL five backends, for every segmentation ×
+   tombstone/candidate overlap × decay × diverse combination.
+2. **Router** — the selectivity threshold picks the path per query and
+   the ``prefilter`` counters ledger every decision.
+3. **Non-strict candidates** — ids deleted between the Phase-1 SQL and
+   Phase-2 scoring (or never known, or duplicated) drop silently on BOTH
+   router paths; an all-dead candidate set yields [] not an error.
+4. **Engine threading** — ``candidate_ids`` flows through
+   ``search``/``asearch``; filtered requests group by candidate set
+   inside a batch and rank identically to the direct path.
+5. **Zero per-query gather on the masked path** — a filtered query via
+   the masked route performs no device upload on a warm store (pinned on
+   the ``uploads`` counter) and never materializes the live view.
+"""
+
+import asyncio
+import sqlite3
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import modulations as M
+from repro.core.backends import (JitJaxBackend, PrefilterRouter,
+                                 FusedNumpyBackend, get_backend,
+                                 list_backends, score_select_prefiltered,
+                                 select_candidates)
+from repro.core.segments import SegmentedCorpusStore
+from repro.core.vectorcache import VectorCache
+from repro.embed import HashEmbedder
+
+BACKENDS = list_backends()
+NOW = 90 * 86400.0
+EMB = HashEmbedder(32)
+
+MASKED = dict(mask_threshold=0.0)   # router kwargs forcing each path
+GATHER = dict(mask_threshold=2.0)
+
+
+def _corpus(n=230, d=32, seed=3):
+    rng = np.random.default_rng(seed)
+    mat = rng.standard_normal((n, d)).astype(np.float32)
+    mat /= np.linalg.norm(mat, axis=1, keepdims=True)
+    days = rng.uniform(0.0, 60.0, n).astype(np.float32)
+    ts = NOW - days.astype(np.float64) * 86400.0
+    return mat, ts
+
+
+def _composed_plan(*, diverse=True, decay=True):
+    q = M.l2_normalize(EMB("how the retrieval system works"))
+    a = M.l2_normalize(EMB("prototype sketch"))
+    b = M.l2_normalize(EMB("production deployment"))
+    x1 = M.l2_normalize(EMB("website landing page"))
+    return M.ModulationPlan(
+        query=q,
+        trajectory=M.TrajectorySpec(direction=b - a),
+        decay=M.DecaySpec(half_life_days=14.0) if decay else None,
+        suppress=(M.SuppressSpec(direction=x1),),
+        diverse=M.DiverseSpec() if diverse else None,
+        pool=25,
+    )
+
+
+def _store_from_splits(mat, ts, splits, deleted=()):
+    store = SegmentedCorpusStore(dim=mat.shape[1])
+    start = 0
+    for size in splits:
+        store.append(np.arange(start, start + size), mat[start:start + size],
+                     ts[start:start + size], normalized=True)
+        start += size
+    assert start == mat.shape[0]
+    if len(deleted):
+        store.delete(deleted)
+    return store
+
+
+def _gather_oracle(mat, ts, deleted, candidate_ids, plan, k):
+    """The monolithic host-gather reference: unique live candidate rows in
+    ascending global-row order, scored by the reference formulation, then
+    the shared top-k/MMR selection.  ids == arange here, so row == id."""
+    rows = np.setdiff1d(np.unique(np.asarray(candidate_ids, dtype=np.int64)),
+                        np.asarray(deleted, dtype=np.int64))
+    rows = rows[rows < mat.shape[0]]  # unknown ids drop
+    if rows.size == 0:
+        return []
+    days = ((NOW - ts[rows]) / 86400.0).astype(np.float32)
+    scores = np.asarray(M.modulate_scores(mat[rows], days, plan))
+    sel = select_candidates(mat[rows], scores, min(k, rows.size), plan)
+    return [(int(rows[i]), float(scores[i])) for i in sel]
+
+
+SEGMENTATIONS = [
+    ("one-segment", [230], ()),
+    ("three-segments", [100, 60, 70], tuple(range(40, 80)) + (150, 229)),
+    ("ragged", [5, 120, 25, 60, 20], tuple(range(0, 230, 7))),
+]
+
+# candidate set deliberately overlapping tombstones, with duplicates and
+# ids the store never saw
+CANDIDATES = tuple(range(0, 230, 2)) + (41, 41, 151, 9999, 10_000)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize(
+    "splits,deleted", [(s, d) for _, s, d in SEGMENTATIONS],
+    ids=[name for name, _, _ in SEGMENTATIONS])
+def test_filtered_search_matches_host_gather_oracle(backend, splits, deleted):
+    """Both router paths == the monolithic host-gather oracle, through the
+    full VectorCache search path (incl. decay + MMR finishing)."""
+    mat, ts = _corpus()
+    for diverse in (False, True):
+        plan = _composed_plan(diverse=diverse)
+        ref = _gather_oracle(mat, ts, deleted, CANDIDATES, plan, plan.pool)
+        for kwargs in (MASKED, GATHER):
+            store = _store_from_splits(mat, ts, splits, deleted)
+            vc = VectorCache(store=store, embed_fn=EMB,
+                             prefilter=PrefilterRouter(**kwargs))
+            got = vc.search_plan(plan, CANDIDATES, now=NOW, engine=backend)
+            assert [i for i, _ in got] == [i for i, _ in ref]
+            np.testing.assert_allclose(
+                [s for _, s in got], [s for _, s in ref],
+                atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_filtered_no_decay_store_without_timestamps(backend):
+    """Filtered search works on a timestamp-free store (non-decay plan)."""
+    mat, _ = _corpus(seed=11)
+    store = SegmentedCorpusStore(dim=32)
+    store.append(np.arange(100), mat[:100], None, normalized=True)
+    store.append(np.arange(100, 230), mat[100:], None, normalized=True)
+    plan = _composed_plan(diverse=False, decay=False)
+    cands = tuple(range(1, 230, 3))
+    ref = _gather_oracle(mat, np.full(230, NOW), (), cands, plan, plan.pool)
+    for kwargs in (MASKED, GATHER):
+        vc = VectorCache(store=store, embed_fn=EMB,
+                         prefilter=PrefilterRouter(**kwargs))
+        got = vc.search_plan(plan, cands, now=NOW, engine=backend)
+        assert [i for i, _ in got] == [i for i, _ in ref]
+
+
+def test_router_selectivity_boundary():
+    """The threshold is a >= boundary on unique-candidate count over live
+    rows; every decision lands in the counters."""
+    mat, ts = _corpus(n=200, seed=5)
+    store = _store_from_splits(mat, ts, [200])
+    router = PrefilterRouter(mask_threshold=0.3)
+    vc = VectorCache(store=store, embed_fn=EMB, prefilter=router)
+    plan = _composed_plan(diverse=False)
+
+    vc.search_plan(plan, list(range(60)), now=NOW, engine="fused-numpy")
+    assert (router.routed_masked, router.routed_gather) == (1, 0)
+    assert router.mask_build_ms > 0.0
+
+    built = router.mask_build_ms
+    vc.search_plan(plan, list(range(59)), now=NOW, engine="fused-numpy")
+    assert (router.routed_masked, router.routed_gather) == (1, 1)
+    assert router.mask_build_ms == built  # gather path builds no mask
+
+    # duplicates don't inflate selectivity: 59 unique ids stay gather
+    vc.search_plan(plan, list(range(59)) * 3, now=NOW, engine="fused-numpy")
+    assert (router.routed_masked, router.routed_gather) == (1, 2)
+
+    # the full-corpus (unfiltered) path never consults the router
+    vc.search_plan(plan, now=NOW, engine="fused-numpy")
+    assert (router.routed_masked, router.routed_gather) == (1, 2)
+
+
+@pytest.mark.parametrize("kwargs", [MASKED, GATHER],
+                         ids=["masked", "gather"])
+def test_candidates_deleted_between_phases_drop_silently(kwargs):
+    """The concurrent-delete bugfix: ids tombstoned between the Phase-1
+    SQL and Phase-2 scoring are non-strict on BOTH router paths — dropped,
+    never raised; an entirely-dead candidate set yields []."""
+    mat, ts = _corpus(seed=19)
+    store = _store_from_splits(mat, ts, [120, 110])
+    vc = VectorCache(store=store, embed_fn=EMB,
+                     prefilter=PrefilterRouter(**kwargs))
+    plan = _composed_plan()
+    candidates = list(range(0, 230, 2))  # Phase-1 ran: these were live
+
+    vc.delete(candidates[:30])           # ...then a concurrent delete won
+    got = vc.search_plan(plan, candidates, now=NOW, engine="jit-jax")
+    assert got, "surviving candidates must still rank"
+    gone = set(candidates[:30])
+    assert not gone & {i for i, _ in got}
+    ref = _gather_oracle(mat, ts, candidates[:30], candidates, plan,
+                         plan.pool)
+    assert [i for i, _ in got] == [i for i, _ in ref]
+
+    vc.delete(candidates)                # now the whole candidate set died
+    assert vc.search_plan(plan, candidates, now=NOW, engine="jit-jax") == []
+
+
+def test_masked_path_zero_gather_zero_upload_on_warm_store():
+    """THE tentpole contract: a masked filtered query scores the warm
+    device-resident segment matrices — no new upload, no plan retrace
+    beyond the width bucket, and no live-view materialization."""
+    mat, ts = _corpus(n=300, seed=23)
+    be = JitJaxBackend()
+    store = _store_from_splits(mat, ts, [200, 100])
+    vc = VectorCache(store=store, embed_fn=EMB,
+                     prefilter=PrefilterRouter(mask_threshold=0.0))
+    plan = _composed_plan(diverse=False)
+
+    for _ in range(2):  # warm: two uploads (one per segment)
+        vc.search_plan(plan, now=NOW, engine=be)
+    uploads = be.uploads
+    traces = be.plan_cache.jax_traces
+    assert vc._view is None  # the segmented pipeline never built a view
+
+    for lo in (0, 10, 20):  # several distinct filters, same structure
+        got = vc.search_plan(plan, list(range(lo, 300, 2)), now=NOW,
+                             engine=be)
+        assert got
+    assert be.uploads == uploads          # zero per-query upload
+    assert be.plan_cache.jax_traces == traces  # zero per-query retrace
+    assert vc._view is None               # still no live view
+
+    # the gather path, by contrast, uploads a scratch matrix every query
+    vc.prefilter = PrefilterRouter(mask_threshold=2.0)
+    vc.search_plan(plan, list(range(0, 300, 2)), now=NOW, engine=be)
+    vc.search_plan(plan, list(range(0, 300, 2)), now=NOW, engine=be)
+    assert be.uploads == uploads + 2
+
+
+def test_engine_groups_filtered_requests_in_one_batch():
+    """Mixed filtered/unfiltered requests collected into ONE batch: each
+    distinct candidate set shares one routed pass, every request ranks
+    exactly like the direct path."""
+
+    class GateBackend(FusedNumpyBackend):
+        name = "gate-prefilter"
+
+        def __init__(self):
+            self.release = threading.Event()
+            self.entered = threading.Event()
+            self.calls = 0
+
+        def score_select(self, *args, **kwargs):
+            self.calls += 1
+            self.entered.set()
+            if not self.release.wait(timeout=15.0):
+                raise RuntimeError("gate never released (test bug)")
+            return super().score_select(*args, **kwargs)
+
+    from repro.serve.engine import BatchedRetrievalEngine
+
+    emb = HashEmbedder(64)
+    texts = [f"item group {i % 5} tail {i}" for i in range(150)]
+    vc = VectorCache(np.arange(150), emb.embed_batch(texts),
+                     np.linspace(0, 89 * 86400, 150), emb)
+    gate = GateBackend()
+    eng = BatchedRetrievalEngine(vc, max_batch=8, max_wait_ms=1.0, now=NOW,
+                                 engine=gate)
+    cand_a = list(range(0, 150, 2))
+    cand_b = list(range(0, 150, 3))
+    try:
+        # park a dummy request inside the device stage, then enqueue the
+        # real mix while it blocks — they collect into one batch
+        import concurrent.futures as cf
+        with cf.ThreadPoolExecutor(7) as ex:
+            dummy = ex.submit(eng.search, "similar:group 0 tail", 3)
+            assert gate.entered.wait(timeout=10.0)
+            specs = [("similar:group 1 tail", cand_a),
+                     ("similar:group 2 tail", cand_a),
+                     ("similar:group 1 tail", list(cand_b)),
+                     ("similar:group 3 tail", None),
+                     ("similar:group 4 tail", None)]
+            futs = [ex.submit(eng.search, q, 5, 20.0, candidate_ids=c)
+                    for q, c in specs]
+            while eng.queue_depth < len(specs):
+                time.sleep(0.005)
+            routed_before = (vc.prefilter.routed_masked
+                             + vc.prefilter.routed_gather)
+            gate.release.set()
+            dummy.result(20.0)
+            results = [f.result(20.0) for f in futs]
+        assert eng.batches_served == 2  # dummy, then the 5-request batch
+        # counters stay per-QUERY even though the two cand_a requests
+        # folded into one scoring pass: 3 filtered requests -> +3
+        assert (vc.prefilter.routed_masked + vc.prefilter.routed_gather
+                - routed_before) == 3
+        # ...but the scoring passes DID fold: dummy + (unfiltered group,
+        # cand_a group, cand_b group) on the one-segment store = 4 calls
+        assert gate.calls == 4
+        for (q, c), got in zip(specs, results):
+            direct = vc.search(q, c, now=NOW, engine="fused-numpy")[:5]
+            assert [i for i, _ in got] == [i for i, _ in direct], q
+    finally:
+        eng.close()
+
+
+def test_asearch_threads_candidate_ids():
+    emb = HashEmbedder(64)
+    texts = [f"doc topic {i % 7} body {i}" for i in range(90)]
+    vc = VectorCache(np.arange(90), emb.embed_batch(texts),
+                     np.linspace(0, 89 * 86400, 90), emb)
+    from repro.serve.engine import BatchedRetrievalEngine
+
+    eng = BatchedRetrievalEngine(vc, max_batch=4, now=NOW)
+    cand = list(range(0, 90, 2))
+    try:
+        got = asyncio.run(eng.asearch("similar:doc topic 3 body", 6,
+                                      candidate_ids=cand))
+        direct = vc.search("similar:doc topic 3 body", cand, now=NOW)[:6]
+        assert [i for i, _ in got] == [i for i, _ in direct]
+        assert all(i % 2 == 0 for i, _ in got)
+    finally:
+        eng.close()
+
+
+def test_materializer_prefilter_routes_through_serving_engine():
+    """With a serving engine attached, vec_ops (pre-filtered included)
+    batches through it — same rows as the direct materializer, and the
+    router counters show up in service stats."""
+    from repro.data.corpus import build_database, generate_corpus
+    from repro.serve.retrieval import RetrievalService
+
+    emb = HashEmbedder(64)
+    conn = sqlite3.connect(":memory:", check_same_thread=False)
+    build_database(conn, generate_corpus(n_chunks=200, n_sessions=10,
+                                         seed=9), emb)
+    svc = RetrievalService(conn, dim=64, embedder=emb,
+                           now=1_770_000_000.0, engine="fused")
+    q = ("SELECT v.id, v.score FROM vec_ops("
+         "'similar:server lifecycle pool:20',"
+         "'SELECT id FROM chunks WHERE type = ''assistant''') v "
+         "ORDER BY v.score DESC LIMIT 5")
+    direct = svc.flex_search(q)
+    assert direct.ok, direct.error
+    svc.serving(max_batch=8)
+
+    embed_calls = []
+    inner = svc.cache.embed_fn
+
+    def counting_embed(text):
+        embed_calls.append(text)
+        return inner(text)
+
+    svc.cache.embed_fn = counting_embed
+    try:
+        batched = svc.flex_search(q)
+        assert batched.ok, batched.error
+        assert batched.rows == direct.rows
+        # the parsed plan is handed to the engine: ONE parse (one
+        # similar: embed) per query, not one per layer
+        assert len(embed_calls) == 1, embed_calls
+        stats = svc.stats()
+        assert stats["prefilter"]["routed_masked"] + \
+            stats["prefilter"]["routed_gather"] >= 2
+        assert stats["serving"]["requests_served"] >= 1
+    finally:
+        svc.cache.embed_fn = inner
+        svc.close()
+
+
+def test_search_full_structural_tail_without_live_view():
+    """The structural operators gather their <=pool rows off the store's
+    id index — a filtered structural query on a multi-segment store never
+    materializes the full live-view matrix."""
+    mat, ts = _corpus(seed=29)
+    store = _store_from_splits(mat, ts, [100, 130], deleted=(3, 104))
+    vc = VectorCache(store=store, embed_fn=EMB)
+    cands = [i for i in range(0, 230, 2)]
+    cols, rows = vc.search_full(
+        "similar:how the retrieval system works cluster:3 central pool:12",
+        cands, now=NOW, engine="jit-jax")
+    assert cols == ["id", "score", "cluster", "central"]
+    assert rows and all(len(r) == 4 for r in rows)
+    assert all(int(r[0]) % 2 == 0 for r in rows)
+    assert vc._view is None  # satellite: no full-matrix materialization
+
+
+def test_prefiltered_driver_empty_and_unknown_sets():
+    mat, ts = _corpus(n=50, seed=31)
+    store = _store_from_splits(mat, ts, [50])
+    plan = _composed_plan(diverse=False)
+    for kwargs in (MASKED, GATHER):
+        router = PrefilterRouter(**kwargs)
+        out = score_select_prefiltered(
+            get_backend("fused-numpy"), store, store.segments,
+            [plan], [10], [], now=NOW, router=router)
+        assert [o[0].size for o in out] == [0]
+        out = score_select_prefiltered(
+            get_backend("fused-numpy"), store, store.segments,
+            [plan], [10], [777, 888], now=NOW, router=router)
+        assert [o[0].size for o in out] == [0]
