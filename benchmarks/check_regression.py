@@ -19,7 +19,10 @@ one row per scheduler mode: ``sync_core`` / ``pipelined``) and the
 ``prefilter_backends`` section (the Phase-1 filtered-retrieval
 selectivity sweep; ``total_ms`` sums the ROUTED path across
 selectivities, so a mis-tuned router or a slowed masked path both
-gate) — is
+gate), the ``diverse_backends`` section (the fully-fused in-graph
+device-MMR lambda sweep) and the ``filter_panel`` section (the
+heterogeneous-filter (N, B) mask-panel cohort vs per-filter serial
+dispatch) — is
 compared against the committed ``BENCH_pem.smoke.json`` baseline; the gate
 fails on a > ``FLEX_BENCH_TOL`` (default 1.5) ratio for ANY backend that
 is not recorded as skipped in the baseline.  A backend present in the
@@ -55,9 +58,11 @@ def compare(
     ``section`` is ``"backends"`` (the fused query path),
     ``"delta_backends"`` (the append+query/delete+query liveness cycle),
     ``"serve_throughput"`` (the offered-load serving sweep, rows keyed
-    by scheduler mode) or ``"prefilter_backends"`` (the filtered-
-    retrieval selectivity sweep); all gate under the same tolerance and
-    skipped-row rules.  Returns (failures, notes)."""
+    by scheduler mode), ``"prefilter_backends"`` (the filtered-
+    retrieval selectivity sweep), ``"diverse_backends"`` (the fused
+    device-MMR sweep) or ``"filter_panel"`` (the (N, B) mask-panel
+    cohort sweep); all gate under the same tolerance and skipped-row
+    rules.  Returns (failures, notes)."""
     failures: List[str] = []
     notes: List[str] = []
     tag = "" if section == "backends" else f"{section}/"
@@ -117,7 +122,8 @@ def compare_all(
     failures: List[str] = []
     notes: List[str] = []
     for section in ("backends", "delta_backends", "serve_throughput",
-                    "prefilter_backends"):
+                    "prefilter_backends", "diverse_backends",
+                    "filter_panel"):
         if section not in baseline:
             continue
         if section != "backends" and section not in new:
@@ -137,7 +143,8 @@ def merge_min(snapshots: List[Dict]) -> Dict:
     if a backend never measured."""
     merged: Dict = dict(snapshots[0])
     for section in ("backends", "delta_backends", "serve_throughput",
-                    "prefilter_backends"):
+                    "prefilter_backends", "diverse_backends",
+                    "filter_panel"):
         backends: Dict[str, Dict] = {}
         for snap in snapshots:
             for name, row in snap.get(section, {}).items():

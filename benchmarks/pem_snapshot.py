@@ -37,6 +37,15 @@ number — sums the path the DEFAULT router picks across the sweep, and
 ``crossover`` records the measured selectivity where masked first beats
 gather on this platform.
 
+``diverse_backends`` measures the fully-fused Phase-2 (in-graph device
+MMR): a diverse-heavy lambda sweep per device-MMR backend, fused
+final-k-on-device path against the host-pool comparator
+(``fused_mmr=False`` + ``mmr_host``), rankings checked bit-identical
+before timing.  ``filter_panel`` measures heterogeneous-filter batching:
+one (N, B) candidate-mask-panel pass for a B-request cohort of DIFFERENT
+weak filters against B serial per-filter masked dispatches, for
+B in {4, 16}.  Both gate on the fused/batched path's ``total_ms``.
+
 ``serve_throughput`` measures the SERVING core, not a single pass: an
 offered-load sweep (closed loop, ``load`` concurrent clients) through the
 continuous-batching engine in both modes — ``sync_core`` (the legacy
@@ -115,6 +124,8 @@ def _bench_backends():
 
         def fused_search():
             (idx, vals), = backend.score_select(cache.matrix, days, [plan], [k])
+            if backend.device_mmr:
+                return idx, vals  # diversity already finished on device
             return finalize_candidates(cache.matrix, idx, vals, k, plan)
 
         t_score = timed(lambda: backend.score(cache.matrix, days, plan))
@@ -257,6 +268,171 @@ def _bench_prefilter():
             }
     finally:
         cache.prefilter = saved_router
+    return rows
+
+
+DIVERSE_LAMBDAS = (0.3, 0.7)
+
+
+def _bench_diverse():
+    """Fully-fused diverse retrieval: in-graph device MMR vs host pool.
+
+    Diverse-heavy sweep (lam in ``DIVERSE_LAMBDAS``, the headline
+    pool:500 plan) per device-MMR backend, timing the FUSED path
+    (``score_select`` returns the final k — the pool never leaves the
+    device) against the HOST comparator (``fused_mmr=False``: ship the
+    oversample pool back and run the ``mmr_host`` oracle).  ``total_ms``
+    — the gated number — sums the fused path across the sweep, and every
+    fused ranking is checked BIT-IDENTICAL to the host oracle before a
+    time is recorded (``oracle_match``).  Backends without device MMR
+    are recorded as skipped so the trajectory stays diffable.
+    """
+    import dataclasses as _dc
+
+    import jax
+
+    conn, cache, chunks, emb = production_db()
+    base_plan = parse(TOKENS, emb, cache.embeddings_for_ids)
+    n = cache.matrix.shape[0]
+    days = np.maximum((NOW - cache.timestamps) / 86400.0, 0.0).astype(np.float32)
+
+    on_tpu = jax.default_backend() == "tpu"
+    rows = {}
+    for name in list_backends():
+        if name == "pallas" and not on_tpu:
+            rows[name] = {"skipped": "requires TPU (interpret mode measures "
+                                     "the emulator, not the kernel)"}
+            emit(f"pem/skip_diverse_{name}", 0.0, "off-TPU")
+            continue
+        backend = get_backend(name)
+        if not backend.device_mmr:
+            rows[name] = {"skipped": "no device MMR (host oracle IS the "
+                                     "fused path here)"}
+            emit(f"pem/skip_diverse_{name}", 0.0, "host backend")
+            continue
+        sweep = {}
+        total_s = 0.0
+        oracle_match = True
+        for lam in DIVERSE_LAMBDAS:
+            plan = _dc.replace(
+                base_plan, diverse=_dc.replace(base_plan.diverse, lam=lam))
+            k = plan.pool
+
+            def fused():
+                (idx, vals), = backend.score_select(
+                    cache.matrix, days, [plan], [k])
+                return idx, vals
+
+            def host():
+                (idx, vals), = backend.score_select(
+                    cache.matrix, days, [plan], [k], fused_mmr=False)
+                return finalize_candidates(cache.matrix, idx, vals, k, plan)
+
+            fi, fv = fused()
+            hi, hv = host()
+            if list(fi) != list(hi):
+                oracle_match = False
+            t_fused = timed(fused)
+            t_host = timed(host)
+            total_s += t_fused
+            sweep[str(lam)] = {
+                "fused_ms": round(t_fused * 1e3, 3),
+                "host_ms": round(t_host * 1e3, 3),
+                "speedup": round(t_host / max(t_fused, 1e-9), 2),
+            }
+            emit(f"pem/diverse_{name}_lam{lam}", t_fused,
+                 f"n={n} pool={k} host={t_host*1e3:.2f}ms "
+                 f"match={list(fi) == list(hi)}")
+        rows[name] = {
+            "total_ms": round(total_s * 1e3, 3),
+            "oracle_match": oracle_match,
+            "sweep": sweep,
+        }
+    return rows
+
+
+PANEL_BATCH_SIZES = (4, 16)
+PANEL_SELECTIVITY = 0.3
+
+
+def _bench_filter_panel():
+    """Heterogeneous-filter batches: one (N, B) panel pass vs B serial
+    per-filter dispatches.
+
+    For B in ``PANEL_BATCH_SIZES``, draws B DIFFERENT ~30%-selectivity
+    candidate sets (the weak-filter regime where each group would cost a
+    full-corpus masked pass anyway) and times ``score_select_filter_panel``
+    — ONE batched matmul + masked selection for the whole cohort —
+    against the serial comparator: one ``score_select_prefiltered``
+    masked pass per filter.  ``total_ms`` — the gated number — sums the
+    panel path across batch sizes; every panel ranking is checked
+    BIT-IDENTICAL to its serial counterpart first (``serial_match``).
+    """
+    import jax
+
+    from repro.core.backends import (PrefilterRouter,
+                                     score_select_filter_panel,
+                                     score_select_prefiltered)
+
+    conn, cache, chunks, emb = production_db()
+    plan = parse(PREFILTER_TOKENS, emb, cache.embeddings_for_ids)
+    store = cache.store
+    segments = store.segments
+    ids = cache.ids
+    n = ids.shape[0]
+    rng = np.random.default_rng(11)
+    size = max(1, int(round(n * PANEL_SELECTIVITY)))
+    all_sets = [np.sort(rng.choice(ids, size=size, replace=False))
+                for _ in range(max(PANEL_BATCH_SIZES))]
+
+    on_tpu = jax.default_backend() == "tpu"
+    rows = {}
+    for name in list_backends():
+        if name == "pallas" and not on_tpu:
+            rows[name] = {"skipped": "requires TPU (interpret mode measures "
+                                     "the emulator, not the kernel)"}
+            emit(f"pem/skip_panel_{name}", 0.0, "off-TPU")
+            continue
+        backend = get_backend(name)
+        cache.search_plan(plan, now=NOW, engine=backend)  # warm segments
+        sweep = {}
+        total_s = 0.0
+        serial_match = True
+        for b in PANEL_BATCH_SIZES:
+            sets = all_sets[:b]
+            plans = [plan] * b
+            ks = [plan.pool] * b
+
+            def panel():
+                return score_select_filter_panel(
+                    backend, store, segments, plans, ks, sets, now=NOW)
+
+            def serial():
+                router = PrefilterRouter(mask_threshold=0.0)  # force masked
+                return [score_select_prefiltered(
+                            backend, store, segments, [plan], [plan.pool],
+                            s, now=NOW, router=router)[0]
+                        for s in sets]
+
+            for (pi, pv), (si, sv) in zip(panel(), serial()):
+                if list(pi) != list(si):
+                    serial_match = False
+            t_panel = timed(panel)
+            t_serial = timed(serial)
+            total_s += t_panel
+            sweep[str(b)] = {
+                "candidates_per_filter": size,
+                "panel_ms": round(t_panel * 1e3, 3),
+                "serial_ms": round(t_serial * 1e3, 3),
+                "speedup": round(t_serial / max(t_panel, 1e-9), 2),
+            }
+            emit(f"pem/panel_{name}_b{b}", t_panel,
+                 f"n={n} B={b} serial={t_serial*1e3:.2f}ms")
+        rows[name] = {
+            "total_ms": round(total_s * 1e3, 3),
+            "serial_match": serial_match,
+            "sweep": sweep,
+        }
     return rows
 
 
@@ -465,6 +641,8 @@ def run() -> None:
     n, rows = _bench_backends()
     delta_rows = _bench_delta()
     prefilter_rows = _bench_prefilter()
+    diverse_rows = _bench_diverse()
+    panel_rows = _bench_filter_panel()
     serve_rows = _bench_serve()
     snapshot = {
         "bench": "pem_phase2_composed",
@@ -477,6 +655,8 @@ def run() -> None:
         "backends": rows,
         "delta_backends": delta_rows,
         "prefilter_backends": prefilter_rows,
+        "diverse_backends": diverse_rows,
+        "filter_panel": panel_rows,
         "serve_throughput": serve_rows,
     }
     SNAPSHOT_PATH.write_text(json.dumps(snapshot, indent=2) + "\n")

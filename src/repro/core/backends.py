@@ -13,15 +13,23 @@ backend from ONE registry and calls the same primitives:
     score_select_prefiltered(backend, store, ...)    -> Phase-1 filtered driver
                                                         (masked-device vs
                                                         gather-host router)
+    score_select_filter_panel(backend, store, ...)   -> heterogeneous-filter
+                                                        batch via one (N, B)
+                                                        mask panel
 
 ``score_select`` is the fused score->select stage: it returns ONLY the
 top-:func:`selection_width` candidate ``(indices, scores)`` per plan, so
 device backends never ship the full (N, B) score panel back to the host —
 just (pool,)-sized candidate lists cross the device boundary (Bruch,
 *Foundations of Vector Retrieval*: selection-fused scoring is the standard
-trick for exact search at scale).  The host finishing stage
-(:func:`finalize_candidates`: truncate, or MMR over the oversampled pool)
-is shared by every consumer, so batched and direct paths rank identically.
+trick for exact search at scale).  On the device backends the chain now
+covers diversity too (:class:`_DeviceMMRMixin`): MMR runs over the
+oversampled pool IN the compiled graph (jit-jax/sharded) or through the
+``kernels/mmr`` pallas chain, so diverse plans return only the final k and
+the pool never crosses the device boundary.  The host finishing stage
+(:func:`finalize_candidates`: truncate, or the :func:`mmr_host` oracle over
+the oversampled pool) is shared by every host-path consumer, so batched and
+direct paths rank identically — device MMR is pinned bit-identical to it.
 
 Registered backends:
 
@@ -82,8 +90,11 @@ __all__ = [
     "finalize_candidates",
     "score_select_segments",
     "score_select_prefiltered",
+    "score_select_filter_panel",
     "finalize_segment_candidates",
     "PrefilterRouter",
+    "FusedCounters",
+    "mmr_host",
 ]
 
 Candidates = Tuple[np.ndarray, np.ndarray]  # (indices, scores), descending
@@ -133,6 +144,138 @@ def _slice_candidates(idx, vals, widths: Sequence[int]) -> List[Candidates]:
             for j, w in enumerate(widths)]
 
 
+def mmr_host(
+    pool_embeds: np.ndarray,
+    pool_scores: np.ndarray,
+    k: int,
+    lam: float,
+) -> np.ndarray:
+    """Host MMR over an oversampled candidate pool -> selection positions.
+
+    THE oracle every fused device-MMR path (:class:`_DeviceMMRMixin`, the
+    ``kernels/mmr`` pallas chain) is pinned bit-identical against, and the
+    fallback the numpy backends keep.  The single call site of
+    ``modulations.mmr_select_np`` — :func:`finalize_candidates` and
+    :func:`select_candidates` both finish diversity here.
+    """
+    return M.mmr_select_np(pool_embeds, pool_scores, k, lam)
+
+
+@dataclasses.dataclass
+class FusedCounters:
+    """Fused-Phase-2 observability (``RetrievalService.stats()["fused"]``).
+
+    ``device_mmr`` counts diverse plans finished by on-device MMR — the
+    oversample pool never crossed to the host.  ``host_pool_transfers``
+    counts diverse plans that DID ship their pool back for the
+    :func:`mmr_host` oracle; a regression back to host MMR shows up here
+    before it shows up as latency.  ``panel_batches`` counts batched
+    (N, B) mask-panel passes that served a heterogeneous-filter cohort in
+    ONE device scoring pass instead of one per distinct filter.  Benign
+    int bumps, same convention as the store's counters.
+    """
+
+    device_mmr: int = 0
+    host_pool_transfers: int = 0
+    panel_batches: int = 0
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "device_mmr": self.device_mmr,
+            "host_pool_transfers": self.host_pool_transfers,
+            "panel_batches": self.panel_batches,
+        }
+
+
+# -1e30 stands in for -inf inside traced MMR bodies (0 * -inf is NaN; the
+# kernels/mmr chain uses the same sentinel, see kernels/mmr/kernel.py NEG)
+_MMR_NEG = -1e30
+
+
+def _device_mmr_trace(emb, rel, lams, pool_w, k: int):
+    """Traced batched MMR over a top-k pool (pure ``jax.lax``, runs inside
+    any jitted graph — the portable equivalent of the pallas kernel).
+
+    ``emb`` (B, W, d) pool embeddings, ``rel`` (B, W) relevance descending,
+    ``lams`` (B,) per-plan lambda — 1.0 is PURE relevance, whose greedy
+    selection is the identity permutation, so non-diverse columns ride the
+    same graph unchanged — and ``pool_w`` (B,) TRUE pool widths: positions
+    past them (static-width padding, -inf masked slots) pin to the NEG
+    sentinel and can never be argmaxed while real rows remain.  Returns
+    (B, k) int32 selection positions, the same greedy argmax of
+    ``lam*rel - (1-lam)*max_sim`` as :func:`mmr_host` with matching
+    first-occurrence tie-breaking.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    bsz, w, _ = emb.shape
+    iota = jnp.arange(w)[None, :]
+    rel = jnp.maximum(rel, _MMR_NEG)  # -inf -> sentinel: 0*rel stays finite
+    valid = iota < pool_w[:, None]
+    rel = jnp.where(valid, rel, _MMR_NEG)
+
+    # precompute the pool gram matrix ONCE: the loop body then gathers a
+    # row of S instead of running two (W, d) einsums per pick — one big
+    # matmul replaces 2k tiny ones (>20x on the k=500 headline pool)
+    S = jnp.einsum("bwd,bvd->bwv", emb, emb)
+
+    def body(i, carry):
+        max_sim, taken, out = carry
+        penalty = jnp.where(max_sim <= _MMR_NEG * 0.5, 0.0, max_sim)
+        mmr = lams[:, None] * rel - (1.0 - lams[:, None]) * penalty
+        # mask invalid slots AFTER the blend: lam=0 zeroes the rel term,
+        # so padded positions need an unconditional NEG, not just NEG rel
+        mmr = jnp.where(jnp.logical_and(valid, ~taken), mmr, _MMR_NEG)
+        j = jnp.argmax(mmr, axis=1)
+        sim = jnp.take_along_axis(S, j[:, None, None], axis=1)[:, 0, :]
+        max_sim = jnp.maximum(max_sim, sim)
+        taken = jnp.logical_or(taken, iota == j[:, None])
+        out = out.at[:, i].set(j.astype(jnp.int32))
+        return max_sim, taken, out
+
+    init = (jnp.full((bsz, w), _MMR_NEG, jnp.float32),
+            jnp.zeros((bsz, w), bool),
+            jnp.zeros((bsz, k), jnp.int32))
+    _, _, out = jax.lax.fori_loop(0, k, body, init)
+    return out
+
+
+def _panel_inputs(plans, structure: "PlanStructure", use_mmr: bool):
+    """Runtime panel inputs padded to ``structure.batch`` — a panel
+    structure pow2-buckets the batch, so padded columns carry zero
+    queries / inf half-life / lam 1.0 and slice away on the host."""
+    q_pre, q_sup = M.fold_plans(plans)
+    half = _half_lives(plans)
+    lams = np.asarray(
+        [float(p.diverse.lam) if (use_mmr and p.diverse is not None) else 1.0
+         for p in plans], np.float32)
+    bpad = structure.batch - len(plans)
+    if bpad:
+        q_pre = np.pad(q_pre, ((0, 0), (0, bpad)))
+        q_sup = np.pad(q_sup, ((0, 0), (0, bpad)))
+        half = np.pad(half, (0, bpad), constant_values=np.inf)
+        lams = np.pad(lams, (0, bpad), constant_values=1.0)
+    return q_pre, q_sup, half, lams
+
+
+def _pool_widths(widths, mask, n: int, batch: int) -> np.ndarray:
+    """Per-plan TRUE pool widths (padded to ``batch``): each plan's
+    selection width clamped to its eligible-row count, so static top-k
+    padding and -inf masked slots can never enter a fused-MMR pool."""
+    if mask is None:
+        live = np.full(len(widths), n, dtype=np.int64)
+    elif mask.ndim == 2:
+        live = np.count_nonzero(mask, axis=0).astype(np.int64)
+    else:
+        live = np.full(len(widths), int(np.count_nonzero(mask)),
+                       dtype=np.int64)
+    pw = np.minimum(np.asarray(widths, np.int64), live)
+    if batch > len(widths):
+        pw = np.pad(pw, (0, batch - len(widths)))
+    return pw.astype(np.int32)
+
+
 # ---------------------------------------------------------------------------
 # Plan structure + compiled-plan cache
 # ---------------------------------------------------------------------------
@@ -155,6 +298,8 @@ class PlanStructure:
     has_decay: bool       # decay factor branch present in the graph
     suppress_bucket: int  # max suppress count, padded to a power of two
     width: int            # static top-k width (pow2-bucketed, <= n_rows)
+    mmr_k: int = 0        # in-graph MMR step count (pow2; 0 = no MMR tail)
+    panel: bool = False   # (N, B) per-plan mask panel; batch pow2-bucketed
 
     # NOTE on suppress_bucket: with the folded (q_pre, q_sup) formulation
     # only 0-vs-nonzero changes the lowered graph (the second matmul drops
@@ -166,22 +311,42 @@ class PlanStructure:
     # executable per bucket instead of one per exact row count (the
     # per-segment PlanCache would otherwise grow with every append).
 
+    # NOTE on mmr_k/panel: the diverse-on-device tail (a fori_loop of
+    # mmr_k steps) and the 2-D mask panel change the lowered graph, so
+    # both are structural.  mmr_k pow2-buckets the requested k and batch
+    # pow2-buckets the panel width, so a stream of varying diverse ks /
+    # cohort sizes compiles one graph per bucket — neither path retraces
+    # per query.
+
     @classmethod
     def of(
         cls,
         plans: Sequence[M.ModulationPlan],
         widths: Sequence[int],
         n_rows: int,
+        *,
+        ks: Optional[Sequence[int]] = None,
+        device_mmr: bool = False,
+        panel: bool = False,
     ) -> "PlanStructure":
         max_sup = max((len(p.suppress) for p in plans), default=0)
         w = max(widths, default=0)
         bucket = max(_pow2_bucket(n_rows), 1)
+        width = min(max(_pow2_bucket(w), 1), bucket)
+        mmr_k = 0
+        if device_mmr and ks is not None and any(
+                p.diverse is not None for p in plans):
+            k_max = max((min(max(k, 0), n_rows) for k in ks), default=0)
+            mmr_k = min(max(_pow2_bucket(k_max), 1), width)
         return cls(
-            batch=len(plans),
+            batch=(max(_pow2_bucket(len(plans)), 1) if panel
+                   else len(plans)),
             n_rows=bucket,
             has_decay=any(p.decay is not None for p in plans),
             suppress_bucket=_pow2_bucket(max_sup),
-            width=min(max(_pow2_bucket(w), 1), bucket),
+            width=width,
+            mmr_k=mmr_k,
+            panel=panel,
         )
 
 
@@ -287,6 +452,20 @@ class _DeviceMatrixMixin:
             self.dev_evictions += 1
         return dev
 
+    def _any_device_matrix(self, matrix: np.ndarray):
+        """Any resident device copy of ``matrix``, regardless of its row
+        padding (padded rows are zero and never indexed below the true row
+        count), else a fresh unpadded upload.  The merged-pool MMR gather
+        reuses whatever the scoring pass left resident instead of
+        re-uploading the segment under a different pad key."""
+        cache = self.__dict__.get("_dev_cache")
+        if cache:
+            for (mid, _pad), (src, dev) in cache.items():
+                if mid == id(matrix) and src is matrix:
+                    self.dev_hits += 1
+                    return dev
+        return self._device_matrix(matrix)
+
     def device_cache_stats(self) -> Dict[str, int]:
         return {
             "entries": len(self.__dict__.get("_dev_cache", ())),
@@ -294,6 +473,97 @@ class _DeviceMatrixMixin:
             "hits": self.dev_hits,
             "evictions": self.dev_evictions,
         }
+
+
+class _DeviceMMRMixin:
+    """Fused on-device MMR for diverse plans (the jax backends).
+
+    Inside ``score_select`` the compiled graph chains
+    :func:`_device_mmr_trace` (jit-jax/sharded) or the ``kernels/mmr``
+    pallas kernel after top-k, so diverse plans return only the final k
+    ``(indices, scores)`` — the oversample pool never crosses the device
+    boundary.  For the merged per-segment pool,
+    :meth:`mmr_pool_segments` gathers the pool embeddings ON DEVICE from
+    the warm resident segment matrices and runs a cached jitted MMR loop
+    (pow2-bucketed pool and k, so a stream of varying pool sizes compiles
+    a bounded set of graphs).  Every path is pinned bit-identical to the
+    :func:`mmr_host` oracle: same greedy argmax, same first-occurrence
+    tie-breaking, and the returned scores are the RELEVANCE scores at the
+    selected positions (exactly what the host finishing stage returns).
+    """
+
+    device_mmr = True
+    _MMR_POOL_FNS = 16  # cached merged-pool executables (pow2 buckets)
+
+    def _use_mmr(self, plans, fused_mmr: Optional[bool]) -> bool:
+        if not (self.device_mmr if fused_mmr is None else bool(fused_mmr)):
+            return False
+        return any(p.diverse is not None for p in plans)
+
+    def _pool_mmr_fn(self, pool_bucket: int, k_stat: int):
+        import jax
+
+        cache = self.__dict__.setdefault("_mmr_pool_cache", OrderedDict())
+        key = (pool_bucket, k_stat)
+        fn = cache.get(key)
+        if fn is None:
+            def pool_mmr(emb, rel, lams, pool_w):
+                return _device_mmr_trace(emb, rel, lams, pool_w, k_stat)
+
+            fn = cache[key] = jax.jit(pool_mmr)
+            while len(cache) > self._MMR_POOL_FNS:
+                cache.popitem(last=False)
+        else:
+            cache.move_to_end(key)
+        return fn
+
+    def _gather_pool_device(self, segments, gidx: np.ndarray):
+        """Device-resident (pool, d) embeddings for merged global rows,
+        gathered segment-by-segment from the warm resident matrices and
+        un-permuted back to merged-pool order."""
+        import jax.numpy as jnp
+
+        from repro.core.segments import segment_offsets
+
+        off = segment_offsets(segments)
+        seg_idx = np.searchsorted(off, gidx, side="right") - 1
+        local = gidx - off[seg_idx]
+        order = np.argsort(seg_idx, kind="stable")
+        parts = []
+        for s in np.unique(seg_idx):
+            rows = local[order[seg_idx[order] == s]]
+            parts.append(jnp.take(
+                self._any_device_matrix(segments[s].matrix),
+                jnp.asarray(rows), axis=0))
+        emb = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+        return jnp.take(emb, jnp.asarray(np.argsort(order, kind="stable")),
+                        axis=0)
+
+    def mmr_pool_segments(self, segments, gidx, vals, k: int, lam: float):
+        """Device MMR over a MERGED candidate pool (the union-merged
+        global rows + scores from the per-segment two-stage shape).
+        Returns selection positions into the pool, host int64 —
+        bit-identical to ``mmr_host(gather_rows(segments, gidx), vals,
+        k, lam)`` without the pool embeddings ever leaving the device.
+        """
+        pool = int(gidx.size)
+        k = max(0, min(int(k), pool))
+        if k == 0:
+            return np.empty(0, np.int64)
+        import jax.numpy as jnp
+
+        emb = self._gather_pool_device(segments,
+                                       np.asarray(gidx, np.int64))
+        bucket = max(_pow2_bucket(pool), 1)
+        k_stat = min(max(_pow2_bucket(k), 1), bucket)
+        if bucket != pool:
+            emb = jnp.pad(emb, ((0, bucket - pool), (0, 0)))
+        rel = np.zeros(bucket, np.float32)
+        rel[:pool] = vals
+        fn = self._pool_mmr_fn(bucket, k_stat)
+        sel = fn(emb[None], rel[None], np.asarray([lam], np.float32),
+                 np.asarray([pool], np.int32))
+        return np.asarray(sel)[0, :k].astype(np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -313,6 +583,10 @@ class ExecutionBackend:
     """
 
     name: str = "?"
+    #: True when the backend finishes diverse plans with on-device MMR
+    #: inside its fused chain — diverse plans then return the FINAL k, not
+    #: the oversample pool (see :class:`_DeviceMMRMixin`)
+    device_mmr: bool = False
 
     def score(
         self,
@@ -338,19 +612,29 @@ class ExecutionBackend:
         ks: Sequence[int],
         *,
         mask: Optional[np.ndarray] = None,
+        fused_mmr: Optional[bool] = None,
     ) -> List[Candidates]:
         """Fused score->select: per-plan ``(indices, scores)`` of the top
         ``selection_width(plan, k, N)`` candidates, descending by score.
 
         ``ks[j]`` is the final candidate count requested for plan ``j``;
-        diverse plans return the oversampled MMR pool instead (the caller
-        finishes with :func:`finalize_candidates`).
+        diverse plans return the oversampled MMR pool (the caller finishes
+        with :func:`finalize_candidates`) — UNLESS the backend fuses MMR
+        on device (``self.device_mmr``; see :class:`_DeviceMMRMixin`), in
+        which case diverse plans come back as the final k, MMR-ordered,
+        with relevance scores.  ``fused_mmr`` overrides per call: None
+        defers to ``self.device_mmr``, False forces the host-pool
+        contract (the equivalence suites and benches use it to compare
+        both paths on one backend); the host-path backends ignore it.
 
-        ``mask`` is an optional (N,) bool array, True = live; masked rows
+        ``mask`` is an optional bool array, True = live — either (N,)
+        shared by every plan, or an (N, B) panel giving each plan its OWN
+        eligible rows (the heterogeneous-filter batch path).  Masked rows
         score -inf BEFORE selection (tombstoned segment rows never reach a
         candidate list with a real score — device backends apply the mask
-        on device).  When fewer than ``w`` rows are live, the -inf entries
-        trail the result; :func:`score_select_segments` filters them.
+        on device).  When fewer than ``w`` rows are eligible, the -inf
+        entries trail the result; :func:`score_select_segments` filters
+        them.
         """
         panel = self.score_panel(matrix, days_ago, plans)
         n = panel.shape[0]
@@ -362,7 +646,8 @@ class ExecutionBackend:
                 continue
             col = panel[:, j]
             if mask is not None:
-                col = np.where(mask, col, -np.inf)
+                m = mask[:, j] if mask.ndim == 2 else mask
+                col = np.where(m, col, -np.inf)
             idx = top_idx(col, w)
             out.append((idx, col[idx].astype(np.float32, copy=False)))
         return out
@@ -400,29 +685,32 @@ class FusedNumpyBackend(ExecutionBackend):
         for p in plans:
             _require_days(p, days_ago)
         q_pre, q_sup = M.fold_plans(plans)
-        base = matrix @ q_pre                           # ONE pass (N, B)
-        sup = matrix @ q_sup
-        out = np.empty_like(base)
+        out = matrix @ q_pre                            # ONE pass (N, B)
+        # decay touches only its own columns (strided but rare); the sup
+        # add stays one contiguous vectorized op over the whole panel —
+        # a per-column `out[:, j] = col + sup[:, j]` loop costs ~40% of
+        # the matmuls again in strided traffic at panel widths
         for j, plan in enumerate(plans):
-            col = base[:, j]
             if plan.decay is not None:
-                col = col * _decay_column(days_ago, plan.decay.half_life_days)
-            out[:, j] = col + sup[:, j]
+                out[:, j] *= _decay_column(days_ago, plan.decay.half_life_days)
+        out += matrix @ q_sup
         return out
 
 
-class JitJaxBackend(_DeviceMatrixMixin, ExecutionBackend):
+class JitJaxBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
     """The fused formulation jitted through XLA (CPU/GPU/TPU portable).
 
     Per-request decay folds into a (N, B) factor panel; half_life=inf makes
     the factor exactly 1.0 for no-decay columns, so one jitted graph serves
     every plan mix without recompiling on plan structure.
 
-    :meth:`score_select` fuses ``jax.lax.top_k`` into the jitted graph, so
-    only the (B, width) candidate block leaves the device — never the
-    (N, B) score panel.  Graphs specialize per :class:`PlanStructure`
-    through the :class:`PlanCache` (no-decay plans skip the decay factor,
-    suppress-free plans skip the second matmul entirely).
+    :meth:`score_select` fuses ``jax.lax.top_k`` — and, for diverse plans,
+    the :func:`_device_mmr_trace` MMR tail — into the jitted graph, so only
+    the final (B, k) candidate block leaves the device: never the (N, B)
+    score panel, never the MMR oversample pool.  Graphs specialize per
+    :class:`PlanStructure` through the :class:`PlanCache` (no-decay plans
+    skip the decay factor, suppress-free plans skip the second matmul,
+    MMR-free batches skip the selection loop entirely).
     """
 
     name = "jit-jax"
@@ -447,7 +735,8 @@ class JitJaxBackend(_DeviceMatrixMixin, ExecutionBackend):
 
         cache = self.plan_cache
 
-        def fused_select(matrix, q_pre, q_sup, days, half_lives, mask):
+        def fused_select(matrix, q_pre, q_sup, days, half_lives, mask,
+                         lams, pool_w):
             cache.jax_traces += 1  # python body runs only while tracing
             scores = matrix @ q_pre
             if structure.has_decay:
@@ -456,9 +745,23 @@ class JitJaxBackend(_DeviceMatrixMixin, ExecutionBackend):
                 )
             if structure.suppress_bucket:
                 scores = scores + matrix @ q_sup
-            # one mask covers pow2 row padding AND segment tombstones
-            scores = jnp.where(mask[:, None], scores, -jnp.inf)
+            # one mask covers pow2 row padding AND segment tombstones; a
+            # panel structure carries one mask column PER PLAN instead
+            scores = jnp.where(mask if structure.panel else mask[:, None],
+                               scores, -jnp.inf)
             v, i = jax.lax.top_k(scores.T, structure.width)  # (B, width)
+            if structure.mmr_k:
+                # fused diverse tail: MMR over the (B, width) pool without
+                # leaving the graph (non-diverse columns ride along with
+                # lam=1.0, which IS top-k order); positions past each
+                # plan's true pool re-mask to -inf so downstream filters
+                # treat them exactly like unselected top-k padding
+                sel = _device_mmr_trace(matrix[i], v, lams, pool_w,
+                                        structure.mmr_k)
+                i = jnp.take_along_axis(i, sel, axis=1)
+                v = jnp.take_along_axis(v, sel, axis=1)
+                keep = jnp.arange(structure.mmr_k)[None, :] < pool_w[:, None]
+                v = jnp.where(keep, v, -jnp.inf)
             return i, v
 
         return jax.jit(fused_select)
@@ -475,34 +778,50 @@ class JitJaxBackend(_DeviceMatrixMixin, ExecutionBackend):
                      _days_f32(days_ago, n), _half_lives(plans))
         )
 
-    def score_select(self, matrix, days_ago, plans, ks, *, mask=None):
+    def score_select(self, matrix, days_ago, plans, ks, *, mask=None,
+                     fused_mmr=None):
         for p in plans:
             _require_days(p, days_ago)
         n = matrix.shape[0]
         if n == 0:
             return [_empty_candidates() for _ in plans]
         widths = [selection_width(p, k, n) for p, k in zip(plans, ks)]
-        structure = PlanStructure.of(plans, widths, n)
+        use_mmr = self._use_mmr(plans, fused_mmr)
+        panel2d = mask is not None and mask.ndim == 2
+        structure = PlanStructure.of(plans, widths, n, ks=ks,
+                                     device_mmr=use_mmr, panel=panel2d)
         fn = self.plan_cache.get(structure)
         pad = structure.n_rows - n
-        q_pre, q_sup = M.fold_plans(plans)
+        q_pre, q_sup, half_lives, lams = _panel_inputs(plans, structure,
+                                                       use_mmr)
         days = np.pad(_days_f32(days_ago, n), (0, pad))
-        live = np.zeros(structure.n_rows, dtype=bool)
-        live[:n] = True if mask is None else mask
+        if panel2d:
+            live = np.zeros((structure.n_rows, structure.batch), dtype=bool)
+            live[:n, :len(plans)] = mask
+        else:
+            live = np.zeros(structure.n_rows, dtype=bool)
+            live[:n] = True if mask is None else mask
+        pool_w = _pool_widths(widths, mask, n, structure.batch)
         idx, vals = fn(self._device_matrix(matrix, pad), q_pre, q_sup,
-                       days, _half_lives(plans), live)
-        return _slice_candidates(idx, vals, widths)
+                       days, half_lives, live, lams, pool_w)
+        # with the fused MMR tail the device returns final-k blocks for
+        # every plan (plain plans ride the lam=1.0 identity)
+        out_w = ([min(max(k, 0), w) for k, w in zip(ks, widths)]
+                 if use_mmr else widths)
+        return _slice_candidates(idx, vals, out_w)
 
 
-class PallasBackend(_DeviceMatrixMixin, ExecutionBackend):
-    """The fused TPU kernels (``repro.kernels.pem_score`` + ``topk``).
+class PallasBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
+    """The fused TPU kernels (``repro.kernels.pem_score`` + ``topk`` +
+    ``mmr``).
 
     Off-TPU the kernels run in Pallas interpret mode (the same path the
     kernel tests validate).  The scoring kernel takes one decay column per
     call, so requests group by half-life and each group scores in one
     kernel launch; :meth:`score_select` keeps the score panel device-
-    resident and feeds it straight into the streaming top-k kernel — two
-    kernel launches, no host hop, only (B, width) candidates come back.
+    resident and feeds it straight into the streaming top-k kernel, then
+    chains the ``kernels/mmr`` selection kernel for diverse plans — no
+    host hop anywhere in the chain, only final candidates come back.
     """
 
     name = "pallas"
@@ -548,7 +867,8 @@ class PallasBackend(_DeviceMatrixMixin, ExecutionBackend):
         panel, _ = self._grouped_panel(matrix, days_ago, plans)
         return np.asarray(panel)
 
-    def score_select(self, matrix, days_ago, plans, ks, *, mask=None):
+    def score_select(self, matrix, days_ago, plans, ks, *, mask=None,
+                     fused_mmr=None):
         import jax.numpy as jnp
 
         from repro.kernels.topk.ops import topk
@@ -565,13 +885,64 @@ class PallasBackend(_DeviceMatrixMixin, ExecutionBackend):
         w_stat = min(PlanStructure.of(plans, widths, n).width, n)
         panel, interpret = self._grouped_panel(matrix, days_ago, plans)
         if mask is not None:
-            # tombstones drop out on device, before the top-k kernel
-            panel = jnp.where(jnp.asarray(mask)[:, None], panel, -jnp.inf)
+            # tombstones (or each plan's candidate-panel column) drop out
+            # on device, before the top-k kernel
+            m = jnp.asarray(mask)
+            panel = jnp.where(m if m.ndim == 2 else m[:, None],
+                              panel, -jnp.inf)
         v, i = topk(panel.T, w_stat, interpret=interpret)
-        return _slice_candidates(i, v, widths)
+        if not self._use_mmr(plans, fused_mmr):
+            return _slice_candidates(i, v, widths)
+        # fused diverse tail: the kernels/mmr pallas kernel selects over
+        # each diverse plan's device-resident pool — only the final k
+        # (with relevance scores) comes back, never the pool
+        from repro.kernels.mmr.ops import mmr_select
+
+        pool_w = _pool_widths(widths, mask, n, len(plans))
+        mat = self._any_device_matrix(matrix)
+        out = _slice_candidates(i, v, widths)
+        for j, (p, k) in enumerate(zip(plans, ks)):
+            if p.diverse is None:
+                continue
+            pw = int(pool_w[j])
+            kf = min(max(k, 0), pw)
+            if kf == 0:
+                out[j] = _empty_candidates()
+                continue
+            pool_i = i[j, :pw]
+            sel, _ = mmr_select(mat[pool_i][None], v[j, :pw][None], kf,
+                                float(p.diverse.lam), interpret=interpret)
+            out[j] = (np.asarray(jnp.take(pool_i, sel[0])).astype(np.int64),
+                      np.asarray(jnp.take(v[j, :pw], sel[0])))
+        return out
+
+    def mmr_pool_segments(self, segments, gidx, vals, k, lam):
+        """Merged-pool MMR through the ``kernels/mmr`` pallas kernel
+        (pool pow2-bucketed with NEG-masked padding so the kernel compiles
+        a bounded set of shapes)."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.mmr.kernel import NEG
+        from repro.kernels.mmr.ops import mmr_select
+
+        pool = int(gidx.size)
+        k = max(0, min(int(k), pool))
+        if k == 0:
+            return np.empty(0, np.int64)
+        emb = self._gather_pool_device(segments, np.asarray(gidx, np.int64))
+        bucket = max(_pow2_bucket(pool), 1)
+        if bucket != pool:
+            emb = jnp.pad(emb, ((0, bucket - pool), (0, 0)))
+        rel = np.full(bucket, NEG, np.float32)
+        rel[:pool] = vals
+        sel, _ = mmr_select(emb[None], jnp.asarray(rel)[None], k,
+                            float(lam),
+                            interpret=jax.default_backend() != "tpu")
+        return np.asarray(sel)[0].astype(np.int64)
 
 
-class ShardedBackend(_DeviceMatrixMixin, ExecutionBackend):
+class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
     """shard_map row-sharded scoring over every locally visible device.
 
     The corpus rows split across a 1-D device mesh; each shard computes its
@@ -580,6 +951,8 @@ class ShardedBackend(_DeviceMatrixMixin, ExecutionBackend):
     ``repro.dist.pem_sharded`` two-stage selection into the graph — each
     shard takes a LOCAL top-k and only the (shards * k, B) candidate union
     crosses the interconnect before the merge, never the (N, B) panel.
+    The fused MMR tail for diverse plans runs AFTER the shard_map, on the
+    replicated merged union, inside the same jitted graph.
     """
 
     name = "sharded"
@@ -635,22 +1008,42 @@ class ShardedBackend(_DeviceMatrixMixin, ExecutionBackend):
             if structure.suppress_bucket:
                 scores = scores + matrix @ q_sup
             # one mask covers row-grid padding AND segment tombstones, so
-            # neither can ever enter the union with a real score
-            scores = jnp.where(mask[:, None], scores, -jnp.inf)
+            # neither can ever enter the union with a real score; a panel
+            # structure shards one mask column PER PLAN instead
+            scores = jnp.where(mask if structure.panel else mask[:, None],
+                               scores, -jnp.inf)
             k_local = min(structure.width, n_local)
             v, i = jax.lax.top_k(scores.T, k_local)      # (B, k_local)
             gi = i + shard * n_local                      # global row ids
             return union_merge_topk(v, gi, ("shards",), structure.width)
 
-        fn = shard_map(
+        inner = shard_map(
             local,
             mesh=mesh,
             in_specs=(P("shards", None), P(None, None), P(None, None),
-                      P("shards"), P(None), P("shards")),
+                      P("shards"), P(None),
+                      P("shards", None) if structure.panel else P("shards")),
             out_specs=(P(None, None), P(None, None)),
             check_rep=False,
         )
-        return jax.jit(fn)
+
+        def fused_select(matrix, q_pre, q_sup, days, half_lives, mask,
+                         lams, pool_w):
+            i, v = inner(matrix, q_pre, q_sup, days, half_lives, mask)
+            if structure.mmr_k:
+                # fused diverse tail OUTSIDE the shard_map: the merged
+                # (B, width) union is replicated, its pool gather reads
+                # the full row space, and only the final-k block leaves
+                # the device (see JitJaxBackend._build_select)
+                sel = _device_mmr_trace(matrix[i], v, lams, pool_w,
+                                        structure.mmr_k)
+                i = jnp.take_along_axis(i, sel, axis=1)
+                v = jnp.take_along_axis(v, sel, axis=1)
+                keep = jnp.arange(structure.mmr_k)[None, :] < pool_w[:, None]
+                v = jnp.where(keep, v, -jnp.inf)
+            return i, v
+
+        return jax.jit(fused_select)
 
     def score_panel(self, matrix, days_ago, plans):
         for p in plans:
@@ -672,7 +1065,8 @@ class ShardedBackend(_DeviceMatrixMixin, ExecutionBackend):
         out = np.asarray(self._fn(mat, q_pre, q_sup, days, _half_lives(plans)))
         return out[:n]
 
-    def score_select(self, matrix, days_ago, plans, ks, *, mask=None):
+    def score_select(self, matrix, days_ago, plans, ks, *, mask=None,
+                     fused_mmr=None):
         import jax
 
         for p in plans:
@@ -682,19 +1076,31 @@ class ShardedBackend(_DeviceMatrixMixin, ExecutionBackend):
             return [_empty_candidates() for _ in plans]
         n_shards = len(jax.devices())
         widths = [selection_width(p, k, n) for p, k in zip(plans, ks)]
-        structure = PlanStructure.of(plans, widths, n)
+        use_mmr = self._use_mmr(plans, fused_mmr)
+        panel2d = mask is not None and mask.ndim == 2
+        structure = PlanStructure.of(plans, widths, n, ks=ks,
+                                     device_mmr=use_mmr, panel=panel2d)
         fn = self.plan_cache.get(structure)
         # row grid: pow2 bucket (the PlanCache key), then up to a shard
         # multiple — derived from the bucket alone, so one trace per bucket
         padded = structure.n_rows + ((-structure.n_rows) % n_shards)
         pad = padded - n
-        q_pre, q_sup = M.fold_plans(plans)
+        q_pre, q_sup, half_lives, lams = _panel_inputs(plans, structure,
+                                                       use_mmr)
         days = np.pad(_days_f32(days_ago, n), (0, pad))
-        live = np.zeros(padded, dtype=bool)
-        live[:n] = True if mask is None else mask
+        if panel2d:
+            live = np.zeros((padded, structure.batch), dtype=bool)
+            live[:n, :len(plans)] = mask
+        else:
+            live = np.zeros(padded, dtype=bool)
+            live[:n] = True if mask is None else mask
+        pool_w = _pool_widths(widths, mask, n, structure.batch)
         mat = self._device_matrix(matrix, pad)
-        idx, vals = fn(mat, q_pre, q_sup, days, _half_lives(plans), live)
-        return _slice_candidates(idx, vals, widths)
+        idx, vals = fn(mat, q_pre, q_sup, days, half_lives, live, lams,
+                       pool_w)
+        out_w = ([min(max(k, 0), w) for k, w in zip(ks, widths)]
+                 if use_mmr else widths)
+        return _slice_candidates(idx, vals, out_w)
 
 
 # ---------------------------------------------------------------------------
@@ -788,7 +1194,7 @@ def finalize_candidates(
     if k == 0:
         return idx[:0], scores[:0]
     if plan.diverse is not None:
-        sel = M.mmr_select_np(matrix[idx], scores, k, plan.diverse.lam)
+        sel = mmr_host(matrix[idx], scores, k, plan.diverse.lam)
         return idx[sel], scores[sel]
     return idx[:k], scores[:k]
 
@@ -801,6 +1207,8 @@ def score_select_segments(
     *,
     now: Optional[float] = None,
     candidate_masks: Optional[Sequence[Optional[np.ndarray]]] = None,
+    device_mmr: Optional[bool] = None,
+    counters: Optional[FusedCounters] = None,
 ) -> List[Candidates]:
     """Fused score->select over a SEGMENTED corpus (repro.core.segments).
 
@@ -832,26 +1240,39 @@ def score_select_segments(
     ``ks[j]`` is the final candidate count for plan ``j``; diverse plans
     come back as the oversampled MMR pool (callers finish with
     :func:`finalize_candidates` over gathered candidate embeddings),
-    exactly like the monolithic ``score_select``.
+    exactly like the monolithic ``score_select`` — UNLESS the backend
+    fuses MMR on device (``backend.device_mmr`` and ``device_mmr`` is not
+    forced False), in which case EVERY diverse plan is device-finalized:
+    the fast path fuses MMR into the scoring graph, and the per-segment
+    path runs :meth:`_DeviceMMRMixin.mmr_pool_segments` over the merged
+    pool (gathered from the warm resident segment matrices, never the
+    host).  Callers can then finish with ``mmr_done=backend.device_mmr``.
 
     ``candidate_masks`` is the Phase-1 filtered-retrieval hook: per-segment
     bool masks (``SegmentedCorpusStore.candidate_masks``; None = segment
-    holds no candidate, skipped entirely).  Each mask composes with the
-    segment's tombstones — candidates ∧ live score, everything else hits
-    -inf ON DEVICE before selection — so a pre-filtered query scores the
-    same warm device-resident segment matrices as an unfiltered one: zero
-    per-query gather, zero per-query upload, plan-cache row buckets
-    unchanged.  Selection widths shrink to the eligible-row count, and the
-    union merge is bit-identical to host-gathering the candidate rows (in
-    global-row order) and scoring them monolithically.
+    holds no candidate, skipped entirely) — or per-segment (n, B) PANELS
+    (``SegmentedCorpusStore.candidate_mask_panel``) giving each plan its
+    own candidate column for heterogeneous-filter batches.  Each mask
+    composes with the segment's tombstones — candidates ∧ live score,
+    everything else hits -inf ON DEVICE before selection — so a
+    pre-filtered query scores the same warm device-resident segment
+    matrices as an unfiltered one: zero per-query gather, zero per-query
+    upload, plan-cache row buckets unchanged.  Selection widths shrink to
+    each plan's eligible-row count, and the union merge is bit-identical
+    to host-gathering the candidate rows (in global-row order) and
+    scoring them monolithically.
     """
     from repro.core.segments import segment_offsets
 
     backend = get_backend(backend)
     if candidate_masks is not None and len(candidate_masks) != len(segments):
         raise ValueError("candidate_masks misaligned with segments")
-    # per-segment eligible mask: candidates ∧ live (None = every row)
-    scored: List[Tuple[int, object, Optional[np.ndarray], int]] = []
+    nplans = len(plans)
+    # per-segment eligible mask: candidates ∧ live (None = every row);
+    # per-PLAN eligible counts — a (n, B) panel gives every plan its own
+    # column, so counts (and selection widths) differ per plan
+    scored: List[Tuple[int, object, Optional[np.ndarray], np.ndarray]] = []
+    elig = np.zeros(nplans, dtype=np.int64)
     for i, s in enumerate(segments):
         if not s.n_rows or not s.live_count:
             continue
@@ -859,39 +1280,57 @@ def score_select_segments(
             cm = candidate_masks[i]
             if cm is None:
                 continue
-            m = (cm & s.live_mask) if s.n_dead else cm
-            c = int(np.count_nonzero(m))
-            if c == 0:
-                continue
-            if c == s.n_rows:
-                m = None  # every row eligible: the unmasked fast shape
+            if cm.ndim == 2:
+                m = (cm & s.live_mask[:, None]) if s.n_dead else cm
+                c = np.count_nonzero(m, axis=0).astype(np.int64)
+                if not c.any():
+                    continue
+                if int(c.min()) == s.n_rows:
+                    m = None  # every plan sees every row: unmasked shape
+            else:
+                m = (cm & s.live_mask) if s.n_dead else cm
+                c1 = int(np.count_nonzero(m))
+                if c1 == 0:
+                    continue
+                if c1 == s.n_rows:
+                    m = None  # every row eligible: the unmasked fast shape
+                c = np.full(nplans, c1, dtype=np.int64)
         else:
             m = s.live_mask if s.n_dead else None
-            c = s.live_count
+            c = np.full(nplans, s.live_count, dtype=np.int64)
         scored.append((i, s, m, c))
-    n_elig = sum(c for _, _, _, c in scored)
-    if n_elig == 0:
+        elig += c
+    if not scored or not nplans:
         return [_empty_candidates() for _ in plans]
     if now is None:
         now = time.time()
     offsets = segment_offsets(segments)
+    use_mmr = (backend.device_mmr and device_mmr is not False
+               and any(p.diverse is not None for p in plans))
 
     # fast path: one segment with every row eligible IS the monolithic
     # corpus — same call, same candidates, zero segmentation overhead
+    # (device-MMR backends finish diverse plans inside the fused graph)
     if len(scored) == 1 and scored[0][2] is None:
-        i, seg, _, _ = scored[0]
+        i, seg, _, c = scored[0]
+        n_el = int(c[0])
         out = backend.score_select(
             seg.matrix, seg.days_ago(now), plans,
-            [min(k, n_elig) for k in ks])
+            [min(k, n_el) for k in ks], fused_mmr=device_mmr)
+        if use_mmr and counters is not None:
+            counters.device_mmr += sum(
+                1 for p, k in zip(plans, ks)
+                if p.diverse is not None and min(k, n_el) > 0)
         if offsets[i]:
             out = [(idx + offsets[i], vals) for idx, vals in out]
         return out
 
-    # per-plan GLOBAL selection widths over the ELIGIBLE rows (diverse
-    # oversampling applies once, at corpus level; per-segment requests
-    # are plain top-w)
-    widths = [selection_width(p, min(k, n_elig), n_elig)
-              for p, k in zip(plans, ks)]
+    # per-plan GLOBAL selection widths over each plan's ELIGIBLE rows
+    # (diverse oversampling applies once, at corpus level; per-segment
+    # requests are plain top-w)
+    ks_eff = [min(k, int(e)) for k, e in zip(ks, elig)]
+    widths = [selection_width(p, ke, int(e))
+              for p, ke, e in zip(plans, ks_eff, elig)]
     seg_plans = [dataclasses.replace(p, diverse=None)
                  if p.diverse is not None else p for p in plans]
 
@@ -912,6 +1351,23 @@ def score_select_segments(
         cat_i, cat_v = cat_i[live], cat_v[live]
         order = np.argsort(-cat_v, kind="stable")[:w]
         merged.append((cat_i[order], cat_v[order]))
+
+    if use_mmr:
+        # merged-pool fused diverse tail: the union-merged pool equals
+        # the monolithic oversample pool, so device MMR over it (pool
+        # embeddings gathered from the warm resident segment matrices)
+        # is exact — diverse plans leave here final-k, never as a pool
+        for j, (p, kf) in enumerate(zip(plans, ks_eff)):
+            if p.diverse is None:
+                continue
+            gidx, gv = merged[j]
+            if gidx.size == 0:
+                continue
+            sel = backend.mmr_pool_segments(
+                segments, gidx, gv, min(kf, int(gidx.size)), p.diverse.lam)
+            merged[j] = (gidx[sel], gv[sel])
+            if counters is not None:
+                counters.device_mmr += 1
     return merged
 
 
@@ -944,18 +1400,39 @@ class PrefilterRouter:
     mask_threshold: float = 0.2  # selectivity at/above which masked wins
     routed_masked: int = 0       # queries served by the masked-device path
     routed_gather: int = 0       # queries served by the gather-host path
+    routed_panel: int = 0        # queries served by a batched (N, B) panel
     mask_build_ms: float = 0.0   # cumulative candidate-mask build time
     # routed_* count QUERIES: a batched scoring call serving n folded
-    # identical filters bumps by n (score_select_prefiltered's weight=)
+    # identical filters bumps by n (score_select_prefiltered's weight=),
+    # and a panel pass serving a B-request cohort bumps routed_panel by B
 
     def use_masked(self, n_candidates: int, n_live: int) -> bool:
         return n_live > 0 and n_candidates >= self.mask_threshold * n_live
+
+    def use_panel(
+        self,
+        candidate_counts: Sequence[Optional[int]],
+        n_live: int,
+    ) -> bool:
+        """The batched-panel arm: serve a heterogeneous-filter cohort with
+        ONE (N, B) mask-panel pass when at least two of its distinct
+        filter groups would each cost a full-corpus device pass anyway —
+        an unfiltered group (``None``) or a filter the masked arm would
+        take.  One batched matmul then replaces those passes outright.
+        Below that, per-group dispatch stays (sharp filters keep the
+        cheap O(candidates) gather path)."""
+        if len(candidate_counts) < 2:
+            return False
+        full = sum(1 for c in candidate_counts
+                   if c is None or self.use_masked(int(c), n_live))
+        return full >= 2
 
     def stats(self) -> Dict[str, Union[int, float]]:
         return {
             "threshold": self.mask_threshold,
             "routed_masked": self.routed_masked,
             "routed_gather": self.routed_gather,
+            "routed_panel": self.routed_panel,
             "mask_build_ms": round(self.mask_build_ms, 3),
         }
 
@@ -971,6 +1448,8 @@ def score_select_prefiltered(
     now: Optional[float] = None,
     router: Optional[PrefilterRouter] = None,
     weight: int = 1,
+    device_mmr: Optional[bool] = None,
+    counters: Optional[FusedCounters] = None,
 ) -> List[Candidates]:
     """Device pass for a Phase-1 FILTERED micro-batch (one candidate set
     shared by every plan in the call).  ``weight`` is how many QUERIES
@@ -1018,7 +1497,8 @@ def score_select_prefiltered(
         if matched == 0:
             return [_empty_candidates() for _ in plans]
         return score_select_segments(
-            backend, segments, plans, ks, now=now, candidate_masks=masks)
+            backend, segments, plans, ks, now=now, candidate_masks=masks,
+            device_mmr=device_mmr, counters=counters)
 
     router.routed_gather += weight
     rows = store.locate_rows(cand, segments)
@@ -1026,9 +1506,60 @@ def score_select_prefiltered(
         return [_empty_candidates() for _ in plans]
     sub = gather_rows(segments, rows)
     days = gather_days(segments, rows, now)
-    sel = backend.score_select(
-        sub, days, plans, [min(k, int(rows.size)) for k in ks])
+    ks_eff = [min(k, int(rows.size)) for k in ks]
+    sel = backend.score_select(sub, days, plans, ks_eff,
+                               fused_mmr=device_mmr)
+    if (counters is not None and backend.device_mmr
+            and device_mmr is not False):
+        counters.device_mmr += sum(
+            1 for p, k in zip(plans, ks_eff)
+            if p.diverse is not None and k > 0)
     return [(rows[idx], vals) for idx, vals in sel]
+
+
+def score_select_filter_panel(
+    backend: Union[str, "ExecutionBackend"],
+    store,
+    segments: Sequence,
+    plans: Sequence[M.ModulationPlan],
+    ks: Sequence[int],
+    candidate_sets: Sequence[Optional[Sequence[int]]],
+    *,
+    now: Optional[float] = None,
+    router: Optional[PrefilterRouter] = None,
+    counters: Optional[FusedCounters] = None,
+    device_mmr: Optional[bool] = None,
+) -> List[Candidates]:
+    """Device pass for a HETEROGENEOUS-filter micro-batch: one plan per
+    request, each with its OWN Phase-1 candidate set (None = unfiltered).
+
+    Instead of one scoring pass per distinct filter, builds a per-plan
+    (N, B) candidate-mask panel (``SegmentedCorpusStore.
+    candidate_mask_panel`` — an unfiltered request rides along as the
+    all-live column, so a mixed cohort never splits) and runs ONE batched
+    :func:`score_select_segments` pass over the warm segment matrices:
+    one matmul + masked selection for the whole cohort.  Returns the same
+    per-plan ``(global_rows, scores)`` contract as every other driver,
+    and each plan's ranking is bit-identical to dispatching its filter
+    through :func:`score_select_prefiltered` on its own.  The batched
+    engine consults :meth:`PrefilterRouter.use_panel` first —
+    sharp-filter-only cohorts stay on per-group gather dispatch.
+    """
+    backend = get_backend(backend)
+    if now is None:
+        now = time.time()
+    t0 = time.perf_counter()
+    panels, matched = store.candidate_mask_panel(candidate_sets, segments)
+    if router is not None:
+        router.mask_build_ms += (time.perf_counter() - t0) * 1e3
+        router.routed_panel += len(plans)
+    if counters is not None:
+        counters.panel_batches += 1
+    if all(p is None for p in panels):
+        return [_empty_candidates() for _ in plans]
+    return score_select_segments(
+        backend, segments, plans, ks, now=now, candidate_masks=panels,
+        device_mmr=device_mmr, counters=counters)
 
 
 def finalize_segment_candidates(
@@ -1036,16 +1567,26 @@ def finalize_segment_candidates(
     plans: Sequence[M.ModulationPlan],
     ks: Sequence[int],
     selected: Sequence[Candidates],
+    *,
+    mmr_done: bool = False,
+    counters: Optional[FusedCounters] = None,
 ) -> List[List[Tuple[int, float]]]:
     """HOST TAIL of the segmented pipeline — the separable counterpart of
     :func:`score_select_segments` (the device pass).
 
     Takes the per-plan ``(global_rows, scores)`` candidates the device
-    pass produced and finishes them on the host: gather the (pool,)-sized
-    candidate embeddings, run :func:`finalize_candidates` (truncate, or
-    MMR over the oversampled pool), and resolve global rows to chunk ids.
-    Returns per-plan ``[(chunk_id, score), ...]`` descending — the shape
-    every serving surface hands back.
+    pass produced and finishes them on the host: truncate plain top-k,
+    or — for diverse plans — gather the (pool,)-sized candidate
+    embeddings and run the :func:`mmr_host` oracle over the oversampled
+    pool, then resolve global rows to chunk ids.  Returns per-plan
+    ``[(chunk_id, score), ...]`` descending — the shape every serving
+    surface hands back.
+
+    ``mmr_done=True`` declares that the device pass already finished
+    diversity on device (``backend.device_mmr`` paths): diverse plans
+    then truncate exactly like plain ones, and NO pool embedding gather
+    happens at all — the pool never crossed the device boundary, and
+    ``counters.host_pool_transfers`` stays untouched.
 
     Reads ONLY the immutable segment arrays of the snapshot it is given
     (sealed ids/matrix never change; compaction swaps the store's list
@@ -1062,10 +1603,22 @@ def finalize_segment_candidates(
         if gidx.size == 0:
             out.append([])
             continue
-        pool_emb = gather_rows(segments, gidx)
-        loc, final_vals = finalize_candidates(
-            pool_emb, np.arange(gidx.size, dtype=np.int64), vals, k, plan)
-        chunk_ids = gather_ids(segments, gidx[loc])
+        if plan.diverse is not None and not mmr_done:
+            # host-oracle finishing: gather the oversample pool and run
+            # mmr_host — the transfer the fused device paths avoid
+            pool_emb = gather_rows(segments, gidx)
+            loc, final_vals = finalize_candidates(
+                pool_emb, np.arange(gidx.size, dtype=np.int64), vals, k,
+                plan)
+            if counters is not None:
+                counters.host_pool_transfers += 1
+            chunk_ids = gather_ids(segments, gidx[loc])
+        else:
+            # plain top-k — or a diverse plan the device already
+            # finished — truncates; no pool embedding gather at all
+            kf = max(0, min(k, int(gidx.size)))
+            chunk_ids = gather_ids(segments, gidx[:kf])
+            final_vals = vals[:kf]
         out.append([(int(i), float(v))
                     for i, v in zip(chunk_ids, final_vals)])
     return out
@@ -1090,8 +1643,7 @@ def select_candidates(
     if plan.diverse is not None:
         over = selection_width(plan, k, n)
         pool_idx = top_idx(scores, over)
-        sel = M.mmr_select_np(
-            matrix[pool_idx], scores[pool_idx], k, plan.diverse.lam
-        )
+        sel = mmr_host(matrix[pool_idx], scores[pool_idx], k,
+                       plan.diverse.lam)
         return pool_idx[sel]
     return top_idx(scores, k)

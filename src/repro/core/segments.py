@@ -513,6 +513,58 @@ class SegmentedCorpusStore:
                 matched += hits
         return masks, matched
 
+    def candidate_mask_panel(
+        self,
+        candidate_sets: Sequence[Optional[np.ndarray]],
+        segments: Optional[Sequence[CorpusSegment]] = None,
+    ) -> Tuple[List[Optional[np.ndarray]], int]:
+        """Heterogeneous-filter batch lookup: B candidate sets -> per-
+        segment ``(n_rows, B)`` bool PANELS, column ``j`` True on the live
+        rows whose chunk id is in ``candidate_sets[j]``.
+
+        The per-plan generalization of :meth:`candidate_masks` — a batch
+        whose requests carry B DIFFERENT Phase-1 filters shares one
+        batched matmul + masked selection instead of one scoring pass per
+        distinct filter.  ``candidate_sets[j] is None`` means request
+        ``j`` is UNFILTERED: its column is the plain live mask (all-ones
+        minus tombstones), so a mixed filtered/unfiltered cohort never
+        splits.  Segments where no filtered column has a hit AND there is
+        no unfiltered column stay ``None`` (skipped by the segment
+        driver); ``n_matched`` counts the filtered columns' set bits.
+
+        Non-strict exactly like :meth:`candidate_masks`: unknown or
+        tombstoned ids never set a bit.  Duplicate ids within a set are
+        harmless (``np.isin`` semantics).
+        """
+        if segments is None:
+            segments = self.segments
+        sets = [None if c is None else np.asarray(c, dtype=np.int64)
+                for c in candidate_sets]
+        panels: List[Optional[np.ndarray]] = []
+        matched = 0
+        for seg in segments:
+            if seg.n_rows == 0 or not seg.live_count:
+                panels.append(None)
+                continue
+            live = seg.live_mask
+            panel = np.empty((seg.n_rows, len(sets)), dtype=bool)
+            hits = 0
+            for j, cand in enumerate(sets):
+                if cand is None:
+                    panel[:, j] = live
+                    continue
+                col = np.isin(seg.ids, cand)
+                if seg.n_dead:
+                    col &= live
+                panel[:, j] = col
+                hits += int(np.count_nonzero(col))
+            matched += hits
+            if hits == 0 and all(c is not None for c in sets):
+                panels.append(None)
+            else:
+                panels.append(panel)
+        return panels, matched
+
     def locate_rows(
         self,
         candidate_ids: np.ndarray,

@@ -38,7 +38,7 @@ from repro.core import grammar
 from repro.core import modulations as M
 from repro.core.backends import (ExecutionBackend, PrefilterRouter,
                                  finalize_segment_candidates, get_backend,
-                                 score_select_prefiltered,
+                                 FusedCounters, score_select_prefiltered,
                                  score_select_segments)
 from repro.core.segments import SegmentedCorpusStore
 
@@ -86,6 +86,9 @@ class VectorCache:
         # with the batched engine, so direct and batched filtered queries
         # route — and count — identically)
         self.prefilter = prefilter or PrefilterRouter()
+        # fused-Phase-2 counters (device MMR vs host pool transfers, panel
+        # batches) — shared with the batched engine for the same reason
+        self.fused = FusedCounters()
         self._view: Optional[Tuple] = None
         self._view_version = -1
 
@@ -313,9 +316,10 @@ class VectorCache:
                 k = min(plan.pool, n_live)
                 selected = score_select_prefiltered(
                     backend, self.store, segs, [plan], [k], candidate_ids,
-                    now=ref, router=self.prefilter)
+                    now=ref, router=self.prefilter, counters=self.fused)
             (results,) = finalize_segment_candidates(
-                segs, [plan], [k], selected)
+                segs, [plan], [k], selected,
+                mmr_done=backend.device_mmr, counters=self.fused)
             return results
 
         # Full corpus: the two-stage segmented pipeline.  The DEVICE PASS
@@ -331,6 +335,8 @@ class VectorCache:
             n_live = self.store.n_live
             k = min(plan.pool, n_live)
             selected = score_select_segments(
-                backend, segs, [plan], [k], now=ref)
-        (results,) = finalize_segment_candidates(segs, [plan], [k], selected)
+                backend, segs, [plan], [k], now=ref, counters=self.fused)
+        (results,) = finalize_segment_candidates(
+            segs, [plan], [k], selected, mmr_done=backend.device_mmr,
+            counters=self.fused)
         return results

@@ -34,12 +34,15 @@ def _mmr_kernel(e_ref, rel_ref, idx_out, val_out, *, k: int, lam: float):
     rel = rel_ref[...].astype(jnp.float32)    # (1, n)
     n = rel.shape[1]
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    invalid = rel <= NEG * 0.5                # NEG-padded slots
 
     def body(i, carry):
         max_sim, taken = carry                # (1, n), (1, n) bool
         penalty = jnp.where(max_sim <= NEG * 0.5, 0.0, max_sim)
         mmr = lam * rel - (1.0 - lam) * penalty
-        mmr = jnp.where(taken, NEG, mmr)
+        # padding must stay NEG even at lam=0, where lam*rel zeroes the
+        # sentinel and -penalty alone would leave padded slots finite
+        mmr = jnp.where(jnp.logical_or(taken, invalid), NEG, mmr)
         j = jnp.argmax(mmr[0]).astype(jnp.int32)
         chosen = iota == j                    # (1, n) one-hot row mask
         # e[j] without dynamic gather: onehot(j) @ E -> (1, d) on the MXU.

@@ -81,6 +81,7 @@ import numpy as np
 
 from repro.core.backends import (ExecutionBackend,
                                  finalize_segment_candidates, get_backend,
+                                 score_select_filter_panel,
                                  score_select_prefiltered,
                                  score_select_segments)
 from repro.core.grammar import parse
@@ -163,6 +164,7 @@ class _TailWork:
     segments: Tuple  # immutable snapshot; safe to read without the lock
     ks: List[int]
     selected: List[Tuple[np.ndarray, np.ndarray]]
+    mmr_done: bool = False  # device pass already finished diversity on device
 
 
 class BatchedRetrievalEngine:
@@ -569,25 +571,44 @@ class BatchedRetrievalEngine:
                 groups = OrderedDict()
                 for j, req in enumerate(live):
                     groups.setdefault(req.filter_key, []).append(j)
+                router = self.cache.prefilter
+                counters = self.cache.fused
                 selected: List = [None] * len(live)
-                for key, idxs in groups.items():
-                    g_plans = [plans[j] for j in idxs]
-                    g_ks = [ks[j] for j in idxs]
-                    if key is None:
-                        sel = score_select_segments(
-                            self.backend, segs, g_plans, g_ks, now=ref)
-                    else:
-                        sel = score_select_prefiltered(
-                            self.backend, store, segs, g_plans, g_ks,
-                            live[idxs[0]].candidate_ids, now=ref,
-                            router=self.cache.prefilter, weight=len(idxs))
-                    for j, s in zip(idxs, sel):
-                        selected[j] = s
+                counts = [None if key is None
+                          else int(live[idxs[0]].candidate_ids.size)
+                          for key, idxs in groups.items()]
+                if router.use_panel(counts, n_live):
+                    # heterogeneous-filter cohort: ONE batched (N, B)
+                    # mask-panel pass for the whole batch instead of one
+                    # pass per distinct filter — unfiltered requests ride
+                    # along as all-live columns, so the cohort never
+                    # splits (see score_select_filter_panel)
+                    selected = score_select_filter_panel(
+                        self.backend, store, segs, plans, ks,
+                        [req.candidate_ids for req in live], now=ref,
+                        router=router, counters=counters)
+                else:
+                    for key, idxs in groups.items():
+                        g_plans = [plans[j] for j in idxs]
+                        g_ks = [ks[j] for j in idxs]
+                        if key is None:
+                            sel = score_select_segments(
+                                self.backend, segs, g_plans, g_ks, now=ref,
+                                counters=counters)
+                        else:
+                            sel = score_select_prefiltered(
+                                self.backend, store, segs, g_plans, g_ks,
+                                live[idxs[0]].candidate_ids, now=ref,
+                                router=router, weight=len(idxs),
+                                counters=counters)
+                        for j, s in zip(idxs, sel):
+                            selected[j] = s
         except Exception as e:  # backend failure: fail the whole batch loudly
             for req in live:
                 self._fail(req, e, count_depth=False)
             return None
-        return _TailWork(live, plans, segs, ks, selected)
+        return _TailWork(live, plans, segs, ks, selected,
+                         mmr_done=self.backend.device_mmr)
 
     def _host_tail(self, work: _TailWork) -> None:
         """Finish each request over the immutable segment snapshot (no
@@ -608,7 +629,8 @@ class BatchedRetrievalEngine:
                                      work.selected):
             try:
                 (results,) = finalize_segment_candidates(
-                    work.segments, [plan], [k], [sel])
+                    work.segments, [plan], [k], [sel],
+                    mmr_done=work.mmr_done, counters=self.cache.fused)
                 done.append((req, results, None))
             except Exception as e:
                 done.append((req, None, e))

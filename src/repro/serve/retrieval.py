@@ -215,8 +215,11 @@ class RetrievalService:
         ``serving`` (queue_depth / rejected / deadline_misses /
         overlapped_batches / compactions_run) appears once the async
         batched engine is attached via :meth:`serving`.  ``prefilter``
-        (threshold / routed_masked / routed_gather / mask_build_ms) is the
-        Phase-1 selectivity router's ledger.
+        (threshold / routed_masked / routed_panel / routed_gather /
+        mask_build_ms) is the Phase-1 selectivity router's ledger.
+        ``fused`` (device_mmr / host_pool_transfers / panel_batches)
+        tracks how often Phase-2 finished entirely on device and how
+        often a host pool round-trip was still needed.
         """
         out: Dict[str, Any] = {
             "engine": self.engine.name,
@@ -224,6 +227,7 @@ class RetrievalService:
             "errors": self.error_count,
             "store": self.cache.store.stats(),
             "prefilter": self.cache.prefilter.stats(),
+            "fused": self.cache.fused.stats(),
         }
         if self._serving is not None:
             out["serving"] = self._serving.stats()

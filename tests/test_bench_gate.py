@@ -184,6 +184,49 @@ def test_prefilter_section_gated_and_drop_fails():
     assert "prefilter_backends" in failures[0] and "dropped" in failures[0]
 
 
+def test_diverse_and_panel_sections_gated_and_drop_fails():
+    """The fused device-MMR and (N, B) mask-panel scenarios gate under
+    the same rules: a fused-path regression past tolerance fails, host
+    backends recorded as skipped are tolerated, and dropping either
+    section entirely is section-level silent omission."""
+    base = _snap({"jit-jax": _row(30.0)})
+    base["diverse_backends"] = {"jit-jax": _row(18.0),
+                                "fused-numpy": {"skipped": "no device MMR"}}
+    base["filter_panel"] = {"jit-jax": _row(22.0)}
+    ok = _snap({"jit-jax": _row(30.0)})
+    ok["diverse_backends"] = {"jit-jax": _row(20.0),
+                              "fused-numpy": {"skipped": "no device MMR"}}
+    ok["filter_panel"] = {"jit-jax": _row(24.0)}
+    failures, notes = compare_all(ok, base, DEFAULT_TOL)
+    assert failures == []
+    assert any(n.startswith("diverse_backends/") for n in notes)
+    assert any(n.startswith("filter_panel/") for n in notes)
+    bad = _snap({"jit-jax": _row(30.0)})
+    bad["diverse_backends"] = {"jit-jax": _row(40.0),
+                               "fused-numpy": {"skipped": "no device MMR"}}
+    bad["filter_panel"] = {"jit-jax": _row(80.0)}
+    failures, _ = compare_all(bad, base, DEFAULT_TOL)
+    assert len(failures) == 2
+    assert any("diverse_backends/jit-jax" in f for f in failures)
+    assert any("filter_panel/jit-jax" in f for f in failures)
+    dropped = _snap({"jit-jax": _row(30.0)})
+    failures, _ = compare_all(dropped, base, DEFAULT_TOL)
+    assert len(failures) == 2
+    assert all("dropped" in f for f in failures)
+
+
+def test_merge_min_folds_diverse_and_panel_sections():
+    a = _snap({"jit-jax": _row(30.0)})
+    a["diverse_backends"] = {"jit-jax": _row(19.0)}
+    a["filter_panel"] = {"jit-jax": _row(26.0)}
+    b = _snap({"jit-jax": _row(31.0)})
+    b["diverse_backends"] = {"jit-jax": _row(17.0)}
+    b["filter_panel"] = {"jit-jax": _row(29.0)}
+    merged = merge_min([a, b])
+    assert merged["diverse_backends"]["jit-jax"]["total_ms"] == 17.0
+    assert merged["filter_panel"]["jit-jax"]["total_ms"] == 26.0
+
+
 def test_merge_min_folds_delta_section():
     a = _snap({"jit-jax": _row(30.0)})
     a["delta_backends"] = {"jit-jax": _row(50.0)}

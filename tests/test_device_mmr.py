@@ -1,0 +1,357 @@
+"""Fused on-device MMR + (N, B) mask-panel batching: the Phase-2 fusion
+contracts.
+
+1. **Device-MMR equivalence** — every backend that fuses MMR into the
+   device score->select graph (``backend.device_mmr``) returns the FINAL
+   diverse selection bit-identical to the :func:`mmr_host` oracle, for
+   lam in {0, 0.3, 0.7, 1.0}, across segmentations, tombstones, and
+   candidate filters that overlap the tombstones.  Host backends keep
+   the oversample-pool contract and finish through the same oracle.
+2. **Tie order** — duplicate-embedding ties resolve first-occurrence
+   (smallest global row) on device exactly like the host argmax.
+3. **Counters** — diverse queries on device_mmr backends pin
+   ``device_mmr > 0`` and ``host_pool_transfers == 0``; numpy backends
+   pin the reverse.  A B=16 heterogeneous-filter cohort pins EXACTLY ONE
+   backend scoring pass through the (N, B) panel driver.
+4. **Panel equivalence** — ``candidate_mask_panel`` column semantics
+   (filtered / unfiltered / no-hit), and ``score_select_filter_panel``
+   bit-identical to per-filter serial dispatch.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import modulations as M
+from repro.core.backends import (FusedCounters, FusedNumpyBackend,
+                                 PrefilterRouter, get_backend, list_backends,
+                                 mmr_host, score_select_filter_panel,
+                                 score_select_prefiltered,
+                                 score_select_segments, selection_width,
+                                 top_idx)
+from repro.core.segments import SegmentedCorpusStore, gather_ids
+from repro.core.vectorcache import VectorCache
+from repro.embed import HashEmbedder
+
+BACKENDS = list_backends()
+DEVICE_BACKENDS = [b for b in BACKENDS if get_backend(b).device_mmr]
+HOST_BACKENDS = [b for b in BACKENDS if not get_backend(b).device_mmr]
+LAMBDAS = [0.0, 0.3, 0.7, 1.0]
+NOW = 90 * 86400.0
+EMB = HashEmbedder(32)
+
+
+def _corpus(n=230, d=32, seed=7):
+    rng = np.random.default_rng(seed)
+    mat = rng.standard_normal((n, d)).astype(np.float32)
+    mat /= np.linalg.norm(mat, axis=1, keepdims=True)
+    days = rng.uniform(0.0, 60.0, n).astype(np.float32)
+    ts = NOW - days.astype(np.float64) * 86400.0
+    return mat, days, ts
+
+
+def _diverse_plan(lam, *, pool=20, decay=True):
+    return M.ModulationPlan(
+        query=M.l2_normalize(EMB("how the retrieval system works")),
+        decay=M.DecaySpec(half_life_days=21.0) if decay else None,
+        suppress=(M.SuppressSpec(direction=M.l2_normalize(
+            EMB("website landing page"))),),
+        diverse=M.DiverseSpec(lam=lam),
+        pool=pool,
+    )
+
+
+def _store_from_splits(mat, ts, splits, deleted=()):
+    store = SegmentedCorpusStore(dim=mat.shape[1])
+    start = 0
+    for size in splits:
+        store.append(np.arange(start, start + size), mat[start:start + size],
+                     ts[start:start + size], normalized=True)
+        start += size
+    assert start == mat.shape[0]
+    if len(deleted):
+        store.delete(deleted)
+    return store
+
+
+def _host_oracle(mat, days, plan, k):
+    """select_candidates spelled out: top-pool then mmr_host — THE answer
+    every fused path must reproduce bit-for-bit."""
+    scores = np.asarray(M.modulate_scores(mat, days, plan))
+    w = selection_width(plan, k, scores.shape[0])
+    pool = top_idx(scores, w)
+    sel = mmr_host(mat[pool], scores[pool], min(k, w), plan.diverse.lam)
+    return pool[sel], scores[pool[sel]]
+
+
+# ---------------------------------------------------------------------------
+# Device-MMR equivalence vs the host oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lam", LAMBDAS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_monolithic_device_mmr_matches_host_oracle(backend, lam):
+    """score_select on a monolithic matrix: device_mmr backends return the
+    final-k MMR selection bit-identical to the host oracle; host backends
+    return the pool and finalize through the same oracle."""
+    mat, days, _ = _corpus(seed=int(lam * 10) + 3)
+    plan = _diverse_plan(lam)
+    k = plan.pool
+    oidx, ovals = _host_oracle(mat, days, plan, k)
+
+    b = get_backend(backend)
+    (idx, vals), = b.score_select(mat, days, [plan], [k])
+    if b.device_mmr:
+        assert idx.shape == (k,)
+        assert list(idx) == list(oidx)
+        np.testing.assert_allclose(vals, ovals, atol=5e-5, rtol=5e-5)
+    else:
+        w = selection_width(plan, k, mat.shape[0])
+        assert idx.shape == (w,)
+        sel = mmr_host(mat[idx], np.asarray(vals), k, lam)
+        assert list(idx[sel]) == list(oidx)
+
+
+SEGMENTATIONS = [
+    ("one-segment", [230], ()),
+    ("three-segments", [100, 60, 70], ()),
+    ("tombstones", [150, 80], tuple(range(10, 60)) + (200, 229)),
+    ("tombstones-seven", [40, 40, 40, 40, 40, 20, 10],
+     tuple(range(0, 230, 3))),
+]
+
+
+@pytest.mark.parametrize(
+    "splits,deleted", [(s, d) for _, s, d in SEGMENTATIONS],
+    ids=[name for name, _, _ in SEGMENTATIONS])
+@pytest.mark.parametrize("lam", [0.0, 0.7])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_segmented_device_mmr_matches_host_oracle(backend, lam, splits,
+                                                  deleted):
+    """Any segmentation, with tombstones: the segment driver's diverse
+    results — device-finalized or host-finished — match the monolithic
+    host oracle over the live rows bit-for-bit."""
+    mat, days, ts = _corpus(seed=11)
+    store = _store_from_splits(mat, ts, splits, deleted)
+    live = np.setdiff1d(np.arange(mat.shape[0]), np.asarray(deleted, int))
+    plan = _diverse_plan(lam, pool=15)
+    k = plan.pool
+    oidx, ovals = _host_oracle(mat[live], days[live], plan, k)
+
+    b = get_backend(backend)
+    counters = FusedCounters()
+    (gidx, vals), = score_select_segments(b, store.segments, [plan], [k],
+                                          now=NOW, counters=counters)
+    if b.device_mmr:
+        # device-finalized: final k, ids == oracle, no host pool transfer
+        assert gidx.shape == (k,)
+        assert list(gather_ids(store.segments, gidx)) == list(live[oidx])
+        np.testing.assert_allclose(vals, ovals, atol=5e-5, rtol=5e-5)
+        assert counters.device_mmr == 1
+    else:
+        ids = np.asarray(gather_ids(store.segments, gidx))
+        finite = ~np.isneginf(np.asarray(vals))
+        sel = mmr_host(mat[ids[finite]], np.asarray(vals)[finite], k, lam)
+        assert list(ids[finite][sel]) == list(live[oidx])
+        assert counters.device_mmr == 0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_filtered_diverse_overlapping_tombstones(backend):
+    """Candidate filter ∩ tombstones + diverse: both router arms return
+    the oracle over live∩candidates, device-finalized where fused."""
+    mat, days, ts = _corpus(seed=19)
+    deleted = tuple(range(40, 80))
+    store = _store_from_splits(mat, ts, [120, 110], deleted)
+    cand = np.arange(0, 230, 2)  # half of them tombstoned in [40, 80)
+    eligible = np.setdiff1d(cand, np.asarray(deleted, int))
+    plan = _diverse_plan(0.7, pool=12)
+    k = plan.pool
+    oidx, _ = _host_oracle(mat[eligible], days[eligible], plan, k)
+
+    b = get_backend(backend)
+    for threshold in (0.0, 2.0):  # force masked, then gather
+        router = PrefilterRouter(mask_threshold=threshold)
+        counters = FusedCounters()
+        (gidx, vals), = score_select_prefiltered(
+            b, store, store.segments, [plan], [k], cand, now=NOW,
+            router=router, counters=counters)
+        if b.device_mmr:
+            assert list(gather_ids(store.segments, gidx)) \
+                == list(eligible[oidx])
+            assert counters.device_mmr == 1
+        else:
+            ids = np.asarray(gather_ids(store.segments, gidx))
+            finite = ~np.isneginf(np.asarray(vals))
+            sel = mmr_host(mat[ids[finite]], np.asarray(vals)[finite], k,
+                           plan.diverse.lam)
+            assert list(ids[finite][sel]) == list(eligible[oidx])
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_device_mmr_tie_order_first_occurrence(backend):
+    """Duplicate embeddings (exact score ties): device MMR breaks ties
+    first-occurrence — smallest pool position == smallest global row —
+    exactly like np.argmax in the host oracle."""
+    rng = np.random.default_rng(5)
+    base = rng.standard_normal((8, 32)).astype(np.float32)
+    base /= np.linalg.norm(base, axis=1, keepdims=True)
+    mat = np.concatenate([base, base, base])  # every row tied 3 ways
+    days = np.zeros(mat.shape[0], np.float32)
+    # pool=8 -> oversample width == n, keeping top_idx on its STABLE
+    # argsort branch: the host pool is then in canonical ascending-row
+    # tie order, the same order jax.lax.top_k guarantees on device
+    plan = M.ModulationPlan(query=M.l2_normalize(EMB("tied query")),
+                            diverse=M.DiverseSpec(lam=0.5), pool=8)
+    k = plan.pool
+    oidx, _ = _host_oracle(mat, days, plan, k)
+
+    (idx, vals), = get_backend(backend).score_select(mat, days, [plan], [k])
+    assert list(idx) == list(oidx)
+
+
+# ---------------------------------------------------------------------------
+# Counters: where did diversity finish?
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_counters_pin_finishing_location(backend):
+    """Through the full VectorCache path: device backends finish diversity
+    on device (device_mmr > 0, ZERO host pool transfers); numpy backends
+    ship the pool home (host_pool_transfers > 0)."""
+    mat, _, ts = _corpus(seed=23)
+    vc = VectorCache(np.arange(mat.shape[0]), mat, ts, EMB, normalized=True)
+    plan = _diverse_plan(0.7, pool=10)
+    got = vc.search_plan(plan, now=NOW, engine=backend)
+    assert len(got) == plan.pool
+    if get_backend(backend).device_mmr:
+        assert vc.fused.device_mmr > 0
+        assert vc.fused.host_pool_transfers == 0
+    else:
+        assert vc.fused.host_pool_transfers > 0
+        assert vc.fused.device_mmr == 0
+
+
+# ---------------------------------------------------------------------------
+# (N, B) candidate-mask panels
+# ---------------------------------------------------------------------------
+
+
+def test_candidate_mask_panel_columns():
+    """Column semantics: filtered = isin ∧ live, unfiltered = live mask,
+    unknown ids = all-False; hitless segments skip only when every column
+    is filtered."""
+    mat, _, ts = _corpus(n=60, seed=29)
+    store = _store_from_splits(mat, ts, [40, 20], deleted=(0, 1, 45))
+    segs = store.segments
+    sets = [np.arange(0, 40),          # first segment only (ids 0..39)
+            None,                      # unfiltered
+            np.array([900, 901])]      # unknown ids -> no bits anywhere
+    panels, matched = store.candidate_mask_panel(sets, segs)
+    assert len(panels) == 2
+    p0, p1 = panels
+    assert p0.shape == (40, 3) and p1.shape == (20, 3)
+    # filtered column: candidates minus tombstones
+    np.testing.assert_array_equal(p0[:, 0], segs[0].live_mask)
+    assert not p1[:, 0].any()
+    # unfiltered column == live mask in every segment
+    np.testing.assert_array_equal(p0[:, 1], segs[0].live_mask)
+    np.testing.assert_array_equal(p1[:, 1], segs[1].live_mask)
+    # unknown ids set no bits
+    assert not p0[:, 2].any() and not p1[:, 2].any()
+    assert matched == int(segs[0].live_mask.sum())
+
+    # all-filtered sets with no hits in a segment -> that segment is None
+    panels2, _ = store.candidate_mask_panel([np.arange(0, 40)], segs)
+    assert panels2[0] is not None and panels2[1] is None
+    # ...but an unfiltered column keeps every segment in play
+    panels3, _ = store.candidate_mask_panel([np.arange(0, 40), None], segs)
+    assert panels3[1] is not None
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_panel_matches_per_filter_serial(backend):
+    """One (N, B) panel pass == B serial per-filter dispatches,
+    bit-identical ids and scores, on every backend — including diverse
+    plans riding the panel."""
+    mat, _, ts = _corpus(seed=31)
+    deleted = tuple(range(100, 120))
+    store = _store_from_splits(mat, ts, [150, 80], deleted)
+    rng = np.random.default_rng(37)
+    sets = [np.sort(rng.choice(230, size=90, replace=False)),
+            np.sort(rng.choice(230, size=120, replace=False)),
+            None,
+            np.sort(rng.choice(230, size=75, replace=False))]
+    plans = [_diverse_plan(0.7, pool=8),
+             _diverse_plan(1.0, pool=10),
+             M.ModulationPlan(query=M.l2_normalize(EMB("plain topic")),
+                              pool=9),
+             _diverse_plan(0.3, pool=7)]
+    ks = [p.pool for p in plans]
+
+    b = get_backend(backend)
+    panel_sel = score_select_filter_panel(
+        b, store, store.segments, plans, ks, sets, now=NOW)
+    for j, (plan, k, cand) in enumerate(zip(plans, ks, sets)):
+        if cand is None:
+            (ref,) = score_select_segments(b, store.segments, [plan], [k],
+                                           now=NOW)
+        else:
+            (ref,) = score_select_prefiltered(
+                b, store, store.segments, [plan], [k], cand, now=NOW,
+                router=PrefilterRouter(mask_threshold=0.0))
+        gidx, vals = panel_sel[j]
+        assert list(gidx) == list(ref[0]), f"plan {j}"
+        np.testing.assert_allclose(vals, ref[1], atol=5e-5, rtol=5e-5)
+
+
+def test_b16_heterogeneous_batch_single_scoring_pass():
+    """A B=16 heterogeneous-filter cohort runs EXACTLY ONE backend scoring
+    pass per segment through the panel driver (here: one segment -> one
+    call), with panel_batches == 1."""
+
+    class CountingBackend(FusedNumpyBackend):
+        name = "counting-panel"
+
+        def __init__(self):
+            self.calls = 0
+
+        def score_select(self, *args, **kwargs):
+            self.calls += 1
+            return super().score_select(*args, **kwargs)
+
+    mat, _, ts = _corpus(n=200, seed=41)
+    store = _store_from_splits(mat, ts, [200])
+    rng = np.random.default_rng(43)
+    sets = [np.sort(rng.choice(200, size=60 + i, replace=False))
+            for i in range(16)]
+    plans = [_diverse_plan(0.7, pool=5) if i % 2 else
+             M.ModulationPlan(query=M.l2_normalize(EMB(f"q {i}")), pool=5)
+             for i in range(16)]
+    ks = [5] * 16
+
+    b = CountingBackend()
+    router = PrefilterRouter()
+    counters = FusedCounters()
+    assert router.use_panel([s.size for s in sets], store.n_live)
+    sel = score_select_filter_panel(b, store, store.segments, plans, ks,
+                                    sets, now=NOW, router=router,
+                                    counters=counters)
+    assert b.calls == 1
+    assert counters.panel_batches == 1
+    assert router.routed_panel == 16
+    # host backend: plain plans come back final-k, diverse plans as pools
+    assert len(sel) == 16 and all(g.size >= 5 for g, _ in sel)
+
+
+def test_use_panel_routing_decision():
+    """use_panel fires only when >= 2 groups are full-corpus cost; sharp
+    filter cohorts and singleton groups stay on per-group dispatch."""
+    r = PrefilterRouter(mask_threshold=0.2)
+    n_live = 1000
+    assert r.use_panel([None, 300], n_live)          # unfiltered + weak
+    assert r.use_panel([250, 400, 10], n_live)       # two weak filters
+    assert not r.use_panel([None], n_live)           # singleton group
+    assert not r.use_panel([10, 20, 30], n_live)     # all sharp -> gather
+    assert not r.use_panel([None, 10], n_live)       # only ONE full-cost

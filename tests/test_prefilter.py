@@ -234,9 +234,10 @@ def test_masked_path_zero_gather_zero_upload_on_warm_store():
 
 
 def test_engine_groups_filtered_requests_in_one_batch():
-    """Mixed filtered/unfiltered requests collected into ONE batch: each
-    distinct candidate set shares one routed pass, every request ranks
-    exactly like the direct path."""
+    """Mixed filtered/unfiltered requests collected into ONE batch: the
+    heterogeneous-filter cohort rides a single (N, B) mask-panel scoring
+    pass (unfiltered requests get all-live columns — the cohort never
+    splits), and every request ranks exactly like the direct path."""
 
     class GateBackend(FusedNumpyBackend):
         name = "gate-prefilter"
@@ -282,17 +283,22 @@ def test_engine_groups_filtered_requests_in_one_batch():
                 time.sleep(0.005)
             routed_before = (vc.prefilter.routed_masked
                              + vc.prefilter.routed_gather)
+            panel_before = vc.prefilter.routed_panel
+            panel_batches_before = vc.fused.panel_batches
             gate.release.set()
             dummy.result(20.0)
             results = [f.result(20.0) for f in futs]
         assert eng.batches_served == 2  # dummy, then the 5-request batch
-        # counters stay per-QUERY even though the two cand_a requests
-        # folded into one scoring pass: 3 filtered requests -> +3
+        # the whole 5-request heterogeneous cohort (cand_a x2, cand_b,
+        # unfiltered x2) routed through ONE mask-panel pass: per-query
+        # panel counter +5, nothing on the per-filter routes
+        assert vc.prefilter.routed_panel - panel_before == 5
         assert (vc.prefilter.routed_masked + vc.prefilter.routed_gather
-                - routed_before) == 3
-        # ...but the scoring passes DID fold: dummy + (unfiltered group,
-        # cand_a group, cand_b group) on the one-segment store = 4 calls
-        assert gate.calls == 4
+                - routed_before) == 0
+        assert vc.fused.panel_batches - panel_batches_before == 1
+        # ...and the scoring passes folded all the way down: dummy + one
+        # panel pass over the one-segment store = 2 backend calls
+        assert gate.calls == 2
         for (q, c), got in zip(specs, results):
             direct = vc.search(q, c, now=NOW, engine="fused-numpy")[:5]
             assert [i for i, _ in got] == [i for i, _ in direct], q

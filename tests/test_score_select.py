@@ -80,23 +80,34 @@ def test_score_select_matches_host_topk(backend):
 
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_score_select_diverse_oversample_path(backend):
-    """Diverse plans return the MMR oversample pool; finalize reproduces
-    select_candidates on the full score array exactly."""
+    """Diverse plans: device-MMR backends return the FINAL-k selection
+    (bit-identical to select_candidates on the full oracle); host
+    backends — and device ones forced to ``fused_mmr=False`` — return
+    the oversample pool, and finalize reproduces the same answer."""
     mat, days = _corpus(seed=17)
     plan = _plan(diverse=True, pool=20)
     oracle = np.asarray(M.modulate_scores(mat, days, plan))
     k = plan.pool
     w = selection_width(plan, k, mat.shape[0])
     assert w == min(plan.diverse.oversample * plan.pool, mat.shape[0])
+    expected = select_candidates(mat, oracle, k, plan)
 
-    (idx, vals), = get_backend(backend).score_select(mat, days, [plan], [k])
+    b = get_backend(backend)
+    (idx, vals), = b.score_select(mat, days, [plan], [k])
+    if b.device_mmr:
+        # fused in-kernel MMR: final k straight off the device
+        assert idx.shape == (k,)
+        assert list(idx) == list(expected)
+        np.testing.assert_allclose(vals, oracle[idx], atol=1e-5, rtol=1e-5)
+        # explicit opt-out restores the host-pool contract
+        (idx, vals), = b.score_select(mat, days, [plan], [k],
+                                      fused_mmr=False)
     assert idx.shape == (w,)
     # the top-pool SET matches the host oracle's oversampled pool
     assert set(idx.tolist()) == set(top_idx(oracle, w).tolist())
     np.testing.assert_allclose(vals, oracle[idx], atol=1e-5, rtol=1e-5)
 
     fidx, fvals = finalize_candidates(mat, idx, vals, k, plan)
-    expected = select_candidates(mat, oracle, k, plan)
     assert list(fidx) == list(expected)
     np.testing.assert_allclose(fvals, oracle[expected], atol=1e-5, rtol=1e-5)
 

@@ -132,7 +132,21 @@ def test_deadline_miss_fails_at_collect():
 
 def test_priority_orders_collect():
     cache, _ = make_cache()
-    gate = GateBackend()
+    # one-permit-per-batch gate: a one-shot release would let every batch
+    # through at once, and with sub-ms batches the "which search() call
+    # returned first" observation races worker-thread wakeups — stepping
+    # batch by batch makes the serving order directly observable
+    sem = threading.Semaphore(0)
+
+    class StepGate(GateBackend):
+        def score_select(self, *args, **kwargs):
+            self.calls += 1
+            self.entered.set()
+            if not sem.acquire(timeout=15.0):
+                raise RuntimeError("gate backend never released (test bug)")
+            return FusedNumpyBackend.score_select(self, *args, **kwargs)
+
+    gate = StepGate()
     eng = BatchedRetrievalEngine(cache, max_batch=1, engine=gate)
     order = []
     try:
@@ -148,15 +162,20 @@ def test_priority_orders_collect():
             assert wait_for(lambda: eng.queue_depth == 1)
             high = ex.submit(tagged, "similar:group 3 tail", "high", 5)
             assert wait_for(lambda: eng.queue_depth == 2)
-            gate.release.set()
+            sem.release()                    # serve the blocker batch
             blocker.result(10.0)
-            low.result(10.0)
+            sem.release()                    # serve ONE queued request...
+            assert wait_for(lambda: len(order) == 1)  # ...observe its return
+            sem.release()                    # then the other
             high.result(10.0)
+            low.result(10.0)
         # max_batch=1: the two queued requests served one per batch,
         # highest priority first despite arriving second
         assert order == ["high", "low"]
     finally:
-        gate.release.set()
+        sem.release()
+        sem.release()
+        sem.release()
         eng.close()
 
 
