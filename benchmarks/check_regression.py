@@ -20,9 +20,12 @@ one row per scheduler mode: ``sync_core`` / ``pipelined``) and the
 selectivity sweep; ``total_ms`` sums the ROUTED path across
 selectivities, so a mis-tuned router or a slowed masked path both
 gate), the ``diverse_backends`` section (the fully-fused in-graph
-device-MMR lambda sweep) and the ``filter_panel`` section (the
+device-MMR lambda sweep), the ``filter_panel`` section (the
 heterogeneous-filter (N, B) mask-panel cohort vs per-filter serial
-dispatch) — is
+dispatch) and the ``hybrid_backends`` section (the dual-leg
+lexical+vector fusion query; ``total_ms`` is the hybrid device path, so
+a fusion bias that stops riding the fused pass and falls back to a
+second retrieval gates) — is
 compared against the committed ``BENCH_pem.smoke.json`` baseline; the gate
 fails on a > ``FLEX_BENCH_TOL`` (default 1.5) ratio for ANY backend that
 is not recorded as skipped in the baseline.  A backend present in the
@@ -123,7 +126,7 @@ def compare_all(
     notes: List[str] = []
     for section in ("backends", "delta_backends", "serve_throughput",
                     "prefilter_backends", "diverse_backends",
-                    "filter_panel"):
+                    "filter_panel", "hybrid_backends"):
         if section not in baseline:
             continue
         if section != "backends" and section not in new:
@@ -144,7 +147,7 @@ def merge_min(snapshots: List[Dict]) -> Dict:
     merged: Dict = dict(snapshots[0])
     for section in ("backends", "delta_backends", "serve_throughput",
                     "prefilter_backends", "diverse_backends",
-                    "filter_panel"):
+                    "filter_panel", "hybrid_backends"):
         backends: Dict[str, Dict] = {}
         for snap in snapshots:
             for name, row in snap.get(section, {}).items():

@@ -30,7 +30,7 @@ FULL_SQL = (
 )
 
 HYBRID_SQL = (
-    "SELECT k.id, k.rank, v.score, m.content FROM keyword('server') k "
+    "SELECT k.id, k.score, v.score, m.content FROM keyword('server') k "
     "JOIN vec_ops('similar:server lifecycle debugging diverse') v ON k.id = v.id "
     "JOIN messages m ON k.id = m.id ORDER BY v.score DESC LIMIT 10"
 )
@@ -55,8 +55,8 @@ def run() -> None:
         emit(f"table2/full_pipeline_{engine}", t, "all-phases")
 
     mz = Materializer(conn, cache, now=NOW)
-    t = timed(lambda: mz.execute("SELECT k.id, k.rank FROM keyword('server') k "
-                                 "ORDER BY k.rank DESC LIMIT 10"))
+    t = timed(lambda: mz.execute("SELECT k.id, k.score FROM keyword('server') k "
+                                 "ORDER BY k.score DESC LIMIT 10"))
     emit("table2/fts5_keyword", t)
 
     t = timed(lambda: mz.execute(HYBRID_SQL))

@@ -43,9 +43,27 @@ def main() -> None:
         print(f"  id={row[0]:>6}  score={row[1]:+.3f}  {row[2]}")
     print(f"  ({res.latency_ms:.1f} ms end-to-end)")
 
-    print("\n== hybrid: keyword AND semantic must both match")
+    print("\n== hybrid fusion: one call, lexical + vector fused on device")
     res = svc.flex_search("""
-        SELECT k.id, k.rank, v.score FROM keyword('server') k
+        SELECT id, score, snippet FROM HYBRID_SEARCH('server lifecycle', 0.6)
+        ORDER BY score DESC LIMIT 3
+    """)
+    for row in res.rows:
+        print(f"  id={row[0]:>6}  fused={row[1]:+.3f}  {row[2][:48]}")
+
+    print("\n== the same fusion as grammar tokens (full PEM stack available)")
+    res = svc.flex_search("""
+        SELECT id, score FROM vec_ops(
+         'similar:server lifecycle debugging
+          keyword:server restart fuse:weighted,0.6 decay:30')
+        ORDER BY score DESC LIMIT 3
+    """)
+    for row in res.rows:
+        print(f"  id={row[0]:>6}  fused={row[1]:+.3f}")
+
+    print("\n== intersection JOIN: keyword AND semantic must both match")
+    res = svc.flex_search("""
+        SELECT k.id, k.score, v.score FROM keyword('server') k
         JOIN vec_ops('similar:server lifecycle debugging') v ON k.id = v.id
         ORDER BY v.score DESC LIMIT 3
     """)

@@ -95,6 +95,9 @@ __all__ = [
     "PrefilterRouter",
     "FusedCounters",
     "mmr_host",
+    "plan_fusion_bias",
+    "fusion_bias_arrays",
+    "finalize_fusion",
 ]
 
 Candidates = Tuple[np.ndarray, np.ndarray]  # (indices, scores), descending
@@ -259,6 +262,20 @@ def _panel_inputs(plans, structure: "PlanStructure", use_mmr: bool):
     return q_pre, q_sup, half, lams
 
 
+def _expand_bias(
+    score_bias: np.ndarray, n_rows: int, batch: int, nplans: int
+) -> np.ndarray:
+    """Canonical (n_rows, batch) float32 additive-bias panel for the
+    device callers: a shared (n,) bias broadcasts across plans, an (n, B)
+    panel keeps its columns; row/batch padding is zero (no-op bias)."""
+    b = np.asarray(score_bias, np.float32)
+    if b.ndim == 1:
+        b = np.repeat(b[:, None], nplans, axis=1)
+    out = np.zeros((n_rows, batch), np.float32)
+    out[:b.shape[0], :b.shape[1]] = b
+    return out
+
+
 def _pool_widths(widths, mask, n: int, batch: int) -> np.ndarray:
     """Per-plan TRUE pool widths (padded to ``batch``): each plan's
     selection width clamped to its eligible-row count, so static top-k
@@ -300,6 +317,7 @@ class PlanStructure:
     width: int            # static top-k width (pow2-bucketed, <= n_rows)
     mmr_k: int = 0        # in-graph MMR step count (pow2; 0 = no MMR tail)
     panel: bool = False   # (N, B) per-plan mask panel; batch pow2-bucketed
+    bias: bool = False    # additive (N, B) score-bias panel (hybrid fusion)
 
     # NOTE on suppress_bucket: with the folded (q_pre, q_sup) formulation
     # only 0-vs-nonzero changes the lowered graph (the second matmul drops
@@ -328,6 +346,7 @@ class PlanStructure:
         ks: Optional[Sequence[int]] = None,
         device_mmr: bool = False,
         panel: bool = False,
+        bias: bool = False,
     ) -> "PlanStructure":
         max_sup = max((len(p.suppress) for p in plans), default=0)
         w = max(widths, default=0)
@@ -347,6 +366,7 @@ class PlanStructure:
             width=width,
             mmr_k=mmr_k,
             panel=panel,
+            bias=bias,
         )
 
 
@@ -613,9 +633,17 @@ class ExecutionBackend:
         *,
         mask: Optional[np.ndarray] = None,
         fused_mmr: Optional[bool] = None,
+        score_bias: Optional[np.ndarray] = None,
     ) -> List[Candidates]:
         """Fused score->select: per-plan ``(indices, scores)`` of the top
         ``selection_width(plan, k, N)`` candidates, descending by score.
+
+        ``score_bias`` is an optional additive score panel — (N,) shared
+        by every plan or (N, B) per-plan — added to the modulated scores
+        ON DEVICE before masking and selection (the hybrid lexical leg:
+        sparse ``(1-w) * minmax(bm25)`` values, zero elsewhere).  Diverse
+        plans run MMR over the BIASED relevance, so fusion happens before
+        selection on every path.
 
         ``ks[j]`` is the final candidate count requested for plan ``j``;
         diverse plans return the oversampled MMR pool (the caller finishes
@@ -645,6 +673,9 @@ class ExecutionBackend:
                 out.append(_empty_candidates())
                 continue
             col = panel[:, j]
+            if score_bias is not None:
+                b = score_bias[:, j] if score_bias.ndim == 2 else score_bias
+                col = col + b  # new array: the panel is never mutated
             if mask is not None:
                 m = mask[:, j] if mask.ndim == 2 else mask
                 col = np.where(m, col, -np.inf)
@@ -736,7 +767,7 @@ class JitJaxBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         cache = self.plan_cache
 
         def fused_select(matrix, q_pre, q_sup, days, half_lives, mask,
-                         lams, pool_w):
+                         lams, pool_w, bias):
             cache.jax_traces += 1  # python body runs only while tracing
             scores = matrix @ q_pre
             if structure.has_decay:
@@ -745,6 +776,9 @@ class JitJaxBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
                 )
             if structure.suppress_bucket:
                 scores = scores + matrix @ q_sup
+            if structure.bias:
+                # hybrid lexical leg: additive fusion before mask/top-k
+                scores = scores + bias
             # one mask covers pow2 row padding AND segment tombstones; a
             # panel structure carries one mask column PER PLAN instead
             scores = jnp.where(mask if structure.panel else mask[:, None],
@@ -779,7 +813,7 @@ class JitJaxBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         )
 
     def score_select(self, matrix, days_ago, plans, ks, *, mask=None,
-                     fused_mmr=None):
+                     fused_mmr=None, score_bias=None):
         for p in plans:
             _require_days(p, days_ago)
         n = matrix.shape[0]
@@ -789,7 +823,8 @@ class JitJaxBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         use_mmr = self._use_mmr(plans, fused_mmr)
         panel2d = mask is not None and mask.ndim == 2
         structure = PlanStructure.of(plans, widths, n, ks=ks,
-                                     device_mmr=use_mmr, panel=panel2d)
+                                     device_mmr=use_mmr, panel=panel2d,
+                                     bias=score_bias is not None)
         fn = self.plan_cache.get(structure)
         pad = structure.n_rows - n
         q_pre, q_sup, half_lives, lams = _panel_inputs(plans, structure,
@@ -802,8 +837,13 @@ class JitJaxBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
             live = np.zeros(structure.n_rows, dtype=bool)
             live[:n] = True if mask is None else mask
         pool_w = _pool_widths(widths, mask, n, structure.batch)
+        # no-bias structures take a dummy (1, 1) input: the traced body
+        # never touches it, so the arg shape stays stable per structure
+        bias = (_expand_bias(score_bias, structure.n_rows, structure.batch,
+                             len(plans))
+                if structure.bias else np.zeros((1, 1), np.float32))
         idx, vals = fn(self._device_matrix(matrix, pad), q_pre, q_sup,
-                       days, half_lives, live, lams, pool_w)
+                       days, half_lives, live, lams, pool_w, bias)
         # with the fused MMR tail the device returns final-k blocks for
         # every plan (plain plans ride the lam=1.0 identity)
         out_w = ([min(max(k, 0), w) for k, w in zip(ks, widths)]
@@ -868,7 +908,7 @@ class PallasBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         return np.asarray(panel)
 
     def score_select(self, matrix, days_ago, plans, ks, *, mask=None,
-                     fused_mmr=None):
+                     fused_mmr=None, score_bias=None):
         import jax.numpy as jnp
 
         from repro.kernels.topk.ops import topk
@@ -884,6 +924,11 @@ class PallasBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         # there is no compiled-executable cache to bucket rows for)
         w_stat = min(PlanStructure.of(plans, widths, n).width, n)
         panel, interpret = self._grouped_panel(matrix, days_ago, plans)
+        if score_bias is not None:
+            # hybrid lexical leg: additive fusion on the device-resident
+            # panel, before mask/top-k (matches the jitted fused graphs)
+            b = jnp.asarray(np.asarray(score_bias, np.float32))
+            panel = panel + (b if b.ndim == 2 else b[:, None])
         if mask is not None:
             # tombstones (or each plan's candidate-panel column) drop out
             # on device, before the top-k kernel
@@ -996,7 +1041,7 @@ class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         mesh = jax.make_mesh((n_dev,), ("shards",))
         cache = self.plan_cache
 
-        def local(matrix, q_pre, q_sup, days, half_lives, mask):
+        def local(matrix, q_pre, q_sup, days, half_lives, mask, bias):
             cache.jax_traces += 1  # python body runs only while tracing
             n_local = matrix.shape[0]
             shard = jax.lax.axis_index("shards")
@@ -1007,6 +1052,9 @@ class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
                 )
             if structure.suppress_bucket:
                 scores = scores + matrix @ q_sup
+            if structure.bias:
+                # hybrid lexical leg, sharded row-wise like the mask
+                scores = scores + bias
             # one mask covers row-grid padding AND segment tombstones, so
             # neither can ever enter the union with a real score; a panel
             # structure shards one mask column PER PLAN instead
@@ -1022,14 +1070,15 @@ class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
             mesh=mesh,
             in_specs=(P("shards", None), P(None, None), P(None, None),
                       P("shards"), P(None),
-                      P("shards", None) if structure.panel else P("shards")),
+                      P("shards", None) if structure.panel else P("shards"),
+                      P("shards", None) if structure.bias else P(None, None)),
             out_specs=(P(None, None), P(None, None)),
             check_rep=False,
         )
 
         def fused_select(matrix, q_pre, q_sup, days, half_lives, mask,
-                         lams, pool_w):
-            i, v = inner(matrix, q_pre, q_sup, days, half_lives, mask)
+                         lams, pool_w, bias):
+            i, v = inner(matrix, q_pre, q_sup, days, half_lives, mask, bias)
             if structure.mmr_k:
                 # fused diverse tail OUTSIDE the shard_map: the merged
                 # (B, width) union is replicated, its pool gather reads
@@ -1066,7 +1115,7 @@ class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         return out[:n]
 
     def score_select(self, matrix, days_ago, plans, ks, *, mask=None,
-                     fused_mmr=None):
+                     fused_mmr=None, score_bias=None):
         import jax
 
         for p in plans:
@@ -1079,7 +1128,8 @@ class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         use_mmr = self._use_mmr(plans, fused_mmr)
         panel2d = mask is not None and mask.ndim == 2
         structure = PlanStructure.of(plans, widths, n, ks=ks,
-                                     device_mmr=use_mmr, panel=panel2d)
+                                     device_mmr=use_mmr, panel=panel2d,
+                                     bias=score_bias is not None)
         fn = self.plan_cache.get(structure)
         # row grid: pow2 bucket (the PlanCache key), then up to a shard
         # multiple — derived from the bucket alone, so one trace per bucket
@@ -1096,8 +1146,13 @@ class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
             live[:n] = True if mask is None else mask
         pool_w = _pool_widths(widths, mask, n, structure.batch)
         mat = self._device_matrix(matrix, pad)
+        # bias shards row-wise with the corpus grid; no-bias structures
+        # take a replicated dummy the traced body never touches
+        bias = (_expand_bias(score_bias, padded, structure.batch,
+                             len(plans))
+                if structure.bias else np.zeros((1, 1), np.float32))
         idx, vals = fn(mat, q_pre, q_sup, days, half_lives, live, lams,
-                       pool_w)
+                       pool_w, bias)
         out_w = ([min(max(k, 0), w) for k, w in zip(ks, widths)]
                  if use_mmr else widths)
         return _slice_candidates(idx, vals, out_w)
@@ -1209,6 +1264,7 @@ def score_select_segments(
     candidate_masks: Optional[Sequence[Optional[np.ndarray]]] = None,
     device_mmr: Optional[bool] = None,
     counters: Optional[FusedCounters] = None,
+    score_bias: Optional[Sequence[Optional[np.ndarray]]] = None,
 ) -> List[Candidates]:
     """Fused score->select over a SEGMENTED corpus (repro.core.segments).
 
@@ -1261,12 +1317,21 @@ def score_select_segments(
     each plan's eligible-row count, and the union merge is bit-identical
     to host-gathering the candidate rows (in global-row order) and
     scoring them monolithically.
+
+    ``score_bias`` is the hybrid-fusion hook: per-segment additive score
+    arrays aligned with ``segments`` (None = zero bias; (n,) shared or
+    (n, B) per-plan — ``SegmentedCorpusStore.score_bias_arrays`` /
+    :func:`fusion_bias_arrays` build them), added on device before
+    masking and selection.  A candidate-mask skip stays a skip: the
+    Phase-1 filter is hard, bias only re-ranks eligible rows.
     """
     from repro.core.segments import segment_offsets
 
     backend = get_backend(backend)
     if candidate_masks is not None and len(candidate_masks) != len(segments):
         raise ValueError("candidate_masks misaligned with segments")
+    if score_bias is not None and len(score_bias) != len(segments):
+        raise ValueError("score_bias misaligned with segments")
     nplans = len(plans)
     # per-segment eligible mask: candidates ∧ live (None = every row);
     # per-PLAN eligible counts — a (n, B) panel gives every plan its own
@@ -1316,7 +1381,8 @@ def score_select_segments(
         n_el = int(c[0])
         out = backend.score_select(
             seg.matrix, seg.days_ago(now), plans,
-            [min(k, n_el) for k in ks], fused_mmr=device_mmr)
+            [min(k, n_el) for k in ks], fused_mmr=device_mmr,
+            score_bias=None if score_bias is None else score_bias[i])
         if use_mmr and counters is not None:
             counters.device_mmr += sum(
                 1 for p, k in zip(plans, ks)
@@ -1337,7 +1403,8 @@ def score_select_segments(
     parts: List[List[Candidates]] = []
     for i, seg, m, _ in scored:
         sel = backend.score_select(
-            seg.matrix, seg.days_ago(now), seg_plans, widths, mask=m)
+            seg.matrix, seg.days_ago(now), seg_plans, widths, mask=m,
+            score_bias=None if score_bias is None else score_bias[i])
         parts.append([(idx + offsets[i], vals) for idx, vals in sel])
 
     merged: List[Candidates] = []
@@ -1450,6 +1517,7 @@ def score_select_prefiltered(
     weight: int = 1,
     device_mmr: Optional[bool] = None,
     counters: Optional[FusedCounters] = None,
+    score_bias: Optional[Sequence[Optional[np.ndarray]]] = None,
 ) -> List[Candidates]:
     """Device pass for a Phase-1 FILTERED micro-batch (one candidate set
     shared by every plan in the call).  ``weight`` is how many QUERIES
@@ -1498,7 +1566,8 @@ def score_select_prefiltered(
             return [_empty_candidates() for _ in plans]
         return score_select_segments(
             backend, segments, plans, ks, now=now, candidate_masks=masks,
-            device_mmr=device_mmr, counters=counters)
+            device_mmr=device_mmr, counters=counters,
+            score_bias=score_bias)
 
     router.routed_gather += weight
     rows = store.locate_rows(cand, segments)
@@ -1507,8 +1576,10 @@ def score_select_prefiltered(
     sub = gather_rows(segments, rows)
     days = gather_days(segments, rows, now)
     ks_eff = [min(k, int(rows.size)) for k in ks]
+    sub_bias = (None if score_bias is None
+                else _gather_bias(score_bias, segments, rows))
     sel = backend.score_select(sub, days, plans, ks_eff,
-                               fused_mmr=device_mmr)
+                               fused_mmr=device_mmr, score_bias=sub_bias)
     if (counters is not None and backend.device_mmr
             and device_mmr is not False):
         counters.device_mmr += sum(
@@ -1529,6 +1600,7 @@ def score_select_filter_panel(
     router: Optional[PrefilterRouter] = None,
     counters: Optional[FusedCounters] = None,
     device_mmr: Optional[bool] = None,
+    score_bias: Optional[Sequence[Optional[np.ndarray]]] = None,
 ) -> List[Candidates]:
     """Device pass for a HETEROGENEOUS-filter micro-batch: one plan per
     request, each with its OWN Phase-1 candidate set (None = unfiltered).
@@ -1559,7 +1631,119 @@ def score_select_filter_panel(
         return [_empty_candidates() for _ in plans]
     return score_select_segments(
         backend, segments, plans, ks, now=now, candidate_masks=panels,
-        device_mmr=device_mmr, counters=counters)
+        device_mmr=device_mmr, counters=counters, score_bias=score_bias)
+
+
+def _gather_bias(
+    bias_arrays: Sequence[Optional[np.ndarray]],
+    segments: Sequence,
+    rows: np.ndarray,
+) -> np.ndarray:
+    """Per-segment bias arrays -> bias values at GLOBAL rows (the gather
+    route's counterpart of ``gather_rows``: the sub-matrix is scored with
+    the matching sub-bias)."""
+    from repro.core.segments import segment_offsets
+
+    off = segment_offsets(segments)
+    seg_idx = np.searchsorted(off, rows, side="right") - 1
+    local = rows - off[seg_idx]
+    width = next((a.shape[1] for a in bias_arrays
+                  if a is not None and a.ndim == 2), None)
+    out = (np.zeros(rows.size, np.float32) if width is None
+           else np.zeros((rows.size, width), np.float32))
+    for s in np.unique(seg_idx):
+        arr = bias_arrays[s]
+        if arr is None:
+            continue
+        take = seg_idx == s
+        vals = arr[local[take]]
+        if width is not None and vals.ndim == 1:
+            vals = np.repeat(vals[:, None], width, axis=1)
+        out[take] = vals
+    return out
+
+
+def plan_fusion_bias(
+    plan: M.ModulationPlan,
+) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """One plan's sparse lexical score contribution: ``(chunk_ids,
+    (1-w) * minmax(bm25))`` — or None when nothing rides on device
+    (no fusion, RRF mode, empty lexical hits, or w == 1.0: the guard
+    that keeps ``fuse:weighted,1.0`` bit-identical to the unfused path).
+    """
+    f = plan.fusion
+    if (f is None or f.mode != "weighted" or plan.lexical is None
+            or plan.lexical.ids.size == 0 or f.weight == 1.0):
+        return None
+    vals = ((1.0 - f.weight)
+            * np.asarray(plan.lexical.scores, np.float32))
+    return plan.lexical.ids, vals.astype(np.float32, copy=False)
+
+
+def fusion_bias_arrays(
+    store,
+    segments: Sequence,
+    plans: Sequence[M.ModulationPlan],
+) -> Optional[List[Optional[np.ndarray]]]:
+    """Per-segment additive score arrays for a micro-batch's lexical legs
+    — the ``score_bias`` input of every segmented driver.  None when no
+    plan contributes a device-fused bias; otherwise one entry per
+    segment: (n,) for a single-plan call, (n, B) zero-filled panels when
+    several plans fuse different keyword queries in one batch.
+    """
+    per_plan = [plan_fusion_bias(p) for p in plans]
+    if all(b is None for b in per_plan):
+        return None
+    if len(plans) == 1:
+        ids, vals = per_plan[0]
+        arrays, _ = store.score_bias_arrays(ids, vals, segments)
+        return arrays
+    out: List[Optional[np.ndarray]] = [None] * len(segments)
+    for j, b in enumerate(per_plan):
+        if b is None:
+            continue
+        cols, _ = store.score_bias_arrays(b[0], b[1], segments)
+        for i, col in enumerate(cols):
+            if col is None:
+                continue
+            if out[i] is None:
+                out[i] = np.zeros((segments[i].n_rows, len(plans)),
+                                  np.float32)
+            out[i][:, j] = col
+    return out
+
+
+def finalize_fusion(
+    plan: M.ModulationPlan,
+    results: List[Tuple[int, float]],
+    k: int,
+    *,
+    store=None,
+    candidate_ids: Optional[Sequence[int]] = None,
+) -> List[Tuple[int, float]]:
+    """Host finishing stage for RANK fusion (``fuse:rrf,K``) — a no-op
+    for every other plan.  RRF is not linear in scores, so it cannot ride
+    the device bias: the device pass runs pure-vector, and this fuses its
+    ranked list with the lexical list via ``modulations.rrf_fuse``.
+
+    The lexical ids are clipped to the Phase-1 candidate set (the filter
+    stays hard under fusion) and to live store membership (ids deleted
+    since the FTS query — or FTS rows the vector store never held — are
+    dropped, matching the non-strict prefilter contract).
+    """
+    f = plan.fusion
+    if f is None or f.mode != "rrf" or plan.lexical is None:
+        return results
+    lex = np.asarray(plan.lexical.ids, np.int64)
+    if candidate_ids is not None:
+        cand = (candidate_ids if isinstance(candidate_ids, np.ndarray)
+                else np.asarray(list(candidate_ids), dtype=np.int64))
+        lex = lex[np.isin(lex, cand)]
+    if store is not None:
+        lex = np.asarray([i for i in lex if int(i) in store], np.int64)
+    fused = M.rrf_fuse([i for i, _ in results], [int(i) for i in lex],
+                       f.rrf_k)
+    return [(int(i), float(s)) for i, s in fused[:max(0, k)]]
 
 
 def finalize_segment_candidates(

@@ -13,8 +13,12 @@ to the open clause's text; bare keywords close it):
     pool:N               candidate pool size (default 500)
     cluster:K            STRUCTURAL (§3.2): k-means label column
     central              STRUCTURAL (§3.2): similarity-centrality column
+    keyword:TEXT...      lexical (FTS5/BM25) leg of hybrid fusion
+    fuse:weighted,W      hybrid: W*vector + (1-W)*minmax(bm25) (W in [0,1])
+    fuse:rrf,K           hybrid: reciprocal-rank fusion with constant K
 
 Tokens may appear in ANY order; execution order is fixed (modulations.py).
+``keyword:`` without ``fuse:`` defaults to ``fuse:weighted,0.5``.
 """
 
 from __future__ import annotations
@@ -28,8 +32,11 @@ from repro.core import modulations as M
 
 EmbedFn = Callable[[str], np.ndarray]
 ResolveIdsFn = Callable[[Sequence[int]], np.ndarray]  # ids -> (m, d) embeds
+# keyword text + pool width -> (ids desc-by-bm25, minmax scores in [0,1])
+LexicalFn = Callable[[str, int], Tuple[np.ndarray, np.ndarray]]
 
-_PREFIXES = ("similar:", "suppress:", "decay:", "centroid:", "from:", "to:", "pool:", "cluster:")
+_PREFIXES = ("similar:", "suppress:", "decay:", "centroid:", "from:", "to:",
+             "pool:", "cluster:", "keyword:", "fuse:")
 _KEYWORDS = ("diverse", "central")
 
 
@@ -51,6 +58,10 @@ class ParsedTokens:
     pool: int = M.DEFAULT_POOL
     cluster: Optional[int] = None   # structural: k-means label column
     central: bool = False           # structural: centrality column
+    keyword: Optional[str] = None   # lexical leg of hybrid fusion
+    fuse_mode: Optional[str] = None  # "weighted" | "rrf"
+    fuse_weight: float = M.DEFAULT_FUSE_WEIGHT
+    fuse_k: int = M.DEFAULT_RRF_K
 
 
 def tokenize(token_string: str) -> ParsedTokens:
@@ -75,6 +86,11 @@ def tokenize(token_string: str) -> ParsedTokens:
             parsed.from_text = text
         elif kind == "to":
             parsed.to_text = text
+        elif kind == "keyword":
+            # repeated keyword: clauses accumulate into one lexical query
+            parsed.keyword = (
+                f"{parsed.keyword} {text}" if parsed.keyword else text
+            )
         open_clause = None
 
     for raw in token_string.split():
@@ -83,8 +99,10 @@ def tokenize(token_string: str) -> ParsedTokens:
             close()
             kind = matched_prefix[:-1]
             rest = raw[len(matched_prefix):]
-            if kind in ("similar", "suppress", "from", "to"):
+            if kind in ("similar", "suppress", "from", "to", "keyword"):
                 open_clause = (kind, [rest] if rest else [])
+            elif kind == "fuse":
+                _parse_fuse(parsed, rest)
             elif kind == "decay":
                 try:
                     parsed.decay = float(rest) if rest else M.DEFAULT_DECAY_HALF_LIFE
@@ -132,19 +150,77 @@ def tokenize(token_string: str) -> ParsedTokens:
 
     if (parsed.from_text is None) != (parsed.to_text is None):
         raise GrammarError("from:/to: must be used together")
-    if parsed.similar is None and parsed.from_text is None and parsed.centroid_ids is None:
+    if parsed.fuse_mode is not None and parsed.keyword is None:
+        raise GrammarError("fuse: requires a keyword: clause")
+    if parsed.keyword is not None and parsed.fuse_mode is None:
+        parsed.fuse_mode = "weighted"  # keyword: alone -> default fusion
+    if parsed.fuse_mode == "rrf" and parsed.diverse:
         raise GrammarError(
-            "query needs at least one of similar:, from:/to:, or centroid:"
+            "diverse cannot combine with fuse:rrf (MMR needs fused scores "
+            "before selection; use fuse:weighted instead)"
+        )
+    if (
+        parsed.similar is None
+        and parsed.from_text is None
+        and parsed.centroid_ids is None
+        and parsed.keyword is None
+    ):
+        raise GrammarError(
+            "query needs at least one of similar:, from:/to:, centroid:, "
+            "or keyword:"
         )
     return parsed
+
+
+def _parse_fuse(parsed: ParsedTokens, rest: str) -> None:
+    """Parse ``fuse:weighted[,W]`` / ``fuse:rrf[,K]`` into ``parsed``."""
+    parts = rest.split(",") if rest else [""]
+    mode = parts[0]
+    if mode not in ("weighted", "rrf"):
+        raise GrammarError(
+            f"fuse: expects 'weighted[,W]' or 'rrf[,K]', got {rest!r}"
+        )
+    parsed.fuse_mode = mode
+    if len(parts) > 2:
+        raise GrammarError(f"fuse: too many parameters in {rest!r}")
+    if len(parts) == 2:
+        param = parts[1]
+        if mode == "weighted":
+            try:
+                parsed.fuse_weight = float(param)
+            except ValueError as e:
+                raise GrammarError(
+                    f"fuse:weighted expects a number, got {param!r}"
+                ) from e
+            if not 0.0 <= parsed.fuse_weight <= 1.0:
+                raise GrammarError(
+                    "fuse:weighted weight must be in [0, 1], got "
+                    f"{parsed.fuse_weight}"
+                )
+        else:
+            try:
+                parsed.fuse_k = int(param)
+            except ValueError as e:
+                raise GrammarError(
+                    f"fuse:rrf expects an integer, got {param!r}"
+                ) from e
+            if parsed.fuse_k <= 0:
+                raise GrammarError("fuse:rrf constant must be positive")
 
 
 def build_plan(
     parsed: ParsedTokens,
     embed: EmbedFn,
     resolve_ids: Optional[ResolveIdsFn] = None,
+    lexical_fn: Optional[LexicalFn] = None,
 ) -> M.ModulationPlan:
-    """Bind a :class:`ParsedTokens` to an embedder -> executable plan."""
+    """Bind a :class:`ParsedTokens` to an embedder -> executable plan.
+
+    ``lexical_fn`` resolves a ``keyword:`` clause to BM25 hits at build
+    time (symmetric with ``resolve_ids`` for ``centroid:``); it receives
+    the parsed ``pool:`` width so the lexical stage is never silently
+    truncated below the requested candidate pool.
+    """
     d = None
     if parsed.similar is not None:
         query = M.l2_normalize(np.asarray(embed(parsed.similar), dtype=np.float32))
@@ -180,6 +256,25 @@ def build_plan(
     decay = M.DecaySpec(half_life_days=parsed.decay) if parsed.decay is not None else None
     diverse = M.DiverseSpec() if parsed.diverse else None
 
+    fusion = None
+    lexical = None
+    if parsed.keyword is not None:
+        if lexical_fn is None:
+            raise GrammarError(
+                "keyword: requires a lexical (FTS) resolver — query through "
+                "the materializer / RetrievalService, or pass lexical_fn"
+            )
+        fusion = M.FusionSpec(
+            mode=parsed.fuse_mode or "weighted",
+            weight=parsed.fuse_weight,
+            rrf_k=parsed.fuse_k,
+        )
+        lex_ids, lex_scores = lexical_fn(parsed.keyword, parsed.pool)
+        lexical = M.LexicalHits(
+            ids=np.asarray(lex_ids, dtype=np.int64),
+            scores=np.asarray(lex_scores, dtype=np.float32),
+        )
+
     return M.ModulationPlan(
         query=query,
         centroid=centroid,
@@ -190,6 +285,9 @@ def build_plan(
         pool=parsed.pool,
         cluster=parsed.cluster,
         central=parsed.central,
+        keyword=parsed.keyword,
+        fusion=fusion,
+        lexical=lexical,
     )
 
 
@@ -197,6 +295,7 @@ def parse(
     token_string: str,
     embed: EmbedFn,
     resolve_ids: Optional[ResolveIdsFn] = None,
+    lexical_fn: Optional[LexicalFn] = None,
 ) -> M.ModulationPlan:
     """tokenize + build_plan in one call (the VectorCache entry point)."""
-    return build_plan(tokenize(token_string), embed, resolve_ids)
+    return build_plan(tokenize(token_string), embed, resolve_ids, lexical_fn)

@@ -40,10 +40,14 @@ import numpy as np
 # tables live on the CONNECTION, so names must be process-unique.
 _TEMP_IDS = itertools.count(1)
 
+from repro.core import grammar
+from repro.core import modulations as M
 from repro.core.backends import ExecutionBackend, get_backend
 from repro.core.vectorcache import VectorCache
 
-_PSEUDO_FUNCS = ("vec_ops", "keyword")
+# scanned case-insensitively; the canonical (lowercase) spelling is what
+# PseudoCall.func carries
+_PSEUDO_FUNCS = ("vec_ops", "vector_search", "keyword", "hybrid_search")
 _READONLY_RE = re.compile(r"^\s*(SELECT|WITH)\b", re.IGNORECASE)
 # the ingest surface: writes against the `chunks` view ONLY (`\b` keeps
 # `_raw_chunks` and friends rejected by the read-only check below)
@@ -59,8 +63,8 @@ class MaterializeError(RuntimeError):
 
 @dataclasses.dataclass
 class PseudoCall:
-    func: str            # 'vec_ops' | 'keyword'
-    args: List[str]      # decoded SQL string-literal arguments
+    func: str            # 'vec_ops' | 'vector_search' | 'keyword' | 'hybrid_search'
+    args: List[Union[str, float]]  # decoded string/numeric literal arguments
     start: int           # span of the call in the original SQL text
     end: int
 
@@ -79,6 +83,7 @@ def _scan_calls(sql: str) -> List[PseudoCall]:
     expanded (the Phase-1 subquery is plain SQL by construction).
     """
     calls: List[PseudoCall] = []
+    low = sql.lower()  # case-insensitive match (HYBRID_SEARCH == hybrid_search)
     i, n = 0, len(sql)
     while i < n:
         c = sql[i]
@@ -87,7 +92,7 @@ def _scan_calls(sql: str) -> List[PseudoCall]:
             continue
         matched = None
         for name in _PSEUDO_FUNCS:
-            if sql.startswith(name, i) and _is_word_boundary(sql, i, len(name)):
+            if low.startswith(name, i) and _is_word_boundary(sql, i, len(name)):
                 j = i + len(name)
                 while j < n and sql[j] in " \t\n":
                     j += 1
@@ -145,8 +150,13 @@ def _match_paren(sql: str, open_paren: int) -> int:
     raise MaterializeError(f"unbalanced parentheses at offset {open_paren}")
 
 
-def _split_args(body: str) -> List[str]:
-    """Split top-level comma-separated string-literal arguments and decode."""
+def _split_args(body: str) -> List[Union[str, float]]:
+    """Split top-level comma-separated literal arguments and decode.
+
+    String literals decode to str; bare numeric literals (the
+    ``HYBRID_SEARCH('q', 0.7)`` weight) decode to float.  Anything else
+    stays an explicit error.
+    """
     args: List[str] = []
     i, n = 0, len(body)
     depth = 0
@@ -167,14 +177,19 @@ def _split_args(body: str) -> List[str]:
     tail = body[start:].strip()
     if tail or args:
         args.append(body[start:])
-    decoded = []
+    decoded: List[Union[str, float]] = []
     for a in args:
         a = a.strip()
-        if not (a.startswith("'") and a.endswith("'") and len(a) >= 2):
+        if a.startswith("'") and a.endswith("'") and len(a) >= 2:
+            decoded.append(a[1:-1].replace("''", "'"))
+            continue
+        try:
+            decoded.append(float(a))
+        except ValueError:
             raise MaterializeError(
-                f"pseudo-function arguments must be string literals, got: {a[:60]!r}"
-            )
-        decoded.append(a[1:-1].replace("''", "'"))
+                "pseudo-function arguments must be string literals "
+                f"(or numeric literals), got: {a[:60]!r}"
+            ) from None
     return decoded
 
 
@@ -254,6 +269,10 @@ class Materializer:
             return self._materialize_vec_ops(call)
         if call.func == "keyword":
             return self._materialize_keyword(call)
+        if call.func == "hybrid_search":
+            return self._materialize_hybrid_search(call)
+        if call.func == "vector_search":
+            return self._materialize_vector_search(call)
         raise MaterializeError(f"unknown pseudo-function {call.func}")
 
     def _fresh_table(self, prefix: str) -> str:
@@ -262,18 +281,85 @@ class Materializer:
         return name
 
     def _materialize_vec_ops(self, call: PseudoCall) -> str:
-        if self.cache is None:
-            raise MaterializeError("vec_ops: no VectorCache attached")
         if not 1 <= len(call.args) <= 2:
             raise MaterializeError(
                 f"vec_ops expects 1-2 string arguments, got {len(call.args)}"
             )
         tokens = call.args[0]
-        candidate_ids = None
-        if len(call.args) == 2 and call.args[1].strip():
+        if not isinstance(tokens, str):
+            raise MaterializeError("vec_ops: token argument must be a string")
+        prefilter_sql = None
+        if len(call.args) == 2:
+            if not isinstance(call.args[1], str):
+                raise MaterializeError("vec_ops: pre-filter must be a string")
             prefilter_sql = call.args[1]
+        return self._materialize_search("vec_ops", tokens=tokens,
+                                        prefilter_sql=prefilter_sql)
+
+    def _materialize_hybrid_search(self, call: PseudoCall) -> str:
+        """``HYBRID_SEARCH('query'[, weight])`` — weighted lexical+vector
+        fusion sugar: one text drives BOTH legs (``similar:`` through the
+        fused device pipeline, ``keyword:`` through FTS5/BM25), fused as
+        ``weight*vector + (1-weight)*minmax(bm25)`` on device."""
+        if self.cache is None:
+            raise MaterializeError("hybrid_search: no VectorCache attached")
+        if not 1 <= len(call.args) <= 2:
+            raise MaterializeError(
+                f"hybrid_search expects ('query'[, weight]), got {len(call.args)} args"
+            )
+        query = call.args[0]
+        if not isinstance(query, str) or not query.strip():
+            raise MaterializeError(
+                "hybrid_search: first argument must be the query string")
+        weight = M.DEFAULT_FUSE_WEIGHT
+        if len(call.args) == 2:
+            if not isinstance(call.args[1], float):
+                raise MaterializeError(
+                    "hybrid_search: weight must be a numeric literal")
+            weight = call.args[1]
+            if not 0.0 <= weight <= 1.0:
+                raise MaterializeError(
+                    f"hybrid_search: weight must be in [0, 1], got {weight}")
+        parsed = grammar.ParsedTokens(similar=query, keyword=query,
+                                      fuse_mode="weighted",
+                                      fuse_weight=weight)
+        return self._materialize_search("hybrid", parsed=parsed, label=query)
+
+    def _materialize_vector_search(self, call: PseudoCall) -> str:
+        """``VECTOR_SEARCH('query')`` — pure-vector sugar (plain text, no
+        grammar tokens): the hybrid surface's baseline counterpart."""
+        if self.cache is None:
+            raise MaterializeError("vector_search: no VectorCache attached")
+        if len(call.args) != 1 or not isinstance(call.args[0], str) \
+                or not call.args[0].strip():
+            raise MaterializeError(
+                "vector_search expects exactly one query string")
+        parsed = grammar.ParsedTokens(similar=call.args[0])
+        return self._materialize_search("vector", parsed=parsed,
+                                        label=call.args[0])
+
+    def _materialize_search(
+        self,
+        kind: str,
+        *,
+        tokens: Optional[str] = None,
+        parsed: Optional["grammar.ParsedTokens"] = None,
+        prefilter_sql: Optional[str] = None,
+        label: Optional[str] = None,
+    ) -> str:
+        """Shared Phase-1+2 driver behind every retrieval pseudo-call.
+
+        Materializes the unified result contract ``(id, score, snippet
+        [, cluster, central])`` — scores min-max normalized over the
+        result set (monotone: orderings are unchanged), snippet a content
+        prefix resolved by an UPDATE join (never a 1000-parameter INSERT).
+        """
+        if self.cache is None:
+            raise MaterializeError(f"{kind}: no VectorCache attached")
+        candidate_ids = None
+        if prefilter_sql is not None and prefilter_sql.strip():
             if not _READONLY_RE.match(prefilter_sql):
-                raise MaterializeError("vec_ops pre-filter must be a SELECT")
+                raise MaterializeError(f"{kind} pre-filter must be a SELECT")
             try:
                 rows = self.conn.execute(prefilter_sql).fetchall()
             except sqlite3.Error as e:
@@ -282,51 +368,81 @@ class Materializer:
             if not candidate_ids:
                 # Paper §7: malformed pre-filters returning no rows are an
                 # agent error class; we surface an EMPTY result, not a crash.
-                table = self._fresh_table("vec_ops")
+                table = self._fresh_table(kind)
                 self.conn.execute(
-                    f"CREATE TEMP TABLE {table} (id INTEGER PRIMARY KEY, score REAL)"
+                    f"CREATE TEMP TABLE {table} "
+                    "(id INTEGER PRIMARY KEY, score REAL, snippet TEXT)"
                 )
                 return table
 
         try:
+            plan = None
+            if parsed is not None:
+                plan = grammar.build_plan(
+                    parsed, self.cache.embed_fn,
+                    self.cache.embeddings_for_ids, self._lexical_scores)
             base_search = None
             if self.serving is not None:
                 # hand the parsed plan over so admission skips the
                 # duplicate parse+embed of the same tokens
-                base_search = (lambda plan, k: self.serving.search(
-                    tokens, k=k, candidate_ids=candidate_ids, plan=plan))
+                req_tokens = tokens if tokens is not None else (label or "")
+                base_search = (lambda p, k: self.serving.search(
+                    req_tokens, k=k, candidate_ids=candidate_ids, plan=p))
             cols, results = self.cache.search_full(
                 tokens, candidate_ids, now=self.now, engine=self.engine,
-                base_search=base_search,
+                base_search=base_search, lexical_fn=self._lexical_scores,
+                plan=plan,
             )
         except Exception as e:  # grammar errors -> explicit failure
-            raise MaterializeError(f"vec_ops failed: {e}") from e
+            raise MaterializeError(f"{kind} failed: {e}") from e
 
-        table = self._fresh_table("vec_ops")
-        # base columns + any structural-operator columns (§3.2):
-        # cluster (INTEGER k-means label), central (REAL centrality)
+        # the unified result-row contract: score min-max normalized,
+        # snippet after score, structural columns (§3.2) trailing
+        if results:
+            norm = M.minmax_normalize(
+                np.asarray([r[1] for r in results], np.float32))
+            results = [(r[0], float(v)) + tuple(r[2:])
+                       for r, v in zip(results, norm)]
+        cols = cols[:2] + ["snippet"] + cols[2:]
+
+        table = self._fresh_table(kind)
         decls = {"id": "INTEGER PRIMARY KEY", "score": "REAL",
-                 "cluster": "INTEGER", "central": "REAL"}
+                 "snippet": "TEXT", "cluster": "INTEGER", "central": "REAL"}
         col_sql = ", ".join(f"{c} {decls[c]}" for c in cols)
         self.conn.execute(f"CREATE TEMP TABLE {table} ({col_sql})")
-        ph = ",".join("?" * len(cols))
+        ins_cols = [c for c in cols if c != "snippet"]
+        ph = ",".join("?" * len(ins_cols))
         self.conn.executemany(
-            f"INSERT OR REPLACE INTO {table} ({', '.join(cols)}) VALUES ({ph})",
+            f"INSERT OR REPLACE INTO {table} ({', '.join(ins_cols)}) "
+            f"VALUES ({ph})",
             results,
+        )
+        # snippet via UPDATE join: immune to SQLite's host-parameter limit
+        self.conn.execute(
+            f"UPDATE {table} SET snippet = ("
+            f"SELECT substr(c.content, 1, 96) FROM _raw_chunks c "
+            f"WHERE c.id = {table}.id)"
         )
         return table
 
     def _materialize_keyword(self, call: PseudoCall) -> str:
-        if len(call.args) != 1:
+        if len(call.args) != 1 or not isinstance(call.args[0], str):
             raise MaterializeError("keyword expects exactly one string argument")
         term = call.args[0]
         table = self._fresh_table("kw")
         self.conn.execute(
-            f"CREATE TEMP TABLE {table} (id INTEGER PRIMARY KEY, rank REAL, snippet TEXT)"
+            f"CREATE TEMP TABLE {table} "
+            "(id INTEGER PRIMARY KEY, score REAL, snippet TEXT)"
         )
         rows = self._fts_query(term)
+        if rows:
+            # unified contract: min-max normalized scores, same (id,
+            # score, snippet) shape as every other retrieval pseudo-call
+            norm = M.minmax_normalize(
+                np.asarray([r[1] for r in rows], np.float32))
+            rows = [(r[0], float(v), r[2]) for r, v in zip(rows, norm)]
         self.conn.executemany(
-            f"INSERT OR REPLACE INTO {table} (id, rank, snippet) VALUES (?, ?, ?)",
+            f"INSERT OR REPLACE INTO {table} (id, score, snippet) VALUES (?, ?, ?)",
             rows,
         )
         return table
@@ -434,21 +550,56 @@ class Materializer:
             self.cache.delete(removed)
         return ["id"], [(i,) for i in removed]
 
-    def _fts_query(self, term: str) -> List[tuple]:
-        """FTS5 BM25 with automatic fallback quoting for special chars."""
-        fts = self.fts_table
-        sql = (
-            f"SELECT rowid, -bm25({fts}) AS rank, "
-            f"snippet({fts}, -1, '[', ']', '…', 12) "
-            f"FROM {fts} WHERE {fts} MATCH ? ORDER BY rank DESC LIMIT 500"
-        )
+    def _fts_query(self, term: str, limit: int = M.DEFAULT_POOL) -> List[tuple]:
+        """FTS5 BM25 with automatic fallback quoting for special chars.
+
+        ``limit`` comes from the plan's ``pool:`` width on the hybrid path
+        (formerly a hardcoded 500 that silently truncated wide pools).
+        """
+        return fts_query(self.conn, term, limit=limit,
+                         fts_table=self.fts_table)
+
+    def _lexical_scores(self, term: str, limit: int) -> Tuple[np.ndarray, np.ndarray]:
+        """``grammar.LexicalFn``: keyword text + pool width -> BM25 hits.
+
+        Returns ``(ids desc-by-bm25, min-max normalized scores in [0,1])``
+        — the lexical leg every ``keyword:`` / ``HYBRID_SEARCH`` plan built
+        through this materializer fuses on device.
+        """
+        rows = self._fts_query(term, limit=limit)
+        if not rows:
+            return (np.empty(0, dtype=np.int64),
+                    np.empty(0, dtype=np.float32))
+        ids = np.asarray([r[0] for r in rows], dtype=np.int64)
+        scores = M.minmax_normalize(
+            np.asarray([r[1] for r in rows], np.float32))
+        return ids, scores
+
+
+def fts_query(
+    conn: sqlite3.Connection,
+    term: str,
+    limit: int = M.DEFAULT_POOL,
+    fts_table: str = "chunks_fts",
+) -> List[tuple]:
+    """FTS5 BM25 query: ``(rowid, -bm25 rank, snippet)`` desc by rank.
+
+    Module-level so serving-layer lexical resolvers (RetrievalService) can
+    share the exact quoting/fallback semantics without a Materializer.
+    """
+    fts = fts_table
+    sql = (
+        f"SELECT rowid, -bm25({fts}) AS rank, "
+        f"snippet({fts}, -1, '[', ']', '…', 12) "
+        f"FROM {fts} WHERE {fts} MATCH ? ORDER BY rank DESC LIMIT ?"
+    )
+    try:
+        return conn.execute(sql, (term, int(limit))).fetchall()
+    except sqlite3.OperationalError:
+        # Fallback quoting (paper Appendix B): dots/operators in the term
+        # break FTS5 syntax; quote each whitespace token and retry.
+        quoted = " ".join(f'"{t}"' for t in term.split())
         try:
-            return self.conn.execute(sql, (term,)).fetchall()
-        except sqlite3.OperationalError:
-            # Fallback quoting (paper Appendix B): dots/operators in the term
-            # break FTS5 syntax; quote each whitespace token and retry.
-            quoted = " ".join(f'"{t}"' for t in term.split())
-            try:
-                return self.conn.execute(sql, (quoted,)).fetchall()
-            except sqlite3.OperationalError as e:
-                raise MaterializeError(f"keyword: FTS5 rejected {term!r}: {e}") from e
+            return conn.execute(sql, (quoted, int(limit))).fetchall()
+        except sqlite3.OperationalError as e:
+            raise MaterializeError(f"keyword: FTS5 rejected {term!r}: {e}") from e

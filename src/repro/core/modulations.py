@@ -21,7 +21,7 @@ host/numpy engine, (b) the jit'd JAX engine, and (c) the Pallas kernel tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -37,6 +37,8 @@ DEFAULT_DECAY_HALF_LIFE = 30.0
 DEFAULT_MMR_LAMBDA = 0.7
 DEFAULT_MMR_OVERSAMPLE = 3
 DEFAULT_POOL = 500
+DEFAULT_FUSE_WEIGHT = 0.5
+DEFAULT_RRF_K = 60
 
 
 def l2_normalize(v: Array, eps: float = 1e-12) -> Array:
@@ -91,6 +93,35 @@ class DiverseSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class FusionSpec:
+    """`fuse:MODE[,param]` — how lexical (BM25) and vector scores combine.
+
+    ``weighted``: final = weight * modulated + (1-weight) * minmax(bm25),
+    fused ON DEVICE as an additive score bias (the weight folds into the
+    query panel by linearity, the lexical part rides as ``score_bias``).
+    ``rrf``: reciprocal-rank fusion 1/(k+rank) over the two ranked lists,
+    finished on host after selection (rank fusion is not linear in scores).
+    """
+
+    mode: str = "weighted"  # "weighted" | "rrf"
+    weight: float = DEFAULT_FUSE_WEIGHT  # vector-side weight, weighted mode
+    rrf_k: int = DEFAULT_RRF_K
+
+
+@dataclasses.dataclass(frozen=True)
+class LexicalHits:
+    """Resolved `keyword:` clause: sparse BM25 hits, min-max normalized.
+
+    ``ids`` are chunk ids in descending lexical relevance; ``scores`` are
+    the matching normalized scores in [0, 1].  Resolved at plan-build time
+    (like centroid ids) so the plan stays executable without a connection.
+    """
+
+    ids: np.ndarray     # (m,) int64
+    scores: np.ndarray  # (m,) float32, min-max normalized, descending
+
+
+@dataclasses.dataclass(frozen=True)
 class ModulationPlan:
     """Everything Phase 2 needs, in executable form.
 
@@ -109,11 +140,60 @@ class ModulationPlan:
     pool: int = DEFAULT_POOL
     cluster: Optional[int] = None   # cluster:K -> k-means label column
     central: bool = False           # central -> similarity-centrality column
+    keyword: Optional[str] = None   # keyword:TEXT -> lexical leg of fusion
+    fusion: Optional[FusionSpec] = None
+    lexical: Optional[LexicalHits] = None  # resolved keyword: hits
 
     @property
     def n_directions(self) -> int:
         """Query-side directions the fused kernel must score (incl. base)."""
         return 1 + (1 if self.trajectory is not None else 0) + len(self.suppress)
+
+
+def fusion_scale(plan: ModulationPlan) -> float:
+    """Vector-side multiplier for weighted fusion (1.0 = no scaling).
+
+    Folding the weight into the query panel keeps the fused pipeline a
+    single GEMM: w*(decay*(M@q_pre) + M@q_sup) == decay*(M@(w*q_pre)) +
+    M@(w*q_sup) by linearity.  RRF never scales (rank-based).
+    """
+    if plan.fusion is not None and plan.fusion.mode == "weighted":
+        return float(plan.fusion.weight)
+    return 1.0
+
+
+def minmax_normalize(values: Array) -> Array:
+    """Min-max normalize to [0, 1]; degenerate (max==min) maps to ones."""
+    np_mod = _module_of(values)
+    values = np_mod.asarray(values)
+    if values.shape[0] == 0:
+        return values
+    lo, hi = values.min(), values.max()
+    if hi == lo:
+        return np_mod.ones_like(values)
+    return (values - lo) / (hi - lo)
+
+
+def rrf_fuse(
+    vector_ids: Sequence[int],
+    lexical_ids: Sequence[int],
+    rrf_k: int = DEFAULT_RRF_K,
+) -> List[Tuple[int, float]]:
+    """Reciprocal-rank fusion over two ranked id lists.
+
+    score(id) = sum over lists containing id of 1/(rrf_k + rank), rank
+    1-based.  Ties break deterministically by first-seen order (vector
+    list first, then lexical).
+    """
+    scores: dict = {}
+    order: dict = {}
+    for lst in (vector_ids, lexical_ids):
+        for rank, i in enumerate(lst, start=1):
+            i = int(i)
+            scores[i] = scores.get(i, 0.0) + 1.0 / (rrf_k + rank)
+            if i not in order:
+                order[i] = len(order)
+    return sorted(scores.items(), key=lambda kv: (-kv[1], order[kv[0]]))
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +282,9 @@ def modulate_scores(
         scores = apply_decay(scores, days_ago, plan.decay)
     for spec in plan.suppress:
         scores = apply_suppress(scores, matrix, spec)
+    scale = fusion_scale(plan)
+    if scale != 1.0:  # guarded: fuse:weighted,1.0 stays bit-identical
+        scores = scores * scale
     return scores
 
 
@@ -269,6 +352,10 @@ def fold_plan(plan: ModulationPlan) -> Tuple[np.ndarray, np.ndarray]:
     q_sup = np.zeros(d, dtype=np.float32)
     for spec in plan.suppress:
         q_sup -= spec.weight * np.asarray(spec.direction, np.float32)
+    scale = fusion_scale(plan)
+    if scale != 1.0:  # guarded: fuse:weighted,1.0 stays bit-identical
+        q_pre = np.asarray(scale * q_pre, dtype=np.float32)
+        q_sup = np.asarray(scale * q_sup, dtype=np.float32)
     return q_pre, q_sup
 
 
@@ -297,6 +384,9 @@ def fused_modulate_scores(
         pre = apply_decay(pre, days_ago, plan.decay)
     if panel.shape[1] > n_pre:
         pre = pre + all_scores[:, n_pre:] @ w[n_pre:]
+    scale = fusion_scale(plan)
+    if scale != 1.0:  # guarded: fuse:weighted,1.0 stays bit-identical
+        pre = pre * scale
     return pre
 
 

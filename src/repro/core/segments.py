@@ -593,3 +593,39 @@ class SegmentedCorpusStore:
                 rows.append(int(off[i]) + loc[1])
         rows.sort()
         return np.asarray(rows, dtype=np.int64)
+
+    def score_bias_arrays(
+        self,
+        ids: np.ndarray,
+        values: np.ndarray,
+        segments: Optional[Sequence[CorpusSegment]] = None,
+    ) -> Tuple[List[Optional[np.ndarray]], int]:
+        """Sparse per-id score values -> dense per-segment (n,) float32
+        additive-bias arrays aligned with ``segments`` — the hybrid
+        lexical leg's ``score_bias`` input for the segmented drivers.
+
+        The scatter resolves through the id index (O(len(ids)), like
+        :meth:`locate_rows`), never a corpus scan.  Segments holding no
+        scored id stay None (zero bias, nothing allocated).  Non-strict:
+        unknown / tombstoned / out-of-snapshot ids are dropped — the
+        second return is how many ids actually landed.
+        """
+        with self.lock:
+            if segments is None:
+                segments = list(self.segments)
+            seg_index = {id(s): i for i, s in enumerate(segments)}
+            arrays: List[Optional[np.ndarray]] = [None] * len(segments)
+            matched = 0
+            for cid, val in zip(np.asarray(ids, dtype=np.int64),
+                                np.asarray(values, dtype=np.float32)):
+                loc = self._loc.get(int(cid))
+                if loc is None:
+                    continue
+                i = seg_index.get(id(loc[0]))
+                if i is None:
+                    continue
+                if arrays[i] is None:
+                    arrays[i] = np.zeros(segments[i].n_rows, np.float32)
+                arrays[i][loc[1]] = val
+                matched += 1
+        return arrays, matched

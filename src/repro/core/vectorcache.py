@@ -37,7 +37,9 @@ import numpy as np
 from repro.core import grammar
 from repro.core import modulations as M
 from repro.core.backends import (ExecutionBackend, PrefilterRouter,
-                                 finalize_segment_candidates, get_backend,
+                                 finalize_fusion,
+                                 finalize_segment_candidates, fusion_bias_arrays,
+                                 get_backend,
                                  FusedCounters, score_select_prefiltered,
                                  score_select_segments)
 from repro.core.segments import SegmentedCorpusStore
@@ -65,6 +67,7 @@ class VectorCache:
         normalized: bool = False,
         store: Optional[SegmentedCorpusStore] = None,
         prefilter: Optional[PrefilterRouter] = None,
+        lexical_fn: Optional[grammar.LexicalFn] = None,
     ) -> None:
         if store is not None:
             if matrix is not None or len(ids):
@@ -82,6 +85,10 @@ class VectorCache:
             self.store = SegmentedCorpusStore(dim=matrix.shape[1])
             self.store.append(ids, matrix, timestamps, normalized=normalized)
         self.embed_fn = embed_fn
+        # keyword: resolver for hybrid fusion — (text, pool) -> (ids,
+        # minmax bm25 scores).  RetrievalService wires an FTS5-backed one;
+        # None makes keyword: queries raise an explicit GrammarError.
+        self.lexical_fn = lexical_fn
         # Phase-1 filtered retrieval: the selectivity-aware router (shared
         # with the batched engine, so direct and batched filtered queries
         # route — and count — identically)
@@ -216,6 +223,7 @@ class VectorCache:
         now: Optional[float] = None,
         engine: Engine = "reference",
         embed_fn: Optional[grammar.EmbedFn] = None,
+        lexical_fn: Optional[grammar.LexicalFn] = None,
     ) -> List[Tuple[int, float]]:
         """Run Phase 2: parse tokens, score candidates, select top-pool.
 
@@ -227,17 +235,20 @@ class VectorCache:
         embedder = embed_fn or self.embed_fn
         if embedder is None:
             raise ValueError("VectorCache.search requires an embed function")
-        plan = grammar.parse(tokens, embedder, self.embeddings_for_ids)
+        plan = grammar.parse(tokens, embedder, self.embeddings_for_ids,
+                             lexical_fn or self.lexical_fn)
         return self.search_plan(plan, candidate_ids, now=now, engine=engine)
 
     def search_full(
         self,
-        tokens: str,
+        tokens: Optional[str] = None,
         candidate_ids: Optional[Sequence[int]] = None,
         *,
         now: Optional[float] = None,
         engine: Engine = "reference",
         base_search=None,
+        lexical_fn: Optional[grammar.LexicalFn] = None,
+        plan: Optional[M.ModulationPlan] = None,
     ):
         """Like :meth:`search` but also computes the §3.2 STRUCTURAL
         operators (`cluster:K`, `central`) over the selected candidates.
@@ -246,11 +257,20 @@ class VectorCache:
         ``base_search(plan, k)``, when given, produces the base ranking in
         place of :meth:`search_plan` — the materializer uses it to route
         queries through the async batched engine so SQL-surface traffic
-        micro-batches and pipelines with everything else.
+        micro-batches and pipelines with everything else.  ``plan`` skips
+        parsing entirely (the HYBRID_SEARCH / VECTOR_SEARCH pseudo-calls
+        build their plans directly); ``lexical_fn`` overrides the cache's
+        keyword resolver (the materializer injects its FTS5-backed one).
         """
-        if self.embed_fn is None:
-            raise ValueError("VectorCache.search_full requires an embed function")
-        plan = grammar.parse(tokens, self.embed_fn, self.embeddings_for_ids)
+        if plan is None:
+            if tokens is None:
+                raise ValueError("search_full requires tokens or a plan")
+            if self.embed_fn is None:
+                raise ValueError(
+                    "VectorCache.search_full requires an embed function")
+            plan = grammar.parse(tokens, self.embed_fn,
+                                 self.embeddings_for_ids,
+                                 lexical_fn or self.lexical_fn)
         if base_search is not None:
             base = base_search(plan, plan.pool)
         else:
@@ -314,13 +334,16 @@ class VectorCache:
                         and not self.store.has_timestamps):
                     raise ValueError("decay: requires timestamps in the cache")
                 k = min(plan.pool, n_live)
+                bias = fusion_bias_arrays(self.store, segs, [plan])
                 selected = score_select_prefiltered(
                     backend, self.store, segs, [plan], [k], candidate_ids,
-                    now=ref, router=self.prefilter, counters=self.fused)
+                    now=ref, router=self.prefilter, counters=self.fused,
+                    score_bias=bias)
             (results,) = finalize_segment_candidates(
                 segs, [plan], [k], selected,
                 mmr_done=backend.device_mmr, counters=self.fused)
-            return results
+            return finalize_fusion(plan, results, k, store=self.store,
+                                   candidate_ids=candidate_ids)
 
         # Full corpus: the two-stage segmented pipeline.  The DEVICE PASS
         # (score_select_segments) runs under the store lock so ingest /
@@ -334,9 +357,11 @@ class VectorCache:
                 raise ValueError("decay: requires timestamps in the cache")
             n_live = self.store.n_live
             k = min(plan.pool, n_live)
+            bias = fusion_bias_arrays(self.store, segs, [plan])
             selected = score_select_segments(
-                backend, segs, [plan], [k], now=ref, counters=self.fused)
+                backend, segs, [plan], [k], now=ref, counters=self.fused,
+                score_bias=bias)
         (results,) = finalize_segment_candidates(
             segs, [plan], [k], selected, mmr_done=backend.device_mmr,
             counters=self.fused)
-        return results
+        return finalize_fusion(plan, results, k, store=self.store)

@@ -80,7 +80,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.backends import (ExecutionBackend,
-                                 finalize_segment_candidates, get_backend,
+                                 finalize_fusion,
+                                 finalize_segment_candidates,
+                                 fusion_bias_arrays, get_backend,
                                  score_select_filter_panel,
                                  score_select_prefiltered,
                                  score_select_segments)
@@ -383,7 +385,8 @@ class BatchedRetrievalEngine:
 
     def _parse(self, req: Request):
         plan = parse(req.tokens, self.cache.embed_fn,
-                     self.cache.embeddings_for_ids)
+                     self.cache.embeddings_for_ids,
+                     self.cache.lexical_fn)
         self._validate(plan)
         return plan
 
@@ -561,8 +564,16 @@ class BatchedRetrievalEngine:
             with store.lock:
                 segs = store.segments
                 n_live = store.n_live
-                ks = [min(req.k if req.k is not None else req.plan.pool,
-                          n_live) for req in live]
+                ks = []
+                for req in live:
+                    k_req = req.k if req.k is not None else req.plan.pool
+                    f = req.plan.fusion
+                    if f is not None and f.mode == "rrf":
+                        # rrf fuses on host over the POOL-width vector
+                        # ranking (parity with the direct path); the tail
+                        # truncates back to the request's k afterwards
+                        k_req = max(k_req, req.plan.pool)
+                    ks.append(min(k_req, n_live))
                 # group by Phase-1 filter: unfiltered requests share one
                 # segment pass; each distinct candidate set shares one
                 # routed (masked-device / gather-host) pass — identical
@@ -586,21 +597,26 @@ class BatchedRetrievalEngine:
                     selected = score_select_filter_panel(
                         self.backend, store, segs, plans, ks,
                         [req.candidate_ids for req in live], now=ref,
-                        router=router, counters=counters)
+                        router=router, counters=counters,
+                        score_bias=fusion_bias_arrays(store, segs, plans))
                 else:
                     for key, idxs in groups.items():
                         g_plans = [plans[j] for j in idxs]
                         g_ks = [ks[j] for j in idxs]
+                        # hybrid requests ride the batch as a sparse
+                        # additive score panel (None when the group has
+                        # no weighted-fusion plans — the common case)
+                        g_bias = fusion_bias_arrays(store, segs, g_plans)
                         if key is None:
                             sel = score_select_segments(
                                 self.backend, segs, g_plans, g_ks, now=ref,
-                                counters=counters)
+                                counters=counters, score_bias=g_bias)
                         else:
                             sel = score_select_prefiltered(
                                 self.backend, store, segs, g_plans, g_ks,
                                 live[idxs[0]].candidate_ids, now=ref,
                                 router=router, weight=len(idxs),
-                                counters=counters)
+                                counters=counters, score_bias=g_bias)
                         for j, s in zip(idxs, sel):
                             selected[j] = s
         except Exception as e:  # backend failure: fail the whole batch loudly
@@ -631,6 +647,14 @@ class BatchedRetrievalEngine:
                 (results,) = finalize_segment_candidates(
                     work.segments, [plan], [k], [sel],
                     mmr_done=work.mmr_done, counters=self.cache.fused)
+                # fuse:rrf finishes on host (rank fusion is not a linear
+                # bias); weighted fusion already happened on device
+                results = finalize_fusion(
+                    plan, results, k, store=self.cache.store,
+                    candidate_ids=req.candidate_ids)
+                if req.k is not None:
+                    # rrf requests score at pool width; hand back k
+                    results = results[:req.k]
                 done.append((req, results, None))
             except Exception as e:
                 done.append((req, None, e))

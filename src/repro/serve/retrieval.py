@@ -68,7 +68,10 @@ class RetrievalService:
         self.conn = conn
         self.embedder = embedder or HashEmbedder(dim)
         ids, matrix, ts = load_embedding_matrix(conn, dim)
-        self.cache = VectorCache(ids, matrix, ts, self.embedder)
+        # the FTS5/BM25 resolver behind every keyword:/fuse: plan built
+        # through this service — shares the materializer's quoting fallback
+        self.cache = VectorCache(ids, matrix, ts, self.embedder,
+                                 lexical_fn=self._lexical_scores)
         self.now = now
         # one registry resolve for the service lifetime; every Materializer
         # this service builds shares the same backend instance — including
@@ -80,8 +83,13 @@ class RetrievalService:
         self._serving = None  # lazy BatchedRetrievalEngine (see serving())
         self._serving_lock = threading.Lock()
 
-    def flex_search(self, query: str) -> SearchResult:
-        """SQL or @preset -> rows. The agent's single endpoint."""
+    def flex_search(self, query: str, params: Sequence = ()) -> SearchResult:
+        """SQL or @preset -> rows. The agent's single endpoint.
+
+        ``params`` are standard SQLite positional bind parameters for the
+        (rewritten) statement — same contract as ``Materializer.execute``,
+        so parameterized SQL no longer needs a hand-built Materializer.
+        """
         t0 = time.time()
         self.query_count += 1
         try:
@@ -96,7 +104,7 @@ class RetrievalService:
                                     latency_ms=(time.time() - t0) * 1e3)
             mz = Materializer(self.conn, self.cache, now=self.now,
                               engine=self.engine, serving=self._serving)
-            cols, rows = mz.execute(query)
+            cols, rows = mz.execute(query, params)
             return SearchResult(True, cols, rows,
                                 latency_ms=(time.time() - t0) * 1e3)
         except (MaterializeError, sqlite3.Error, KeyError) as e:
@@ -104,6 +112,45 @@ class RetrievalService:
             self.error_count += 1
             return SearchResult(False, error=f"{type(e).__name__}: {e}",
                                 latency_ms=(time.time() - t0) * 1e3)
+
+    def search(
+        self,
+        tokens: str,
+        k: Optional[int] = 10,
+        *,
+        priority: int = 0,
+        deadline_ms: Optional[float] = None,
+        candidate_ids: Optional[Sequence[int]] = None,
+    ) -> List[Tuple[int, float]]:
+        """Synchronous token search — the blocking mirror of
+        :meth:`search_async` (same signature minus ``await``).  Routes
+        through the attached batched engine when :meth:`serving` has been
+        called (priorities/deadlines/batching apply); otherwise runs the
+        direct VectorCache path, where ``priority``/``deadline_ms`` have
+        no queue to act on and are accepted for signature parity.
+        """
+        if self._serving is not None:
+            return self._serving.search(
+                tokens, k, priority=priority, deadline_ms=deadline_ms,
+                candidate_ids=candidate_ids)
+        results = self.cache.search(
+            tokens, candidate_ids=candidate_ids, now=self.now,
+            engine=self.engine)
+        return results if k is None else results[:k]
+
+    def _lexical_scores(self, term: str, limit: int) -> Tuple[np.ndarray, np.ndarray]:
+        """``grammar.LexicalFn`` over this service's FTS5 table: keyword
+        text + pool width -> (ids desc-by-bm25, min-max scores)."""
+        from repro.core.materializer import fts_query
+
+        rows = fts_query(self.conn, term, limit=limit)
+        if not rows:
+            return (np.empty(0, dtype=np.int64),
+                    np.empty(0, dtype=np.float32))
+        ids = np.asarray([r[0] for r in rows], dtype=np.int64)
+        from repro.core import modulations as M
+        return ids, M.minmax_normalize(
+            np.asarray([r[1] for r in rows], np.float32))
 
     # -- async serving surface ----------------------------------------------
 

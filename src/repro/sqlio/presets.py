@@ -38,11 +38,17 @@ FROM sqlite_master m, pragma_table_info(m.name) p
 WHERE m.type = 'view'
 GROUP BY m.name
 UNION ALL
-SELECT 'table_function', 'vec_ops', 'id, score',
-       'Semantic retrieval -- use after FROM/JOIN.'
+SELECT 'table_function', 'vec_ops', 'id, score, snippet',
+       'Semantic retrieval with token grammar -- use after FROM/JOIN.'
 UNION ALL
-SELECT 'table_function', 'keyword', 'id, rank, snippet',
-       'FTS5 keyword search.'
+SELECT 'table_function', 'keyword', 'id, score, snippet',
+       'FTS5 keyword search (scores min-max normalized).'
+UNION ALL
+SELECT 'table_function', 'hybrid_search', 'id, score, snippet',
+       'HYBRID_SEARCH(''query''[, weight]) -- weight*vector + (1-weight)*bm25, fused on device.'
+UNION ALL
+SELECT 'table_function', 'vector_search', 'id, score, snippet',
+       'VECTOR_SEARCH(''query'') -- pure-vector baseline (plain text, no grammar).'
 ORDER BY kind, name;
 
 -- @query: presets

@@ -215,6 +215,42 @@ def test_diverse_and_panel_sections_gated_and_drop_fails():
     assert all("dropped" in f for f in failures)
 
 
+def test_hybrid_section_gated_and_drop_fails():
+    """The hybrid lexical+vector fusion scenario gates under the same
+    rules: a hybrid-path regression past tolerance fails, the off-TPU
+    pallas skip is tolerated when recorded, and dropping the whole
+    section is section-level silent omission."""
+    base = _snap({"jit-jax": _row(30.0)})
+    base["hybrid_backends"] = {"jit-jax": _row(12.0),
+                               "pallas": {"skipped": "requires TPU"}}
+    ok = _snap({"jit-jax": _row(30.0)})
+    ok["hybrid_backends"] = {"jit-jax": _row(14.0),
+                             "pallas": {"skipped": "requires TPU"}}
+    failures, notes = compare_all(ok, base, DEFAULT_TOL)
+    assert failures == []
+    assert any(n.startswith("hybrid_backends/") for n in notes)
+    # a fusion bias that stops riding the fused device pass gates
+    bad = _snap({"jit-jax": _row(30.0)})
+    bad["hybrid_backends"] = {"jit-jax": _row(40.0),
+                              "pallas": {"skipped": "requires TPU"}}
+    failures, _ = compare_all(bad, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "hybrid_backends/jit-jax" in failures[0]
+    dropped = _snap({"jit-jax": _row(30.0)})
+    failures, _ = compare_all(dropped, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "hybrid_backends" in failures[0] and "dropped" in failures[0]
+
+
+def test_merge_min_folds_hybrid_section():
+    a = _snap({"jit-jax": _row(30.0)})
+    a["hybrid_backends"] = {"jit-jax": _row(13.0)}
+    b = _snap({"jit-jax": _row(29.0)})
+    b["hybrid_backends"] = {"jit-jax": _row(11.0)}
+    merged = merge_min([a, b])
+    assert merged["hybrid_backends"]["jit-jax"]["total_ms"] == 11.0
+
+
 def test_merge_min_folds_diverse_and_panel_sections():
     a = _snap({"jit-jax": _row(30.0)})
     a["diverse_backends"] = {"jit-jax": _row(19.0)}

@@ -1,0 +1,361 @@
+"""Hybrid lexical+vector retrieval as a PEM modulation (the fusion stage).
+
+Invariants pinned here:
+
+1. **w=1.0 bit-identity** — ``fuse:weighted,1.0`` produces EXACTLY the
+   unfused ranking (ids and float scores) on all five backends, for every
+   segmentation × tombstone combination: the weight folds through the
+   linear pipeline and every scale application is guarded, so no multiply
+   ever happens.
+2. **Weighted oracle** — ``fuse:weighted,w`` matches the host oracle
+   ``w*modulated + (1-w)*minmax(bm25)[sparse]`` on all five backends.
+3. **RRF** — ``fuse:rrf,K`` matches ``modulations.rrf_fuse`` over the
+   pure-vector device ranking and the lexical list.
+4. **Grammar** — keyword:/fuse: parsing, multi-word accumulation,
+   malformed specs as explicit :class:`GrammarError`.
+5. **pool: threading** — the lexical resolver receives the plan's pool
+   width (no hardcoded LIMIT 500), through build_plan AND the FTS path.
+6. **Unified SQL contract** — ``keyword()``/``vec_ops()``/
+   ``HYBRID_SEARCH()``/``VECTOR_SEARCH()`` all materialize
+   ``(id, score, snippet)`` with min-max-normalized scores; FTS5
+   special-character fallback quoting holds on the hybrid path.
+7. **Serving parity** — the sync ``RetrievalService.search`` facade ranks
+   identically with and without the batched engine attached, hybrid
+   plans included.
+"""
+
+import sqlite3
+
+import numpy as np
+import pytest
+
+from repro.core import grammar
+from repro.core import modulations as M
+from repro.core.backends import (finalize_fusion, fusion_bias_arrays,
+                                 get_backend, list_backends,
+                                 plan_fusion_bias)
+from repro.core.grammar import GrammarError
+from repro.core.materializer import Materializer
+from repro.core.segments import SegmentedCorpusStore
+from repro.core.vectorcache import VectorCache
+from repro.data.corpus import build_database, generate_corpus
+from repro.embed import HashEmbedder
+
+BACKENDS = list_backends()
+NOW = 90 * 86400.0
+EMB = HashEmbedder(32)
+
+SEGMENTATIONS = ([230], [100, 130], [80, 80, 70])
+TOMBSTONES = ((), (3, 104, 171))
+
+
+def _corpus(n=230, d=32, seed=5):
+    rng = np.random.default_rng(seed)
+    mat = rng.standard_normal((n, d)).astype(np.float32)
+    mat /= np.linalg.norm(mat, axis=1, keepdims=True)
+    days = rng.uniform(0.0, 60.0, n).astype(np.float32)
+    ts = NOW - days.astype(np.float64) * 86400.0
+    return mat, ts
+
+
+def _store_from_splits(mat, ts, splits, deleted=()):
+    store = SegmentedCorpusStore(dim=mat.shape[1])
+    start = 0
+    for size in splits:
+        store.append(np.arange(start, start + size), mat[start:start + size],
+                     ts[start:start + size], normalized=True)
+        start += size
+    assert start == mat.shape[0]
+    if len(deleted):
+        store.delete(deleted)
+    return store
+
+
+def _stub_lexical(ids, scores):
+    """A LexicalFn returning fixed BM25-style hits (already minmaxed)."""
+    def fn(text, pool):
+        return (np.asarray(ids[:pool], dtype=np.int64),
+                np.asarray(scores[:pool], dtype=np.float32))
+    return fn
+
+
+LEX_IDS = [7, 12, 55, 102, 168, 229, 3]  # 3 is tombstoned in one combo
+LEX_SCORES = [1.0, 0.9, 0.7, 0.5, 0.3, 0.2, 0.1]
+LEXICAL = _stub_lexical(LEX_IDS, LEX_SCORES)
+
+TOKENS = ("similar:how the retrieval system works decay:14 "
+          "suppress:website landing page pool:40")
+
+
+# -- 1. w=1.0 bit-identity ---------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", BACKENDS)
+@pytest.mark.parametrize("splits", SEGMENTATIONS,
+                         ids=["mono", "two", "three"])
+@pytest.mark.parametrize("deleted", TOMBSTONES, ids=["live", "tombs"])
+def test_weighted_one_bit_identical(engine, splits, deleted):
+    mat, ts = _corpus()
+    store = _store_from_splits(mat, ts, splits, deleted)
+    vc = VectorCache(store=store, embed_fn=EMB, lexical_fn=LEXICAL)
+    base = vc.search(TOKENS, now=NOW, engine=engine)
+    fused = vc.search(TOKENS + " keyword:server fuse:weighted,1.0",
+                      now=NOW, engine=engine)
+    assert [i for i, _ in base] == [i for i, _ in fused]
+    # bit-identical scores, not merely close: w=1.0 performs no multiply
+    assert [s for _, s in base] == [s for _, s in fused]
+
+
+def test_weighted_one_plan_contributes_no_bias():
+    plan = grammar.parse(TOKENS + " keyword:x fuse:weighted,1.0",
+                         EMB, lexical_fn=LEXICAL)
+    assert plan.fusion is not None
+    assert plan_fusion_bias(plan) is None  # the bit-identity guard
+    mat, ts = _corpus()
+    store = _store_from_splits(mat, ts, [230])
+    assert fusion_bias_arrays(store, store.segments, [plan]) is None
+
+
+# -- 2. weighted oracle on all backends --------------------------------------
+
+
+@pytest.mark.parametrize("engine", BACKENDS)
+def test_weighted_matches_host_oracle(engine):
+    w = 0.6
+    mat, ts = _corpus()
+    store = _store_from_splits(mat, ts, [100, 130], deleted=(3, 104))
+    vc = VectorCache(store=store, embed_fn=EMB, lexical_fn=LEXICAL)
+    got = vc.search(TOKENS + f" keyword:server fuse:weighted,{w}",
+                    now=NOW, engine=engine)
+
+    # host oracle: w*modulated + (1-w)*minmax(bm25) at lexical rows
+    plan = grammar.parse(TOKENS, EMB)
+    days_ago = (NOW - ts) / 86400.0
+    scores = M.modulate_scores(mat, days_ago, plan) * w
+    for cid, s in zip(LEX_IDS, LEX_SCORES):
+        scores[cid] += (1.0 - w) * s
+    scores[[3, 104]] = -np.inf  # tombstones stay masked
+    order = np.argsort(-scores, kind="stable")[:40]
+    want = [(int(i), float(scores[i])) for i in order]
+
+    assert [i for i, _ in got] == [i for i, _ in want]
+    np.testing.assert_allclose([s for _, s in got], [s for _, s in want],
+                               rtol=2e-5, atol=1e-6)
+
+
+def test_weighted_bias_reranks_lexical_rows_upward():
+    mat, ts = _corpus()
+    store = _store_from_splits(mat, ts, [230])
+    vc = VectorCache(store=store, embed_fn=EMB, lexical_fn=LEXICAL)
+    base = dict(vc.search(TOKENS, now=NOW))
+    fused = dict(vc.search(TOKENS + " keyword:server fuse:weighted,0.5",
+                           now=NOW))
+    for cid in LEX_IDS:
+        if cid in base and cid in fused:
+            assert fused[cid] > base[cid] * 0.5 - 1e-6
+
+
+# -- 3. rrf ------------------------------------------------------------------
+
+
+def test_rrf_matches_manual_fusion():
+    mat, ts = _corpus()
+    store = _store_from_splits(mat, ts, [100, 130], deleted=(3,))
+    vc = VectorCache(store=store, embed_fn=EMB, lexical_fn=LEXICAL)
+    got = vc.search(TOKENS + " keyword:server fuse:rrf,30", now=NOW)
+
+    vec = vc.search(TOKENS, now=NOW)
+    lex = [i for i in LEX_IDS if i in store]  # tombstoned id 3 drops
+    want = M.rrf_fuse([i for i, _ in vec], lex, rrf_k=30)[:40]
+    assert [i for i, _ in got] == [i for i, _ in want]
+    np.testing.assert_allclose([s for _, s in got], [s for _, s in want])
+
+
+def test_rrf_respects_candidate_filter():
+    mat, ts = _corpus()
+    store = _store_from_splits(mat, ts, [230])
+    vc = VectorCache(store=store, embed_fn=EMB, lexical_fn=LEXICAL)
+    cands = list(range(0, 230, 2))  # even ids only
+    got = vc.search(TOKENS + " keyword:server fuse:rrf", cands, now=NOW)
+    assert got and all(i % 2 == 0 for i, _ in got)  # odd lexical ids clipped
+
+
+# -- 4. grammar --------------------------------------------------------------
+
+
+def test_keyword_multiword_accumulation():
+    p = grammar.tokenize("keyword:server lifecycle keyword:restart similar:x")
+    assert p.keyword == "server lifecycle restart"
+    assert p.fuse_mode == "weighted"  # keyword: alone defaults to weighted
+
+
+def test_keyword_is_a_valid_query_anchor():
+    p = grammar.tokenize("keyword:server")
+    assert p.similar is None and p.keyword == "server"
+    plan = grammar.build_plan(p, EMB, lexical_fn=LEXICAL)
+    assert plan.fusion is not None and plan.lexical.ids.size > 0
+    assert not plan.query.any()  # zero base query vector
+
+
+def test_fuse_weight_parsing_and_validation():
+    assert grammar.tokenize("keyword:x fuse:weighted,0.25").fuse_weight == 0.25
+    assert grammar.tokenize("keyword:x fuse:rrf,17").fuse_k == 17
+    for bad in ("fuse:weighted,1.5", "fuse:weighted,nope", "fuse:rrf,0",
+                "fuse:median", "fuse:weighted,0.5,9"):
+        with pytest.raises(GrammarError):
+            grammar.tokenize(f"keyword:x {bad}")
+
+
+def test_fuse_without_keyword_is_explicit_error():
+    with pytest.raises(GrammarError):
+        grammar.tokenize("similar:x fuse:weighted,0.5")
+
+
+def test_rrf_with_diverse_is_explicit_error():
+    with pytest.raises(GrammarError):
+        grammar.tokenize("similar:x keyword:y fuse:rrf diverse")
+
+
+def test_keyword_without_resolver_is_explicit_error():
+    with pytest.raises(GrammarError):
+        grammar.parse("similar:x keyword:y", EMB)  # no lexical_fn anywhere
+
+
+# -- 5. pool: threading ------------------------------------------------------
+
+
+def test_lexical_fn_receives_pool_width():
+    seen = {}
+
+    def spy(text, pool):
+        seen["text"], seen["pool"] = text, pool
+        return np.asarray([1], np.int64), np.asarray([1.0], np.float32)
+
+    grammar.parse("similar:x keyword:server restart pool:700", EMB,
+                  lexical_fn=spy)
+    assert seen == {"text": "server restart", "pool": 700}
+
+
+# -- 6. SQL surface ----------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def db():
+    emb = HashEmbedder(64)
+    chunks = generate_corpus(n_chunks=600, n_sessions=30, seed=7)
+    conn = sqlite3.connect(":memory:", check_same_thread=False)
+    build_database(conn, chunks, emb)
+    return conn, emb
+
+
+@pytest.fixture(scope="module")
+def svc(db):
+    from repro.serve.retrieval import RetrievalService
+
+    conn, emb = db
+    service = RetrievalService(conn, dim=64, embedder=emb,
+                               now=1_770_000_000.0)
+    yield service
+    service.close()
+
+
+def test_unified_result_contract(svc):
+    for sql in (
+        "SELECT id, score, snippet FROM keyword('server') LIMIT 5",
+        "SELECT id, score, snippet FROM vec_ops('similar:server') LIMIT 5",
+        "SELECT id, score, snippet FROM HYBRID_SEARCH('server') LIMIT 5",
+        "SELECT id, score, snippet FROM VECTOR_SEARCH('server') LIMIT 5",
+    ):
+        res = svc.flex_search(sql)
+        assert res.ok, (sql, res.error)
+        assert res.columns == ["id", "score", "snippet"]
+        assert res.rows and all(0.0 <= r[1] <= 1.0 for r in res.rows)
+        assert all(r[2] for r in res.rows)  # snippet populated
+
+
+def test_hybrid_search_sql_is_case_insensitive(svc):
+    up = svc.flex_search(
+        "SELECT id FROM HYBRID_SEARCH('server restart', 0.6) "
+        "ORDER BY score DESC LIMIT 5")
+    low = svc.flex_search(
+        "SELECT id FROM hybrid_search('server restart', 0.6) "
+        "ORDER BY score DESC LIMIT 5")
+    assert up.ok and low.ok and up.rows == low.rows
+
+
+def test_hybrid_search_weight_validation(svc):
+    assert not svc.flex_search(
+        "SELECT id FROM HYBRID_SEARCH('x', 1.5)").ok
+    assert not svc.flex_search(
+        "SELECT id FROM HYBRID_SEARCH('x', 'not_a_number')").ok
+
+
+def test_hybrid_search_differs_from_both_pure_modes(svc):
+    hyb = svc.flex_search("SELECT id FROM HYBRID_SEARCH('server restart', 0.5) "
+                          "ORDER BY score DESC LIMIT 10")
+    vec = svc.flex_search("SELECT id FROM VECTOR_SEARCH('server restart') "
+                          "ORDER BY score DESC LIMIT 10")
+    kw = svc.flex_search("SELECT id FROM keyword('server restart') "
+                         "ORDER BY score DESC LIMIT 10")
+    assert hyb.ok and vec.ok and kw.ok
+    assert hyb.rows != vec.rows and hyb.rows != kw.rows
+
+
+def test_fts_special_chars_through_hybrid_path(svc):
+    # dots break FTS5 syntax -> fallback quoting must hold on the hybrid leg
+    res = svc.flex_search(
+        "SELECT id FROM HYBRID_SEARCH('server.lifecycle') LIMIT 5")
+    assert res.ok, res.error
+
+
+def test_fts_query_honors_limit(db):
+    from repro.core.materializer import fts_query
+
+    conn, _ = db
+    assert len(fts_query(conn, "server", limit=3)) == 3
+    assert len(fts_query(conn, "server", limit=50)) > 3
+
+
+def test_grammar_hybrid_through_vec_ops_sql(svc):
+    res = svc.flex_search(
+        "SELECT id, score FROM vec_ops("
+        "'similar:server lifecycle keyword:restart fuse:weighted,0.7 pool:30')"
+        " ORDER BY score DESC")
+    assert res.ok, res.error
+    assert 0 < len(res.rows) <= 30
+
+
+# -- 7. serving parity -------------------------------------------------------
+
+
+def test_sync_facade_with_and_without_serving(db):
+    from repro.serve.retrieval import RetrievalService
+
+    conn, emb = db
+    service = RetrievalService(conn, dim=64, embedder=emb,
+                               now=1_770_000_000.0)
+    try:
+        tokens = "similar:server lifecycle keyword:restart fuse:weighted,0.6"
+        direct = service.search(tokens, k=8)
+        assert len(direct) == 8
+        service.serving(max_batch=8)  # attach the batched engine
+        batched = service.search(tokens, k=8, priority=1)
+        assert [i for i, _ in direct] == [i for i, _ in batched]
+        np.testing.assert_allclose([s for _, s in direct],
+                                   [s for _, s in batched], rtol=2e-5)
+        # rrf plans finish on host inside the engine's tail
+        rrf_direct = service.cache.search(
+            "similar:server keyword:restart fuse:rrf,30",
+            now=service.now, engine=service.engine)[:8]
+        rrf_batched = service.search(
+            "similar:server keyword:restart fuse:rrf,30", k=8)
+        assert [i for i, _ in rrf_direct] == [i for i, _ in rrf_batched]
+    finally:
+        service.close()
+
+
+def test_finalize_fusion_noop_for_weighted():
+    plan = grammar.parse("similar:x keyword:y fuse:weighted,0.5", EMB,
+                         lexical_fn=LEXICAL)
+    results = [(1, 0.5), (2, 0.25)]
+    assert finalize_fusion(plan, results, 2) is results

@@ -106,11 +106,14 @@ def test_empty_prefilter_returns_empty_not_crash(db):
 
 def test_keyword_and_hybrid(db):
     mz = _mz(db)
-    _, rows = mz.execute("SELECT k.id, k.rank, k.snippet FROM keyword('server') k "
-                         "ORDER BY k.rank DESC LIMIT 5")
-    assert rows and all(r[1] > 0 for r in rows)   # rank positive, higher=better
+    _, rows = mz.execute("SELECT k.id, k.score, k.snippet FROM keyword('server') k "
+                         "ORDER BY k.score DESC LIMIT 5")
+    # unified contract: min-max normalized scores, higher = better
+    assert rows and all(0.0 <= r[1] <= 1.0 for r in rows)
+    assert rows[0][1] == 1.0
+    assert all(r[2] for r in rows)  # snippet populated
     _, hybrid = mz.execute(
-        "SELECT k.id, k.rank, v.score FROM keyword('server') k "
+        "SELECT k.id, k.score, v.score FROM keyword('server') k "
         "JOIN vec_ops('similar:server lifecycle') v ON k.id = v.id "
         "ORDER BY v.score DESC LIMIT 5"
     )

@@ -103,9 +103,11 @@ def test_structural_composes_with_modulations(db):
     assert len(rows) == 30
 
 
-def test_plain_vec_ops_unchanged(db):
+def test_plain_vec_ops_unified_contract(db):
+    """Without structural tokens, vec_ops carries exactly the unified
+    result contract (id, score, snippet) — no cluster/central columns."""
     conn, cache = db
     mz = Materializer(conn, cache, now=1_770_000_000.0)
     cols, rows = mz.execute(
         "SELECT * FROM vec_ops('similar:server pool:5') v")
-    assert cols == ["id", "score"]
+    assert cols == ["id", "score", "snippet"]
