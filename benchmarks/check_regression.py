@@ -22,10 +22,13 @@ selectivities, so a mis-tuned router or a slowed masked path both
 gate), the ``diverse_backends`` section (the fully-fused in-graph
 device-MMR lambda sweep), the ``filter_panel`` section (the
 heterogeneous-filter (N, B) mask-panel cohort vs per-filter serial
-dispatch) and the ``hybrid_backends`` section (the dual-leg
+dispatch), the ``hybrid_backends`` section (the dual-leg
 lexical+vector fusion query; ``total_ms`` is the hybrid device path, so
 a fusion bias that stops riding the fused pass and falls back to a
-second retrieval gates) — is
+second retrieval gates) and the ``scale_1m`` section (the cross-process
+shard-group corpus pass — rows keyed by scoring mode, always present at
+the smoke scale so dropping or regressing the sharded path gates even
+when CI cannot afford the full million-chunk corpus) — is
 compared against the committed ``BENCH_pem.smoke.json`` baseline; the gate
 fails on a > ``FLEX_BENCH_TOL`` (default 1.5) ratio for ANY backend that
 is not recorded as skipped in the baseline.  A backend present in the
@@ -126,7 +129,7 @@ def compare_all(
     notes: List[str] = []
     for section in ("backends", "delta_backends", "serve_throughput",
                     "prefilter_backends", "diverse_backends",
-                    "filter_panel", "hybrid_backends"):
+                    "filter_panel", "hybrid_backends", "scale_1m"):
         if section not in baseline:
             continue
         if section != "backends" and section not in new:
@@ -147,7 +150,7 @@ def merge_min(snapshots: List[Dict]) -> Dict:
     merged: Dict = dict(snapshots[0])
     for section in ("backends", "delta_backends", "serve_throughput",
                     "prefilter_backends", "diverse_backends",
-                    "filter_panel", "hybrid_backends"):
+                    "filter_panel", "hybrid_backends", "scale_1m"):
         backends: Dict[str, Dict] = {}
         for snap in snapshots:
             for name, row in snap.get(section, {}).items():

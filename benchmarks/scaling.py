@@ -3,7 +3,11 @@
 Larger corpora are constructed by combining embedding matrices (the paper
 does exactly this: 'constructed larger corpora by combining embeddings from
 multiple production datasets'). Reports base matmul, full Phase-2 pipeline
-(scoring + 3 mods + MMR), and the matrix's memory footprint.
+(scoring + 3 mods + MMR), and the matrix's memory footprint — plus, per
+size, the cross-process shard-group pass (``table4/sharded_*``: the
+``ProcessGroup`` blocked single-stream ``f32b`` fan-out the ``scale_1m``
+snapshot scenario gates), so the monolith-vs-sharded crossover is
+readable off one sweep.
 """
 
 from __future__ import annotations
@@ -45,3 +49,20 @@ def run() -> None:
         mem_mb = matrix.nbytes / 1e6
         emit(f"table4/matmul_{target}", t_mm, f"n={target}")
         emit(f"table4/full_{target}", t_full, f"n={target} mem={mem_mb:.0f}MB")
+
+        # the sharded comparator: same rows dealt across a 4-shard
+        # ProcessGroup, blocked single-stream f32b per-shard scoring
+        # (the scale_1m headline path), timed on the same plan
+        from benchmarks.pem_snapshot import _scale1m_transport
+        from repro.dist.procgroup import ProcessGroup
+
+        n_aligned = target - target % (4 * 32)
+        with ProcessGroup.build(np.arange(n_aligned), matrix[:n_aligned],
+                                np.concatenate(tss)[:n_aligned],
+                                normalized=True, n_shards=4,
+                                transport=_scale1m_transport(),
+                                dtype="f32b") as group:
+            t_shard = timed(lambda: group.search_plan(plan, now=NOW),
+                            repeats=3)
+        emit(f"table4/sharded_{target}", t_shard,
+             f"n={n_aligned} shards=4 f32b vs mono={t_full*1e3:.1f}ms")

@@ -585,6 +585,48 @@ class _DeviceMMRMixin:
                  np.asarray([pool], np.int32))
         return np.asarray(sel)[0, :k].astype(np.int64)
 
+    def mmr_pool_segments_batch(self, segments, pools, ks, lams):
+        """One padded device call for a COHORT of merged diverse pools.
+
+        ``pools`` is a list of per-plan ``(gidx, vals)`` merged unions,
+        ``ks``/``lams`` the matching final counts and MMR lambdas.  Every
+        pool pads to the cohort's shared pow2 bucket and the whole (B,
+        bucket, d) stack runs through ONE cached ``_pool_mmr_fn``
+        executable — one device sync for the batch instead of one per
+        diverse plan.  Per-plan results are bit-identical to serial
+        :meth:`mmr_pool_segments` calls: the MMR trace is batched over
+        independent rows, and pow2 padding never changes a gram dot
+        product (the contraction dim is untouched).  Returns per-plan
+        selection-position arrays (empty for k == 0 pools).
+        """
+        import jax.numpy as jnp
+
+        sizes = [int(g.size) for g, _ in pools]
+        ks = [max(0, min(int(k), s)) for k, s in zip(ks, sizes)]
+        live = [j for j, (s, k) in enumerate(zip(sizes, ks)) if s and k]
+        out = [np.empty(0, np.int64)] * len(pools)
+        if not live:
+            return out
+        bucket = max(_pow2_bucket(max(sizes[j] for j in live)), 1)
+        k_stat = min(max(_pow2_bucket(max(ks[j] for j in live)), 1), bucket)
+        embs, rel = [], np.zeros((len(live), bucket), np.float32)
+        for row, j in enumerate(live):
+            gidx, vals = pools[j]
+            emb = self._gather_pool_device(segments,
+                                           np.asarray(gidx, np.int64))
+            if bucket != sizes[j]:
+                emb = jnp.pad(emb, ((0, bucket - sizes[j]), (0, 0)))
+            embs.append(emb)
+            rel[row, :sizes[j]] = vals
+        fn = self._pool_mmr_fn(bucket, k_stat)
+        sel = np.asarray(fn(
+            jnp.stack(embs), rel,
+            np.asarray([lams[j] for j in live], np.float32),
+            np.asarray([sizes[j] for j in live], np.int32)))
+        for row, j in enumerate(live):
+            out[j] = sel[row, :ks[j]].astype(np.int64)
+        return out
+
 
 # ---------------------------------------------------------------------------
 # The backend contract
@@ -986,6 +1028,13 @@ class PallasBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
                             interpret=jax.default_backend() != "tpu")
         return np.asarray(sel)[0].astype(np.int64)
 
+    def mmr_pool_segments_batch(self, segments, pools, ks, lams):
+        """The ``kernels/mmr`` pallas kernel takes a scalar lambda, so a
+        heterogeneous-lambda cohort falls back to one kernel launch per
+        plan (still zero host pool transfers)."""
+        return [self.mmr_pool_segments(segments, g, v, k, lam)
+                for (g, v), k, lam in zip(pools, ks, lams)]
+
 
 class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
     """shard_map row-sharded scoring over every locally visible device.
@@ -1035,7 +1084,8 @@ class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
-        from repro.dist.pem_sharded import union_merge_topk
+        from repro.dist.pem_sharded import (union_merge_topk,
+                                            union_merge_topk_payload)
 
         n_dev = len(jax.devices())
         mesh = jax.make_mesh((n_dev,), ("shards",))
@@ -1063,8 +1113,18 @@ class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
             k_local = min(structure.width, n_local)
             v, i = jax.lax.top_k(scores.T, k_local)      # (B, k_local)
             gi = i + shard * n_local                      # global row ids
+            if structure.mmr_k:
+                # shard-local MMR prefix: each shard gathers its OWN
+                # candidates' pool embeddings (an O(n_local) gather) and
+                # the payload merge ships them with the union — the MMR
+                # tail then never touches the replicated row space
+                pe = matrix[i]                            # (B, k_l, d)
+                return union_merge_topk_payload(v, gi, pe, ("shards",),
+                                                structure.width)
             return union_merge_topk(v, gi, ("shards",), structure.width)
 
+        out_specs = ((P(None, None), P(None, None), P(None, None, None))
+                     if structure.mmr_k else (P(None, None), P(None, None)))
         inner = shard_map(
             local,
             mesh=mesh,
@@ -1072,24 +1132,30 @@ class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
                       P("shards"), P(None),
                       P("shards", None) if structure.panel else P("shards"),
                       P("shards", None) if structure.bias else P(None, None)),
-            out_specs=(P(None, None), P(None, None)),
+            out_specs=out_specs,
             check_rep=False,
         )
 
         def fused_select(matrix, q_pre, q_sup, days, half_lives, mask,
                          lams, pool_w, bias):
-            i, v = inner(matrix, q_pre, q_sup, days, half_lives, mask, bias)
             if structure.mmr_k:
-                # fused diverse tail OUTSIDE the shard_map: the merged
-                # (B, width) union is replicated, its pool gather reads
-                # the full row space, and only the final-k block leaves
-                # the device (see JitJaxBackend._build_select)
-                sel = _device_mmr_trace(matrix[i], v, lams, pool_w,
+                # fused diverse tail over the payload-merged pool: the
+                # merged (B, width, d) embeddings arrived with the union
+                # (shard-local gathers, O(shards*width*d) collective —
+                # independent of corpus size), bit-identical to the old
+                # replicated ``matrix[i]`` gather because the payload
+                # rode the exact top-k permutation the indices did
+                i, v, pe = inner(matrix, q_pre, q_sup, days, half_lives,
+                                 mask, bias)
+                sel = _device_mmr_trace(pe, v, lams, pool_w,
                                         structure.mmr_k)
                 i = jnp.take_along_axis(i, sel, axis=1)
                 v = jnp.take_along_axis(v, sel, axis=1)
                 keep = jnp.arange(structure.mmr_k)[None, :] < pool_w[:, None]
                 v = jnp.where(keep, v, -jnp.inf)
+            else:
+                i, v = inner(matrix, q_pre, q_sup, days, half_lives, mask,
+                             bias)
             return i, v
 
         return jax.jit(fused_select)
@@ -1208,11 +1274,25 @@ def get_backend(engine: Union[str, ExecutionBackend]) -> ExecutionBackend:
 
 
 def top_idx(scores: np.ndarray, k: int) -> np.ndarray:
-    """Indices of the top-k scores, sorted descending (argpartition+sort)."""
+    """Indices of the top-k scores, sorted descending (argpartition+sort).
+
+    Ties break toward the SMALLEST index — the same rule as
+    ``jax.lax.top_k`` and the stable merges built on top of this, so the
+    numpy and device backends agree bit-for-bit on tied scores and a
+    cross-shard merge keyed on global row order reproduces the
+    monolithic ranking exactly.  ``argpartition`` alone picks an
+    arbitrary member set when ties straddle the k boundary, so the
+    boundary value's members are re-resolved by index explicitly (two
+    extra O(n) scans, negligible next to the scoring matmul).
+    """
     if k >= scores.shape[0]:
         return np.argsort(-scores, kind="stable")
     part = np.argpartition(-scores, k)[:k]
-    return part[np.argsort(-scores[part], kind="stable")]
+    vstar = scores[part].min()  # the k-th largest value
+    strictly = np.flatnonzero(scores > vstar)
+    ties = np.flatnonzero(scores == vstar)
+    members = np.concatenate([strictly, ties[: k - strictly.size]])
+    return members[np.argsort(-scores[members], kind="stable")]
 
 
 def selection_width(plan: M.ModulationPlan, k: int, n: int) -> int:
@@ -1423,16 +1503,19 @@ def score_select_segments(
         # merged-pool fused diverse tail: the union-merged pool equals
         # the monolithic oversample pool, so device MMR over it (pool
         # embeddings gathered from the warm resident segment matrices)
-        # is exact — diverse plans leave here final-k, never as a pool
-        for j, (p, kf) in enumerate(zip(plans, ks_eff)):
-            if p.diverse is None:
-                continue
-            gidx, gv = merged[j]
-            if gidx.size == 0:
-                continue
-            sel = backend.mmr_pool_segments(
-                segments, gidx, gv, min(kf, int(gidx.size)), p.diverse.lam)
-            merged[j] = (gidx[sel], gv[sel])
+        # is exact — diverse plans leave here final-k, never as a pool.
+        # The whole diverse cohort pads into ONE batched device call
+        # (mmr_pool_segments_batch) instead of one sync per plan.
+        div = [j for j, p in enumerate(plans)
+               if p.diverse is not None and merged[j][0].size]
+        if div:
+            sels = backend.mmr_pool_segments_batch(
+                segments, [merged[j] for j in div],
+                [min(ks_eff[j], int(merged[j][0].size)) for j in div],
+                [plans[j].diverse.lam for j in div])
+            for j, sel in zip(div, sels):
+                gidx, gv = merged[j]
+                merged[j] = (gidx[sel], gv[sel])
             if counters is not None:
                 counters.device_mmr += 1
     return merged
@@ -1670,9 +1753,13 @@ def plan_fusion_bias(
     (1-w) * minmax(bm25))`` — or None when nothing rides on device
     (no fusion, RRF mode, empty lexical hits, or w == 1.0: the guard
     that keeps ``fuse:weighted,1.0`` bit-identical to the unfused path).
+    ``fuse:filter,W`` plans with W < 1 fuse the same way — the hit set
+    is already the Phase-1 candidate set, the bias just re-ranks within
+    it.
     """
     f = plan.fusion
-    if (f is None or f.mode != "weighted" or plan.lexical is None
+    if (f is None or f.mode not in ("weighted", "filter")
+            or plan.lexical is None
             or plan.lexical.ids.size == 0 or f.weight == 1.0):
         return None
     vals = ((1.0 - f.weight)

@@ -14,8 +14,12 @@ to the open clause's text; bare keywords close it):
     cluster:K            STRUCTURAL (§3.2): k-means label column
     central              STRUCTURAL (§3.2): similarity-centrality column
     keyword:TEXT...      lexical (FTS5/BM25) leg of hybrid fusion
+                         (repeatable; pools dedup + CombSUM-combine)
     fuse:weighted,W      hybrid: W*vector + (1-W)*minmax(bm25) (W in [0,1])
     fuse:rrf,K           hybrid: reciprocal-rank fusion with constant K
+    fuse:filter[,W]      hybrid: FTS hits become a HARD Phase-1 candidate
+                         set (router crossover applies to the lexical
+                         leg); W defaults to 1.0 = pure-vector ranking
 
 Tokens may appear in ANY order; execution order is fixed (modulations.py).
 ``keyword:`` without ``fuse:`` defaults to ``fuse:weighted,0.5``.
@@ -58,8 +62,11 @@ class ParsedTokens:
     pool: int = M.DEFAULT_POOL
     cluster: Optional[int] = None   # structural: k-means label column
     central: bool = False           # structural: centrality column
-    keyword: Optional[str] = None   # lexical leg of hybrid fusion
-    fuse_mode: Optional[str] = None  # "weighted" | "rrf"
+    keyword: Optional[str] = None   # lexical leg of hybrid fusion (joined)
+    # one entry per keyword: clause — each token resolves its OWN FTS
+    # pool and the pools combine (dedup + CombSUM) at plan build
+    keywords: List[str] = dataclasses.field(default_factory=list)
+    fuse_mode: Optional[str] = None  # "weighted" | "rrf" | "filter"
     fuse_weight: float = M.DEFAULT_FUSE_WEIGHT
     fuse_k: int = M.DEFAULT_RRF_K
 
@@ -87,7 +94,10 @@ def tokenize(token_string: str) -> ParsedTokens:
         elif kind == "to":
             parsed.to_text = text
         elif kind == "keyword":
-            # repeated keyword: clauses accumulate into one lexical query
+            # each keyword: clause keeps its own FTS query (pools dedup
+            # and combine at plan build); `keyword` stays the joined
+            # text for display/back-compat
+            parsed.keywords.append(text)
             parsed.keyword = (
                 f"{parsed.keyword} {text}" if parsed.keyword else text
             )
@@ -173,28 +183,34 @@ def tokenize(token_string: str) -> ParsedTokens:
 
 
 def _parse_fuse(parsed: ParsedTokens, rest: str) -> None:
-    """Parse ``fuse:weighted[,W]`` / ``fuse:rrf[,K]`` into ``parsed``."""
+    """Parse ``fuse:weighted[,W]`` / ``fuse:rrf[,K]`` / ``fuse:filter[,W]``
+    into ``parsed``.  ``filter`` makes the lexical hit set a hard Phase-1
+    candidate set; its default weight is 1.0 (pure-vector ranking within
+    the hits) rather than the blended default."""
     parts = rest.split(",") if rest else [""]
     mode = parts[0]
-    if mode not in ("weighted", "rrf"):
+    if mode not in ("weighted", "rrf", "filter"):
         raise GrammarError(
-            f"fuse: expects 'weighted[,W]' or 'rrf[,K]', got {rest!r}"
+            f"fuse: expects 'weighted[,W]', 'rrf[,K]' or 'filter[,W]', "
+            f"got {rest!r}"
         )
     parsed.fuse_mode = mode
+    if mode == "filter":
+        parsed.fuse_weight = 1.0
     if len(parts) > 2:
         raise GrammarError(f"fuse: too many parameters in {rest!r}")
     if len(parts) == 2:
         param = parts[1]
-        if mode == "weighted":
+        if mode in ("weighted", "filter"):
             try:
                 parsed.fuse_weight = float(param)
             except ValueError as e:
                 raise GrammarError(
-                    f"fuse:weighted expects a number, got {param!r}"
+                    f"fuse:{mode} expects a number, got {param!r}"
                 ) from e
             if not 0.0 <= parsed.fuse_weight <= 1.0:
                 raise GrammarError(
-                    "fuse:weighted weight must be in [0, 1], got "
+                    f"fuse:{mode} weight must be in [0, 1], got "
                     f"{parsed.fuse_weight}"
                 )
         else:
@@ -269,7 +285,14 @@ def build_plan(
             weight=parsed.fuse_weight,
             rrf_k=parsed.fuse_k,
         )
-        lex_ids, lex_scores = lexical_fn(parsed.keyword, parsed.pool)
+        # one FTS pool per keyword: clause; multi-clause plans dedup
+        # overlapping hits and CombSUM-combine instead of concatenating
+        tokens = parsed.keywords or [parsed.keyword]
+        if len(tokens) == 1:
+            lex_ids, lex_scores = lexical_fn(tokens[0], parsed.pool)
+        else:
+            lex_ids, lex_scores = M.combine_lexical_pools(
+                [lexical_fn(t, parsed.pool) for t in tokens], parsed.pool)
         lexical = M.LexicalHits(
             ids=np.asarray(lex_ids, dtype=np.int64),
             scores=np.asarray(lex_scores, dtype=np.float32),

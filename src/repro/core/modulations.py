@@ -101,9 +101,15 @@ class FusionSpec:
     query panel by linearity, the lexical part rides as ``score_bias``).
     ``rrf``: reciprocal-rank fusion 1/(k+rank) over the two ranked lists,
     finished on host after selection (rank fusion is not linear in scores).
+    ``filter``: the lexical hit set becomes a HARD Phase-1 candidate set
+    (sharp-keyword hybrid: only FTS hits are eligible, so the
+    selectivity-aware ``PrefilterRouter`` crossover applies to the
+    lexical leg); ranking within the hits is pure-vector at the default
+    ``weight=1.0``, or weighted fusion when ``fuse:filter,W`` gives
+    ``W < 1``.
     """
 
-    mode: str = "weighted"  # "weighted" | "rrf"
+    mode: str = "weighted"  # "weighted" | "rrf" | "filter"
     weight: float = DEFAULT_FUSE_WEIGHT  # vector-side weight, weighted mode
     rrf_k: int = DEFAULT_RRF_K
 
@@ -157,9 +163,65 @@ def fusion_scale(plan: ModulationPlan) -> float:
     single GEMM: w*(decay*(M@q_pre) + M@q_sup) == decay*(M@(w*q_pre)) +
     M@(w*q_sup) by linearity.  RRF never scales (rank-based).
     """
-    if plan.fusion is not None and plan.fusion.mode == "weighted":
+    if plan.fusion is not None and plan.fusion.mode in ("weighted", "filter"):
         return float(plan.fusion.weight)
     return 1.0
+
+
+def filter_candidate_ids(
+    plan: "ModulationPlan",
+    candidate_ids=None,
+):
+    """Phase-1 candidate set for a ``fuse:filter`` plan.
+
+    Returns the lexical hit ids (intersected with an existing Phase-1
+    candidate set when both filters apply — the SQL pre-filter stays
+    hard under the lexical one), or ``candidate_ids`` unchanged for
+    every other plan.  An empty intersection returns an empty array, not
+    None: a filter that matched nothing must yield no results, not the
+    full corpus.
+    """
+    f = plan.fusion
+    if f is None or f.mode != "filter" or plan.lexical is None:
+        return candidate_ids
+    lex = np.asarray(plan.lexical.ids, np.int64)
+    if candidate_ids is None:
+        return lex
+    cand = (candidate_ids if isinstance(candidate_ids, np.ndarray)
+            else np.asarray(list(candidate_ids), dtype=np.int64))
+    return lex[np.isin(lex, cand)]
+
+
+def combine_lexical_pools(
+    pools: Sequence[Tuple[np.ndarray, np.ndarray]],
+    pool: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge per-``keyword:``-token FTS pools into one lexical hit list.
+
+    Overlapping hits across tokens dedup by chunk id and their per-token
+    min-max scores combine by CombSUM (the sum of normalized scores — a
+    chunk matching several keyword clauses outranks one matching a
+    single clause at the same strength), then the combined scores
+    re-normalize to [0, 1] and the list sorts descending, ties broken by
+    first-seen order (token order, then each pool's own rank) so the
+    result is deterministic.  Truncates to ``pool`` entries.
+    """
+    scores: dict = {}
+    order: dict = {}
+    for ids, vals in pools:
+        for i, v in zip(np.asarray(ids, np.int64),
+                        np.asarray(vals, np.float32)):
+            i = int(i)
+            scores[i] = scores.get(i, 0.0) + float(v)
+            if i not in order:
+                order[i] = len(order)
+    if not scores:
+        return np.empty(0, np.int64), np.empty(0, np.float32)
+    ranked = sorted(scores.items(), key=lambda kv: (-kv[1], order[kv[0]]))
+    ranked = ranked[:max(0, int(pool))]
+    ids = np.asarray([i for i, _ in ranked], np.int64)
+    vals = minmax_normalize(np.asarray([v for _, v in ranked], np.float32))
+    return ids, np.asarray(vals, np.float32)
 
 
 def minmax_normalize(values: Array) -> Array:

@@ -320,6 +320,12 @@ class VectorCache:
         backend = get_backend(engine)
         ref = time.time() if now is None else now
 
+        # fuse:filter plans promote the lexical FTS hit set to the
+        # Phase-1 candidate set (intersecting an existing SQL filter),
+        # so the selectivity-aware prefilter router below applies to
+        # the lexical leg exactly as to a SQL pre-filter
+        candidate_ids = M.filter_candidate_ids(plan, candidate_ids)
+
         if candidate_ids is not None:
             # Phase-1 pre-filtered query: the selectivity-aware router
             # (self.prefilter) picks masked-device scoring of the warm

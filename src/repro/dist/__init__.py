@@ -3,5 +3,8 @@
 ``sharding`` maps LOGICAL axis names (batch, heads, corpus, ...) to mesh
 axes so model code never hard-codes a mesh layout; ``pem_sharded`` is the
 two-stage (local top-k + union merge) distributed retrieval path;
-``tuned`` holds the named rule variants the perf hillclimb selects.
+``tuned`` holds the named rule variants the perf hillclimb selects;
+``procgroup`` is the cross-PROCESS axis — per-shard segmented stores
+behind a shard-replica router, merged with the same exact-union
+contract (the million-chunk serving topology).
 """

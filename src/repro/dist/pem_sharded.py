@@ -73,6 +73,44 @@ def union_merge_topk(
     return ik, vk
 
 
+def union_merge_topk_payload(
+    v: jax.Array,       # (B, k_local) per-shard local top-k values
+    gi: jax.Array,      # (B, k_local) matching GLOBAL row indices
+    pe: jax.Array,      # (B, k_local, d) matching row PAYLOAD (embeddings)
+    axes,               # mesh axis name(s) the corpus rows shard over
+    k: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """:func:`union_merge_topk` carrying a per-candidate PAYLOAD — the
+    pool-row embeddings each shard gathered from its OWN row slice.
+
+    The shard-local gather is the point: a diverse (MMR) tail needs the
+    merged pool's embeddings, and gathering them after the merge reads
+    the full replicated row space — O(N) traffic that grows with corpus
+    size.  Gathering ``pe = matrix[i]`` inside the shard (O(n_local))
+    and all-gathering it alongside the candidates keeps the collective
+    at ``shards * k_local * (2 + d)`` elements, independent of N.
+
+    The payload rides the SAME top-k permutation as the indices, so
+    ``pk[b, j] == matrix[ik[b, j]]`` element-for-element and any
+    consumer (the fused MMR tail) sees bit-identical inputs to the
+    replicated-gather formulation.  Returns ``(indices, values,
+    payload)``, each (B, min(k, union), ...).
+    """
+    cand_v = jax.lax.all_gather(v, axes)              # (shards, B, k_l)
+    cand_i = jax.lax.all_gather(gi, axes)
+    cand_p = jax.lax.all_gather(pe, axes)             # (shards, B, k_l, d)
+    b = v.shape[0]
+    union = cand_v.shape[0] * cand_v.shape[-1]        # shards * k_local
+    d = cand_p.shape[-1]
+    cand_v = jnp.swapaxes(cand_v, 0, 1).reshape(b, union)
+    cand_i = jnp.swapaxes(cand_i, 0, 1).reshape(b, union)
+    cand_p = jnp.swapaxes(cand_p, 0, 1).reshape(b, union, d)
+    vk, pos = jax.lax.top_k(cand_v, min(k, union))
+    ik = jnp.take_along_axis(cand_i, pos, axis=1)
+    pk = jnp.take_along_axis(cand_p, pos[..., None], axis=1)
+    return ik, vk, pk
+
+
 def make_pem_topk(mesh: Mesh, rules: ShardingRules, k: int, raw: bool = False,
                   *, half_life: float = DEFAULT_DECAY_HALF_LIFE):
     """Build the shard_map'd corpus-row-sharded score -> local top-k -> merge.

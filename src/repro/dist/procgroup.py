@@ -1,0 +1,794 @@
+"""Cross-process shard groups: million-chunk retrieval on one box.
+
+``repro.dist.pem_sharded`` distributes the PEM pass across jax mesh
+devices inside ONE process.  This module is the other axis the paper's
+production story needs: a :class:`ProcessGroup` that partitions the
+corpus across OS processes (or threads, or inline workers), each shard
+owning its own :class:`~repro.core.segments.SegmentedCorpusStore` — so
+per-shard scoring-resident memory, not one process's host RAM, is the
+binding constraint at 1M+ chunks.
+
+Design:
+
+* :class:`ShardWorker` — one shard replica.  Owns a segmented store plus
+  a registered numpy backend and answers ``local_pass`` batches: the
+  full segmented device pass (:func:`score_select_segments`, candidate
+  mask panels, hybrid score bias) over ITS rows only, returning per-plan
+  top-``width`` candidates in chunk-id space (plus pool embeddings for
+  diverse plans).  Workers never import jax — the fused-numpy backend is
+  pure BLAS, so a forked worker starts in milliseconds.
+* ``dtype="f32b"`` workers score simple (no-filter, no-lexical) plans
+  with a BLOCKED single-stream pass: cache-sized f32 row blocks hit one
+  fused ``(d, 2B)`` query panel GEMM, so the corpus streams from RAM
+  ONCE per query instead of once per direction — the latency win the
+  ``scale_1m`` bench records (the sub-packing-threshold GEMM kernel also
+  skips OpenBLAS's A-matrix packing copy).  ``dtype="bf16"`` workers
+  instead keep a packed :func:`~repro.core.segments.pack_bf16` code
+  matrix of their live rows and run the same blocked pass through a
+  decode step — HALF the resident scoring bytes, the right trade where
+  memory bandwidth (not elementwise decode throughput) is the binding
+  constraint.  Filtered / hybrid plans fall back to the exact f32 path
+  on both.
+* :class:`ProcessGroup` — the coordinator/router.  Fans a batch of plans
+  out to one replica per shard, then merges with the SAME exact-union
+  contract as ``union_merge_topk``: every shard's local top-``width``
+  provably contains its share of the global top-``width``, and the merge
+  re-sorts by ``(score desc, global insertion rank asc)`` — the
+  insertion rank IS the monolithic store's row order (absent
+  compaction), so the merged ranking, tie order included, is
+  bit-identical to a monolithic fused-numpy
+  :meth:`~repro.core.vectorcache.VectorCache.search_plan` over the same
+  rows (pinned in tests/test_procgroup.py).  Diverse plans merge their
+  oversample pools and finish with the :func:`mmr_host` oracle at the
+  coordinator; ``fuse:rrf`` fuses at the coordinator exactly like
+  :func:`finalize_fusion`.
+
+One honest caveat about "bit-identical": BLAS GEMM scores the last
+``n mod M_block`` rows of a matrix with a tail microkernel whose
+accumulation order differs from the full-block kernel by 1-2 ulp, so a
+row's score bits depend (only) on whether it lands in a full M-block.
+Full-block rows are bit-stable under ANY row partition — verified
+empirically: random row subsets reproduce the full pass exactly whenever
+the subset count is block-aligned.  Per-shard scores therefore match the
+monolith exactly when every sealed slice's row count is a multiple of
+the M-block (32 covers the common kernels); otherwise up to
+``M_block - 1`` tail rows per sealed matrix may differ in the last ulp —
+rankings agree except for those rows' boundary ties.  The parity suite
+pins the aligned contract; at million-chunk scale slices are block-sized
+anyway.  The same ulp effect is why the selectivity router's gather path
+(a tiny scratch matrix) is only ulp-close, not bit-equal, to the masked
+path.
+
+Transports: ``inline`` (serial in-process calls — the deterministic
+default for tests), ``thread`` (one fan-out thread per replica; BLAS
+releases the GIL, so shards genuinely overlap and nothing is copied),
+``process`` (one OS process per replica, fork-preferred, length-prefixed
+pickle over a ``multiprocessing.Pipe``).  The merge math is transport-
+independent; parity suites run the same cases across all three.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import multiprocessing as mp
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import modulations as M
+from repro.core.backends import (fusion_bias_arrays, get_backend, mmr_host,
+                                 score_select_segments, selection_width,
+                                 top_idx)
+from repro.core.segments import (SECONDS_PER_DAY, SegmentedCorpusStore,
+                                 gather_ids, gather_rows, pack_bf16,
+                                 unpack_bf16)
+
+__all__ = ["ShardWorker", "ProcessGroup"]
+
+_TRANSPORTS = ("inline", "thread", "process")
+_DTYPES = ("f32", "f32b", "bf16")
+
+# blocked-pass row-block defaults: f32b wants L2-resident blocks (the
+# small-kernel GEMM never packs, so the only traffic is the one stream);
+# bf16 amortizes its decode scratch over bigger blocks
+_BLOCK_DEFAULTS = {"f32b": 1536, "bf16": 16384, "f32": 16384}
+
+
+class ShardWorker:
+    """One shard replica: a segmented store + a numpy scoring backend.
+
+    ``local_pass`` is the whole per-shard pipeline — candidate mask
+    panel, hybrid bias scatter, fused score->select, exact per-segment
+    union merge — restricted to this shard's rows, so the coordinator's
+    cross-shard merge composes with the intra-shard one the same way
+    ``union_merge_topk`` composes across devices.
+    """
+
+    def __init__(
+        self,
+        shard_id: int,
+        dim: int,
+        *,
+        engine: str = "fused-numpy",
+        dtype: str = "f32",
+        block: Optional[int] = None,
+    ) -> None:
+        if dtype not in _DTYPES:
+            raise ValueError(f"dtype must be one of {_DTYPES}, got {dtype!r}")
+        self.shard_id = int(shard_id)
+        self.store = SegmentedCorpusStore(dim)
+        self.backend = get_backend(engine)
+        self.dtype = dtype
+        self.block = int(block) if block else _BLOCK_DEFAULTS[dtype]
+        self.passes = 0
+        self.last_pass_ms = 0.0
+        self.total_pass_ms = 0.0
+        # (store version, codes, global rows, timestamps) — rebuilt lazily
+        # on mutation, like the VectorCache live view
+        self._packed: Optional[Tuple] = None
+        # the f32b analogue: (version, f32 live rows, global rows, ts)
+        self._livef32: Optional[Tuple] = None
+
+    # -- mutations ------------------------------------------------------------
+
+    def append(
+        self,
+        ids: np.ndarray,
+        matrix: np.ndarray,
+        timestamps: Optional[np.ndarray] = None,
+        *,
+        normalized: bool = False,
+    ) -> int:
+        """Seal this shard's slice of a group append; returns live rows."""
+        self.store.append(ids, matrix, timestamps, normalized=normalized)
+        return self.store.n_live
+
+    def delete(self, ids: Sequence[int]) -> int:
+        return self.store.delete(ids)
+
+    def compact(self, min_live_fraction: float = 1.0) -> int:
+        return self.store.compact(min_live_fraction)
+
+    # -- scoring --------------------------------------------------------------
+
+    def local_pass(
+        self,
+        plans: Sequence[M.ModulationPlan],
+        ks: Sequence[int],
+        now: float,
+        candidate_sets: Optional[Sequence[Optional[np.ndarray]]] = None,
+    ) -> List[Dict[str, Any]]:
+        """Score ``plans`` over this shard; per-plan top-``width`` results.
+
+        Returns one dict per plan: ``ids`` (chunk ids, merged local
+        order), ``scores`` (descending, local ties by row order),
+        ``elig`` (this shard's eligible-row count for the plan — the
+        coordinator sums these to pin global selection widths exactly),
+        and for diverse plans ``pool`` (the f32 pool embeddings, row-
+        aligned with ``ids``, for the coordinator's ``mmr_host`` finish).
+        """
+        t0 = time.perf_counter()
+        nplans = len(plans)
+        with self.store.lock:
+            segs = self.store.segments
+            panels = None
+            if candidate_sets is not None and any(
+                    c is not None for c in candidate_sets):
+                panels, _ = self.store.candidate_mask_panel(
+                    candidate_sets, segs)
+            elig = np.zeros(nplans, dtype=np.int64)
+            if panels is None:
+                elig[:] = sum(s.live_count for s in segs)
+            else:
+                for panel in panels:
+                    if panel is not None:
+                        elig += np.count_nonzero(panel, axis=0)
+            if self._fast_ok(plans, panels):
+                sel = self._fast_pass(segs, plans, ks, now)
+            else:
+                bias = fusion_bias_arrays(self.store, segs, plans)
+                sel = score_select_segments(
+                    self.backend, segs, plans, ks, now=now,
+                    candidate_masks=panels, score_bias=bias)
+        out: List[Dict[str, Any]] = []
+        for j, ((gidx, gv), plan) in enumerate(zip(sel, plans)):
+            entry: Dict[str, Any] = {
+                "ids": gather_ids(segs, gidx),
+                "scores": np.asarray(gv, dtype=np.float32),
+                "elig": int(elig[j]),
+            }
+            if plan.diverse is not None:
+                entry["pool"] = (gather_rows(segs, gidx) if gidx.size else
+                                 np.zeros((0, self.store.dim), np.float32))
+            out.append(entry)
+        dt = (time.perf_counter() - t0) * 1e3
+        self.passes += 1
+        self.last_pass_ms = dt
+        self.total_pass_ms += dt
+        return out
+
+    def _fast_ok(self, plans, panels) -> bool:
+        """The blocked pass serves only the plain shapes (no Phase-1
+        panel, no lexical bias); everything else takes the exact f32
+        path off the same store."""
+        return (self.dtype in ("f32b", "bf16") and panels is None
+                and all(p.lexical is None for p in plans))
+
+    def _packed_view(self, segs):
+        """(codes, global_rows, timestamps) over this shard's LIVE rows,
+        cached per store version — the bf16 analogue of the live view."""
+        ver = self.store.version
+        if self._packed is not None and self._packed[0] == ver:
+            return self._packed[1:]
+        codes_parts: List[np.ndarray] = []
+        row_parts: List[np.ndarray] = []
+        ts_parts: List[np.ndarray] = []
+        has_ts = bool(segs) and segs[0].timestamps is not None
+        off = 0
+        for s in segs:
+            if s.n_rows and s.live_count:
+                if s.n_dead:
+                    live = np.flatnonzero(s.live_mask)
+                    codes_parts.append(pack_bf16(s.matrix[live]))
+                    if has_ts:
+                        ts_parts.append(s.timestamps[live])
+                else:
+                    live = np.arange(s.n_rows, dtype=np.int64)
+                    codes_parts.append(pack_bf16(s.matrix))
+                    if has_ts:
+                        ts_parts.append(s.timestamps)
+                row_parts.append(live + off)
+            off += s.n_rows
+        if codes_parts:
+            codes = np.concatenate(codes_parts)
+            rows = np.concatenate(row_parts)
+            ts = np.concatenate(ts_parts) if has_ts else None
+        else:
+            codes = np.zeros((0, self.store.dim), dtype=np.uint16)
+            rows = np.zeros(0, dtype=np.int64)
+            ts = None
+        self._packed = (ver, codes, rows, ts)
+        return codes, rows, ts
+
+    def _live_view(self, segs):
+        """(f32 rows, global rows, timestamps) over this shard's LIVE
+        rows, cached per store version — the ``f32b`` blocked pass's
+        input.  The common shape (one sealed slice, no tombstones) is a
+        zero-copy view of the segment matrix; multi-segment or
+        tombstoned shards pay one gather per store version."""
+        ver = self.store.version
+        if self._livef32 is not None and self._livef32[0] == ver:
+            return self._livef32[1:]
+        mat_parts: List[np.ndarray] = []
+        row_parts: List[np.ndarray] = []
+        ts_parts: List[np.ndarray] = []
+        has_ts = bool(segs) and segs[0].timestamps is not None
+        off = 0
+        for s in segs:
+            if s.n_rows and s.live_count:
+                if s.n_dead:
+                    live = np.flatnonzero(s.live_mask)
+                    mat_parts.append(s.matrix[live])
+                    if has_ts:
+                        ts_parts.append(s.timestamps[live])
+                else:
+                    live = np.arange(s.n_rows, dtype=np.int64)
+                    mat_parts.append(s.matrix)
+                    if has_ts:
+                        ts_parts.append(s.timestamps)
+                row_parts.append(live + off)
+            off += s.n_rows
+        if not mat_parts:
+            mat = np.zeros((0, self.store.dim), dtype=np.float32)
+            rows = np.zeros(0, dtype=np.int64)
+            ts = None
+        elif len(mat_parts) == 1:  # np.concatenate always copies
+            mat, rows = mat_parts[0], row_parts[0]
+            ts = ts_parts[0] if has_ts else None
+        else:
+            mat = np.concatenate(mat_parts)
+            rows = np.concatenate(row_parts)
+            ts = np.concatenate(ts_parts) if has_ts else None
+        self._livef32 = (ver, mat, rows, ts)
+        return mat, rows, ts
+
+    def _fast_pass(self, segs, plans, ks, now):
+        """Blocked single-stream panel pass over the live rows — the
+        exact fused-numpy formula (pre columns scaled by decay, plus sup
+        columns) evaluated one cache-resident row block at a time, so
+        every plan direction shares ONE trip through RAM.  ``f32b``
+        slices the live f32 rows directly; ``bf16`` decodes its packed
+        codes into a reusable scratch block first."""
+        if self.dtype == "bf16":
+            codes, rows, ts = self._packed_view(segs)
+            n = int(codes.shape[0])
+        else:
+            mat, rows, ts = self._live_view(segs)
+            n = int(mat.shape[0])
+        nplans = len(plans)
+        empty = (np.empty(0, np.int64), np.empty(0, np.float32))
+        if n == 0:
+            return [empty for _ in plans]
+        if any(p.decay is not None for p in plans):
+            if ts is None:
+                raise ValueError(
+                    "decay: modulation requires per-chunk timestamps")
+            days = np.maximum(
+                (now - ts) / SECONDS_PER_DAY, 0.0).astype(np.float32)
+        q_pre, q_sup = M.fold_plans(plans)
+        # one (d, 2B) panel: columns [:B] are the decay-scaled pre
+        # directions, [B:] the suppression tail — one GEMM per block
+        qcat = np.ascontiguousarray(
+            np.concatenate([q_pre, q_sup], axis=1), dtype=np.float32)
+        scores = np.empty((n, nplans), dtype=np.float32)
+        block = max(1, self.block)
+        scratch = (np.empty((min(block, n), self.store.dim), dtype=np.uint32)
+                   if self.dtype == "bf16" else None)
+        for s in range(0, n, block):
+            e = min(n, s + block)
+            f = (unpack_bf16(codes[s:e], out=scratch[: e - s])
+                 if scratch is not None else mat[s:e])
+            res = f @ qcat
+            out = res[:, :nplans]
+            for j, plan in enumerate(plans):
+                if plan.decay is not None:
+                    out[:, j] *= 1.0 / (
+                        1.0 + days[s:e] / plan.decay.half_life_days)
+            out += res[:, nplans:]
+            scores[s:e] = out
+        sel = []
+        for j, (plan, k) in enumerate(zip(plans, ks)):
+            w = selection_width(plan, min(int(k), n), n)
+            if w == 0:
+                sel.append(empty)
+                continue
+            col = (scores[:, 0] if nplans == 1
+                   else np.ascontiguousarray(scores[:, j]))
+            idx = top_idx(col, w)
+            sel.append((rows[idx], col[idx]))
+        return sel
+
+    # -- introspection --------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """Per-shard memory + latency row (``ProcessGroup.stats()``)."""
+        st = self.store.stats()
+        matrix_bytes = sum(s.matrix.nbytes for s in self.store.segments)
+        codes_bytes = (int(self._packed[1].nbytes)
+                       if self._packed is not None else 0)
+        if self.dtype == "f32b" and self._livef32 is not None:
+            scoring_bytes = int(self._livef32[1].nbytes)
+        elif self.dtype == "bf16" and codes_bytes:
+            scoring_bytes = codes_bytes
+        else:
+            scoring_bytes = int(matrix_bytes)
+        return {
+            "shard": self.shard_id,
+            "dtype": self.dtype,
+            "rows": st["rows"],
+            "live": st["live"],
+            "segments": st["segments"],
+            "matrix_bytes": int(matrix_bytes),
+            "codes_bytes": codes_bytes,
+            # what a scoring pass actually streams: the packed codes for
+            # a warm bf16 worker, the (usually zero-copy) live f32 view
+            # for f32b, the f32 segment matrices otherwise
+            "scoring_bytes": scoring_bytes,
+            "passes": self.passes,
+            "last_pass_ms": round(self.last_pass_ms, 3),
+            "total_pass_ms": round(self.total_pass_ms, 3),
+        }
+
+
+# -- transports ---------------------------------------------------------------
+
+
+class _LocalClient:
+    """In-process replica (the ``inline`` and ``thread`` transports —
+    thread parallelism lives in the group's fan-out pool, not here)."""
+
+    def __init__(self, shard_id: int, dim: int, opts: Dict[str, Any]) -> None:
+        self.worker = ShardWorker(shard_id, dim, **opts)
+
+    def call(self, method: str, *args, **kwargs):
+        return getattr(self.worker, method)(*args, **kwargs)
+
+    def close(self) -> None:
+        pass
+
+
+def _worker_loop(conn, shard_id: int, dim: int, opts: Dict[str, Any]) -> None:
+    """Child-process server: one ShardWorker, pickle-RPC over a Pipe.
+    Never imports jax — the numpy backends resolve without it."""
+    worker = ShardWorker(shard_id, dim, **opts)
+    try:
+        while True:
+            msg = conn.recv()
+            if msg is None:
+                break
+            method, args, kwargs = msg
+            try:
+                conn.send((True, getattr(worker, method)(*args, **kwargs)))
+            except Exception as e:  # ship the failure, keep serving
+                conn.send((False, f"{type(e).__name__}: {e}"))
+    except (EOFError, KeyboardInterrupt):
+        pass
+    finally:
+        conn.close()
+
+
+class _ProcessClient:
+    """One OS-process replica behind a Pipe (fork-preferred: the corpus
+    arrays and imported modules are shared copy-on-write at start)."""
+
+    def __init__(self, shard_id: int, dim: int, opts: Dict[str, Any]) -> None:
+        method = ("fork" if "fork" in mp.get_all_start_methods()
+                  else mp.get_start_method(allow_none=False))
+        ctx = mp.get_context(method)
+        self._conn, child = ctx.Pipe()
+        self._proc = ctx.Process(
+            target=_worker_loop, args=(child, shard_id, dim, opts),
+            daemon=True)
+        self._proc.start()
+        child.close()
+        self._lock = threading.Lock()  # one in-flight RPC per replica
+
+    def call(self, method: str, *args, **kwargs):
+        with self._lock:
+            self._conn.send((method, args, kwargs))
+            ok, res = self._conn.recv()
+        if not ok:
+            raise RuntimeError(f"shard worker failed: {res}")
+        return res
+
+    def close(self) -> None:
+        try:
+            with self._lock:
+                self._conn.send(None)
+            self._proc.join(timeout=5.0)
+        except (OSError, ValueError):
+            pass
+        finally:
+            try:
+                self._conn.close()
+            except OSError:
+                pass
+            if self._proc.is_alive():
+                self._proc.terminate()
+
+
+# -- the coordinator ----------------------------------------------------------
+
+
+class ProcessGroup:
+    """Shard-replica router: partition, fan out, merge exactly.
+
+    Rows are dealt round-robin across ``n_shards`` at append time (so any
+    append pattern stays balanced) and every id's GLOBAL insertion rank
+    is recorded — that rank is the monolithic store's row order, which is
+    the monolithic merge's tie rule, so the coordinator's
+    ``lexsort((ranks, -scores))`` reproduces the monolithic stable sort
+    bit for bit.  ``replicas`` > 1 keeps identical copies of every shard
+    and round-robins queries across them (each replica applies every
+    mutation, so any replica can serve any query).
+
+    Exactness contract (the cross-shard analogue of ``union_merge_topk``):
+    each shard returns its top-``min(width, local_eligible)`` candidates,
+    the merged valid count is therefore exactly ``min(width,
+    total_eligible)``, and diverse pools finish with the same
+    :func:`mmr_host` oracle / ``fuse:rrf`` with the same
+    :func:`finalize_fusion` recipe the monolithic host tail runs.
+    Shard-local compaction is allowed but may reorder exact ties at the
+    selection-width boundary relative to a never-compacted monolith (the
+    parity suites pin the uncompacted contract).
+    """
+
+    def __init__(
+        self,
+        dim: int,
+        n_shards: int = 4,
+        *,
+        replicas: int = 1,
+        transport: str = "inline",
+        dtype: str = "f32",
+        engine: str = "fused-numpy",
+        block: Optional[int] = None,
+    ) -> None:
+        if transport not in _TRANSPORTS:
+            raise ValueError(
+                f"transport must be one of {_TRANSPORTS}, got {transport!r}")
+        if n_shards < 1 or replicas < 1:
+            raise ValueError("n_shards and replicas must be >= 1")
+        self.dim = int(dim)
+        self.n_shards = int(n_shards)
+        self.replicas = int(replicas)
+        self.transport = transport
+        self.dtype = dtype
+        opts = {"engine": engine, "dtype": dtype, "block": block}
+        mk = _ProcessClient if transport == "process" else _LocalClient
+        self._clients = [[mk(s, dim, opts) for _ in range(self.replicas)]
+                         for s in range(self.n_shards)]
+        self._pool = (None if transport == "inline" else cf.ThreadPoolExecutor(
+            self.n_shards * self.replicas,
+            thread_name_prefix="flexvec-shard"))
+        self._rank: Dict[int, int] = {}      # id -> global insertion order
+        self._shard_of: Dict[int, int] = {}  # LIVE id -> owning shard
+        self._row_counter = 0
+        self._has_ts: Optional[bool] = None
+        self._rr = 0
+        self._lock = threading.Lock()
+        self.searches = 0
+        self.last_fanout_ms = 0.0
+        self.last_merge_ms = 0.0
+        self._closed = False
+
+    # -- lifecycle ------------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        ids: Sequence[int],
+        matrix: np.ndarray,
+        timestamps: Optional[Sequence[float]] = None,
+        *,
+        normalized: bool = False,
+        **kwargs,
+    ) -> "ProcessGroup":
+        """Group over an existing corpus (the serve-layer attach path)."""
+        matrix = np.asarray(matrix, dtype=np.float32)
+        group = cls(dim=matrix.shape[1] if matrix.ndim == 2 else 0, **kwargs)
+        group.append(ids, matrix, timestamps, normalized=normalized)
+        return group
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+        for row in self._clients:
+            for client in row:
+                client.close()
+
+    def __enter__(self) -> "ProcessGroup":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- corpus mutations -----------------------------------------------------
+
+    @property
+    def n_live(self) -> int:
+        return len(self._shard_of)
+
+    def append(
+        self,
+        ids: Sequence[int],
+        matrix: np.ndarray,
+        timestamps: Optional[Sequence[float]] = None,
+        *,
+        normalized: bool = False,
+    ) -> int:
+        """Deal rows round-robin across shards (every replica appends its
+        shard's slice); rows keep their global insertion rank."""
+        ids_arr = np.asarray(ids, dtype=np.int64)
+        matrix = np.asarray(matrix, dtype=np.float32)
+        if matrix.ndim != 2 or matrix.shape[0] != ids_arr.shape[0]:
+            raise ValueError(
+                f"matrix shape {matrix.shape} inconsistent with "
+                f"{len(ids_arr)} ids")
+        if ids_arr.size == 0:
+            return 0
+        ts = (np.asarray(timestamps, dtype=np.float64)
+              if timestamps is not None else None)
+        if ts is not None and ts.shape[0] != ids_arr.shape[0]:
+            raise ValueError("timestamps misaligned with ids")
+        with self._lock:
+            if self._has_ts is not None and self._has_ts != (ts is not None):
+                raise ValueError(
+                    "timestamp presence must match the existing group "
+                    f"(group has timestamps: {self._has_ts})")
+            uniq, counts = np.unique(ids_arr, return_counts=True)
+            dupes = [int(i) for i in uniq[counts > 1]]
+            dupes += [int(i) for i in ids_arr if int(i) in self._shard_of]
+            if dupes:
+                raise ValueError(
+                    f"append: ids already live in the group: {dupes[:10]}"
+                    + ("..." if len(dupes) > 10 else ""))
+            shard = (self._row_counter
+                     + np.arange(ids_arr.size, dtype=np.int64)) % self.n_shards
+            calls = []
+            for s in range(self.n_shards):
+                rows = np.flatnonzero(shard == s)
+                if rows.size == 0:
+                    continue
+                part = (ids_arr[rows], np.ascontiguousarray(matrix[rows]),
+                        None if ts is None else ts[rows])
+                for client in self._clients[s]:
+                    calls.append((client, "append", part,
+                                  {"normalized": normalized}))
+            self._fanout(calls)
+            for j, cid in enumerate(ids_arr):
+                self._rank[int(cid)] = self._row_counter + j
+                self._shard_of[int(cid)] = int(shard[j])
+            self._row_counter += int(ids_arr.size)
+            self._has_ts = ts is not None
+        return int(ids_arr.size)
+
+    def delete(self, ids: Sequence[int]) -> int:
+        """Tombstone ids on their owning shards (all replicas); returns
+        rows newly tombstoned.  Unknown ids are ignored (non-strict)."""
+        with self._lock:
+            by_shard: Dict[int, List[int]] = {}
+            for cid in ids:
+                s = self._shard_of.get(int(cid))
+                if s is not None:
+                    by_shard.setdefault(s, []).append(int(cid))
+            if not by_shard:
+                return 0
+            calls = []
+            firsts = []
+            for s, victims in by_shard.items():
+                arr = np.asarray(victims, dtype=np.int64)
+                for r, client in enumerate(self._clients[s]):
+                    calls.append((client, "delete", (arr,), {}))
+                    if r == 0:
+                        firsts.append(len(calls) - 1)
+            results = self._fanout(calls)
+            for victims in by_shard.values():
+                for cid in victims:
+                    del self._shard_of[cid]
+            return int(sum(results[i] for i in firsts))
+
+    def compact(self, min_live_fraction: float = 1.0) -> int:
+        """Shard-local GC on every replica; returns segments folded
+        (first replica per shard)."""
+        calls = [(client, "compact", (min_live_fraction,), {})
+                 for row in self._clients for client in row]
+        results = self._fanout(calls)
+        return int(sum(results[::self.replicas]))
+
+    # -- search ---------------------------------------------------------------
+
+    def search_plan(
+        self,
+        plan: M.ModulationPlan,
+        candidate_ids: Optional[Sequence[int]] = None,
+        *,
+        now: Optional[float] = None,
+        k: Optional[int] = None,
+    ) -> List[Tuple[int, float]]:
+        """Single-plan mirror of ``VectorCache.search_plan`` (pool-width
+        ranking unless ``k`` narrows it)."""
+        ks = None if k is None else [k]
+        (out,) = self.search_plan_batch(
+            [plan], [candidate_ids], now=now, ks=ks)
+        return out
+
+    def search_plan_batch(
+        self,
+        plans: Sequence[M.ModulationPlan],
+        candidate_sets: Optional[Sequence[Optional[Sequence[int]]]] = None,
+        *,
+        now: Optional[float] = None,
+        ks: Optional[Sequence[int]] = None,
+    ) -> List[List[Tuple[int, float]]]:
+        """Fan a plan cohort out to one replica per shard, merge exactly.
+
+        ``candidate_sets[j]`` is plan ``j``'s Phase-1 candidate id set
+        (None = full corpus) — heterogeneous filters ride each shard's
+        (n, B) mask panel, same as the batched engine.  ``ks[j]`` is the
+        final candidate count (default ``min(plan.pool, n_live)``, the
+        direct-path contract).
+        """
+        nplans = len(plans)
+        ref = time.time() if now is None else now
+        if candidate_sets is None:
+            candidate_sets = [None] * nplans
+        if len(candidate_sets) != nplans:
+            raise ValueError("candidate_sets misaligned with plans")
+        cands: List[Optional[np.ndarray]] = []
+        for plan, c in zip(plans, candidate_sets):
+            # fuse:filter promotes the lexical hit set to the Phase-1
+            # candidate set, intersecting any SQL filter — identical to
+            # the VectorCache.search_plan routing
+            c = M.filter_candidate_ids(plan, c)
+            if c is not None and not isinstance(c, np.ndarray):
+                c = np.asarray(list(c), dtype=np.int64)
+            cands.append(c)
+        n_live = self.n_live
+        ks_eff = ([min(p.pool, n_live) for p in plans] if ks is None
+                  else [min(int(k), n_live) for k in ks])
+        with self._lock:
+            r = self._rr
+            self._rr = (self._rr + 1) % self.replicas
+        self.searches += 1
+        t0 = time.perf_counter()
+        calls = [(self._clients[s][r], "local_pass",
+                  (list(plans), ks_eff, ref, cands), {})
+                 for s in range(self.n_shards)]
+        parts = self._fanout(calls)
+        t1 = time.perf_counter()
+        self.last_fanout_ms = (t1 - t0) * 1e3
+
+        results: List[List[Tuple[int, float]]] = []
+        for j, (plan, k) in enumerate(zip(plans, ks_eff)):
+            ids = np.concatenate([p[j]["ids"] for p in parts])
+            vals = np.concatenate([p[j]["scores"] for p in parts])
+            if ids.size == 0:
+                results.append([])
+                continue
+            elig = int(sum(p[j]["elig"] for p in parts))
+            ranks = np.fromiter((self._rank[int(i)] for i in ids),
+                                np.int64, ids.size)
+            # primary: score descending; ties: insertion rank ascending —
+            # exactly the monolithic merge's stable sort over row order
+            order = np.lexsort((ranks, -vals))
+            if plan.diverse is not None:
+                w = selection_width(plan, min(k, elig), elig)
+                order = order[:w]
+                kf = max(0, min(k, int(order.size)))
+                if kf == 0:
+                    results.append([])
+                    continue
+                pool_ids = ids[order]
+                pool_vals = vals[order]
+                pool_emb = np.concatenate(
+                    [p[j]["pool"] for p in parts])[order]
+                sel = mmr_host(pool_emb, pool_vals, kf, plan.diverse.lam)
+                out = [(int(i), float(v))
+                       for i, v in zip(pool_ids[sel], pool_vals[sel])]
+            else:
+                order = order[:k]
+                out = [(int(i), float(v))
+                       for i, v in zip(ids[order], vals[order])]
+            results.append(self._finalize_rrf(plan, out, k, cands[j]))
+        self.last_merge_ms = (time.perf_counter() - t1) * 1e3
+        return results
+
+    def _finalize_rrf(self, plan, results, k, cand):
+        """Coordinator-side ``finalize_fusion``: identical recipe, with
+        live-membership resolved from the group's id->shard index."""
+        f = plan.fusion
+        if f is None or f.mode != "rrf" or plan.lexical is None:
+            return results
+        lex = np.asarray(plan.lexical.ids, np.int64)
+        if cand is not None:
+            lex = lex[np.isin(lex, cand)]
+        lex_ids = [int(i) for i in lex if int(i) in self._shard_of]
+        fused = M.rrf_fuse([i for i, _ in results], lex_ids, f.rrf_k)
+        return [(int(i), float(s)) for i, s in fused[:max(0, k)]]
+
+    # -- plumbing -------------------------------------------------------------
+
+    def _fanout(self, calls):
+        if self._pool is None:
+            return [client.call(method, *args, **kwargs)
+                    for client, method, args, kwargs in calls]
+        futs = [self._pool.submit(client.call, method, *args, **kwargs)
+                for client, method, args, kwargs in calls]
+        return [f.result() for f in futs]
+
+    def stats(self) -> Dict[str, Any]:
+        """Topology + per-shard memory/latency rows (every replica)."""
+        shard_rows = []
+        for s in range(self.n_shards):
+            for r_i, client in enumerate(self._clients[s]):
+                row = dict(client.call("stats"))
+                row["replica"] = r_i
+                shard_rows.append(row)
+        return {
+            "n_shards": self.n_shards,
+            "replicas": self.replicas,
+            "transport": self.transport,
+            "dtype": self.dtype,
+            "live": self.n_live,
+            "rows": self._row_counter,
+            "searches": self.searches,
+            "last_fanout_ms": round(self.last_fanout_ms, 3),
+            "last_merge_ms": round(self.last_merge_ms, 3),
+            "shards": shard_rows,
+        }

@@ -86,6 +86,7 @@ from repro.core.backends import (ExecutionBackend,
                                  score_select_filter_panel,
                                  score_select_prefiltered,
                                  score_select_segments)
+from repro.core import modulations as M
 from repro.core.grammar import parse
 from repro.core.segments import CompactionPolicy
 from repro.core.vectorcache import VectorCache
@@ -151,6 +152,20 @@ class Request:
         once at admission, not per batch."""
         return self._filter_key
 
+    def apply_plan_filter(self) -> None:
+        """``fuse:filter`` plans promote their lexical FTS hit set to the
+        Phase-1 candidate set (intersecting any SQL pre-filter) — called
+        once the plan is known, so the device stage groups sharp-keyword
+        hybrids by hit set and routes them through the selectivity-aware
+        prefilter exactly like SQL-filtered requests."""
+        if self.plan is None:
+            return
+        cand = M.filter_candidate_ids(self.plan, self.candidate_ids)
+        if cand is not self.candidate_ids:
+            self.candidate_ids = np.unique(
+                np.asarray(cand, dtype=np.int64))
+            self._filter_key = self.candidate_ids.tobytes()
+
     def expired(self, now_monotonic: float) -> bool:
         if self.deadline_ms is None:
             return False
@@ -167,6 +182,10 @@ class _TailWork:
     ks: List[int]
     selected: List[Tuple[np.ndarray, np.ndarray]]
     mmr_done: bool = False  # device pass already finished diversity on device
+    # shard-group fan-out: ``selected`` holds FINAL per-request result
+    # lists (ids resolved, diversity and rrf done at the coordinator);
+    # the tail only truncates to each request's k and delivers
+    final: bool = False
 
 
 class BatchedRetrievalEngine:
@@ -188,6 +207,7 @@ class BatchedRetrievalEngine:
         max_queue: int = 256,
         pipeline: bool = True,
         compaction: Optional[CompactionPolicy] = None,
+        shard_group: Optional[Any] = None,
     ):
         self.cache = cache
         self.max_batch = max_batch
@@ -197,6 +217,12 @@ class BatchedRetrievalEngine:
         self.max_queue = max_queue
         self.pipeline = pipeline
         self.compaction = compaction
+        # cross-process shard router (repro.dist.procgroup.ProcessGroup):
+        # when attached, the device stage fans each collected batch out to
+        # one replica per shard and merges with the exact-union contract
+        # instead of scoring the local cache; admission, batching,
+        # priorities and the pipeline overlap are unchanged
+        self.shard_group = shard_group
 
         # counters (single-writer or benign int bumps, same as the store's)
         self.batches_served = 0
@@ -317,13 +343,22 @@ class BatchedRetrievalEngine:
         normalized: bool = False,
     ):
         """Append chunks as one sealed segment; lands between batches
-        (the store lock spans one device pass). Returns the new segment."""
-        return self.cache.ingest(ids, matrix, timestamps,
-                                 normalized=normalized)
+        (the store lock spans one device pass). Returns the new segment.
+        An attached shard group mirrors the append (each shard normalizes
+        its slice row-wise, so replicas match the cache bit for bit)."""
+        seg = self.cache.ingest(ids, matrix, timestamps,
+                                normalized=normalized)
+        if self.shard_group is not None:
+            self.shard_group.append(ids, matrix, timestamps,
+                                    normalized=normalized)
+        return seg
 
     def delete(self, ids: Sequence[int], *, strict: bool = False) -> int:
         """Tombstone chunks between batches; returns rows tombstoned."""
-        return self.cache.delete(ids, strict=strict)
+        removed = self.cache.delete(ids, strict=strict)
+        if self.shard_group is not None:
+            self.shard_group.delete(ids)
+        return removed
 
     @property
     def queue_depth(self) -> int:
@@ -370,6 +405,7 @@ class BatchedRetrievalEngine:
                 # core comparator keeps the legacy behavior (parse inside
                 # the serve loop, errors delivered via the future).
                 req.plan = self._parse(req)
+            req.apply_plan_filter()
         except Exception:
             self._dec_depth(1)
             raise
@@ -547,6 +583,7 @@ class BatchedRetrievalEngine:
             if req.plan is None:  # sync-core comparator: parse in-loop
                 try:
                     req.plan = self._parse(req)
+                    req.apply_plan_filter()
                 except Exception as e:  # bad request: fail it, keep the batch
                     self._fail(req, e, count_depth=False)
                     continue
@@ -558,6 +595,29 @@ class BatchedRetrievalEngine:
             return None
 
         ref = self.now if self.now is not None else time.time()
+        if self.shard_group is not None:
+            # shard-router fan-out: the whole collected batch goes to one
+            # replica per shard as ONE plan cohort (heterogeneous filters
+            # ride each shard's mask panel) and comes back merged + final
+            # — the host tail only truncates to each request's k
+            try:
+                n_live = self.shard_group.n_live
+                ks = []
+                for req in live:
+                    k_req = req.k if req.k is not None else req.plan.pool
+                    f = req.plan.fusion
+                    if f is not None and f.mode == "rrf":
+                        k_req = max(k_req, req.plan.pool)
+                    ks.append(min(k_req, n_live))
+                results = self.shard_group.search_plan_batch(
+                    plans, [req.candidate_ids for req in live],
+                    now=ref, ks=ks)
+            except Exception as e:  # group failure: fail the batch loudly
+                for req in live:
+                    self._fail(req, e, count_depth=False)
+                return None
+            return _TailWork(live, plans, (), ks, results,
+                             mmr_done=True, final=True)
         try:
             # the lock spans snapshot + scoring: ingest/delete/compaction
             # land BETWEEN batches, never inside one
@@ -639,6 +699,12 @@ class BatchedRetrievalEngine:
         mid-loop would let those parses convoy against the remaining MMR
         work.  Delivered at the end, the wake-up storm lands during the
         next batch's GIL-releasing device pass instead."""
+        if work.final:
+            # shard-group results arrive final (diversity + fusion done at
+            # the coordinator, pool-width like the direct path): hand back k
+            for req, res in zip(work.requests, work.selected):
+                self._finish(req, res if req.k is None else res[:req.k])
+            return
         done: List[Tuple[Request, Optional[List[Tuple[int, float]]],
                          Optional[Exception]]] = []
         for req, plan, k, sel in zip(work.requests, work.plans, work.ks,

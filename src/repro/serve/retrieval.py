@@ -82,6 +82,7 @@ class RetrievalService:
         self.error_count = 0
         self._serving = None  # lazy BatchedRetrievalEngine (see serving())
         self._serving_lock = threading.Lock()
+        self._shard_group = None  # lazy ProcessGroup (see shard_group())
 
     def flex_search(self, query: str, params: Sequence = ()) -> SearchResult:
         """SQL or @preset -> rows. The agent's single endpoint.
@@ -133,6 +134,15 @@ class RetrievalService:
             return self._serving.search(
                 tokens, k, priority=priority, deadline_ms=deadline_ms,
                 candidate_ids=candidate_ids)
+        if self._shard_group is not None:
+            from repro.core import grammar
+
+            plan = grammar.parse(tokens, self.cache.embed_fn,
+                                 self.cache.embeddings_for_ids,
+                                 self.cache.lexical_fn)
+            results = self._shard_group.search_plan(
+                plan, candidate_ids, now=self.now)
+            return results if k is None else results[:k]
         results = self.cache.search(
             tokens, candidate_ids=candidate_ids, now=self.now,
             engine=self.engine)
@@ -168,8 +178,44 @@ class RetrievalService:
 
                 self._serving = BatchedRetrievalEngine(
                     self.cache, now=self.now, engine=self.engine,
-                    **engine_kwargs)
+                    shard_group=self._shard_group, **engine_kwargs)
             return self._serving
+
+    def shard_group(
+        self,
+        n_shards: int = 4,
+        *,
+        transport: str = "thread",
+        dtype: str = "f32",
+        replicas: int = 1,
+        block: Optional[int] = None,
+    ) -> "Any":
+        """Attach a cross-process shard group mirroring this service's
+        corpus (:class:`repro.dist.procgroup.ProcessGroup`): the corpus is
+        dealt round-robin across ``n_shards`` per-shard segmented stores
+        and every subsequent :meth:`search` — direct, or batched once
+        :meth:`serving` is attached afterwards — fans out to one replica
+        per shard and merges with the exact-union contract.  Ingest and
+        delete keep the group in sync with the cache.  ``dtype`` picks
+        the per-shard scoring mode: ``"f32"`` (exact, bit-identical to
+        the monolith), ``"f32b"`` (blocked single-stream panel pass —
+        the million-chunk latency mode) or ``"bf16"`` (packed codes,
+        half the resident scoring bytes).  Arguments apply on first
+        creation only.
+        """
+        with self._serving_lock:
+            if self._shard_group is None:
+                from repro.dist.procgroup import ProcessGroup
+
+                with self.cache.store.lock:
+                    self._shard_group = ProcessGroup.build(
+                        self.cache.ids, self.cache.matrix,
+                        self.cache.timestamps, normalized=True,
+                        n_shards=n_shards, transport=transport,
+                        dtype=dtype, replicas=replicas, block=block)
+                if self._serving is not None:
+                    self._serving.shard_group = self._shard_group
+            return self._shard_group
 
     async def search_async(
         self,
@@ -208,10 +254,14 @@ class RetrievalService:
         return await asyncio.to_thread(self.delete, ids)
 
     def close(self) -> None:
-        """Shut down the attached serving engine (drains its queue)."""
+        """Shut down the attached serving engine (drains its queue) and
+        the shard group's worker replicas."""
         if self._serving is not None:
             self._serving.close()
             self._serving = None
+        if self._shard_group is not None:
+            self._shard_group.close()
+            self._shard_group = None
 
     # -- live-corpus entry points -------------------------------------------
 
@@ -243,6 +293,10 @@ class RetrievalService:
             [r[0] for r in rows], embeddings,
             [r[4] or 0.0 for r in rows],
         )
+        if self._shard_group is not None:
+            self._shard_group.append(
+                [r[0] for r in rows], embeddings,
+                [r[4] or 0.0 for r in rows])
         return len(rows)
 
     def delete(self, ids: Sequence[int]) -> int:
@@ -250,6 +304,8 @@ class RetrievalService:
         removed = delete_chunks(self.conn, ids)
         if removed:
             self.cache.delete(removed)
+            if self._shard_group is not None:
+                self._shard_group.delete(removed)
         return len(removed)
 
     def stats(self) -> Dict[str, Any]:
@@ -278,6 +334,11 @@ class RetrievalService:
         }
         if self._serving is not None:
             out["serving"] = self._serving.stats()
+        if self._shard_group is not None:
+            # topology + per-shard memory/latency rows (the million-chunk
+            # capacity ledger: each shard reports its scoring-resident
+            # bytes and last fan-out pass latency)
+            out["shard_group"] = self._shard_group.stats()
         plan_cache = getattr(self.engine, "plan_cache", None)
         if plan_cache is not None:
             out["plan_cache"] = plan_cache.stats()

@@ -302,3 +302,54 @@ def test_gate_cli_fails_on_regression(tmp_path):
         cwd=REPO, capture_output=True, text=True)
     assert proc.returncode == 1
     assert "REGRESSION" in proc.stdout
+
+
+def test_scale1m_section_gated_and_drop_fails():
+    """The million-chunk shard-group scenario gates under the same rules:
+    a sharded-path regression past tolerance fails, and dropping the
+    whole section (e.g. the bench silently skipping the topology) is
+    section-level silent omission."""
+    base = _snap({"jit-jax": _row(30.0)})
+    base["scale_1m"] = {"sharded_bf16": _row(55.0),
+                       "sharded_f32": _row(95.0),
+                       "monolithic_fused": _row(100.0)}
+    ok = _snap({"jit-jax": _row(30.0)})
+    ok["scale_1m"] = {"sharded_bf16": _row(60.0),
+                     "sharded_f32": _row(100.0),
+                     "monolithic_fused": _row(105.0)}
+    failures, notes = compare_all(ok, base, DEFAULT_TOL)
+    assert failures == []
+    assert any(n.startswith("scale_1m/") for n in notes)
+    bad = _snap({"jit-jax": _row(30.0)})
+    bad["scale_1m"] = {"sharded_bf16": _row(120.0),
+                      "sharded_f32": _row(100.0),
+                      "monolithic_fused": _row(105.0)}
+    failures, _ = compare_all(bad, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "scale_1m/sharded_bf16" in failures[0]
+    dropped = _snap({"jit-jax": _row(30.0)})
+    failures, _ = compare_all(dropped, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "scale_1m" in failures[0] and "dropped" in failures[0]
+
+
+def test_scale1m_row_missing_fails():
+    """Dropping ONE shard-group row (say the bf16 headline) while keeping
+    the section is row-level silent omission."""
+    base = _snap({})
+    base["scale_1m"] = {"sharded_bf16": _row(55.0),
+                       "monolithic_fused": _row(100.0)}
+    new = _snap({})
+    new["scale_1m"] = {"monolithic_fused": _row(100.0)}
+    failures, _ = compare_all(new, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "scale_1m/sharded_bf16" in failures[0] and "MISSING" in failures[0]
+
+
+def test_merge_min_folds_scale1m_section():
+    a = _snap({"jit-jax": _row(30.0)})
+    a["scale_1m"] = {"sharded_bf16": _row(61.0)}
+    b = _snap({"jit-jax": _row(29.0)})
+    b["scale_1m"] = {"sharded_bf16": _row(58.0)}
+    merged = merge_min([a, b])
+    assert merged["scale_1m"]["sharded_bf16"]["total_ms"] == 58.0

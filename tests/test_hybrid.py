@@ -359,3 +359,192 @@ def test_finalize_fusion_noop_for_weighted():
                          lexical_fn=LEXICAL)
     results = [(1, 0.5), (2, 0.25)]
     assert finalize_fusion(plan, results, 2) is results
+
+
+# -- 8. fuse:filter — FTS hits as a hard Phase-1 candidate set ---------------
+
+
+def test_fuse_filter_parsing():
+    p = grammar.tokenize("similar:x keyword:y fuse:filter")
+    assert p.fuse_mode == "filter"
+    assert p.fuse_weight == 1.0  # pure-vector ranking within the hits
+    p = grammar.tokenize("similar:x keyword:y fuse:filter,0.7")
+    assert p.fuse_mode == "filter" and p.fuse_weight == 0.7
+    with pytest.raises(GrammarError):
+        grammar.tokenize("similar:x keyword:y fuse:filter,1.5")
+    with pytest.raises(GrammarError):
+        grammar.tokenize("similar:x keyword:y fuse:filter,nope")
+
+
+def test_filter_candidate_ids_unit():
+    plan = grammar.parse("similar:x keyword:k fuse:filter", EMB,
+                         lexical_fn=LEXICAL)
+    # no SQL filter: the FTS hit set IS the Phase-1 candidate set
+    np.testing.assert_array_equal(
+        M.filter_candidate_ids(plan, None), plan.lexical.ids)
+    # intersection with an existing SQL filter (both stay hard)
+    np.testing.assert_array_equal(
+        M.filter_candidate_ids(plan, [12, 999, 7]), [7, 12])
+    # empty intersection -> EMPTY set, never None (no full-corpus leak)
+    out = M.filter_candidate_ids(plan, [999])
+    assert out is not None and out.size == 0
+    # non-filter plans pass the SQL filter through untouched
+    w_plan = grammar.parse("similar:x keyword:k fuse:weighted,0.5", EMB,
+                           lexical_fn=LEXICAL)
+    assert M.filter_candidate_ids(w_plan, None) is None
+    cand = [1, 2, 3]
+    assert M.filter_candidate_ids(w_plan, cand) is cand
+
+
+@pytest.mark.parametrize("engine", BACKENDS)
+def test_fuse_filter_matches_candidate_search(engine):
+    """fuse:filter == the same plan pre-filtered to the FTS hit ids,
+    bit-for-bit: the hit set rides the identical Phase-1 route."""
+    mat, ts = _corpus()
+    store = _store_from_splits(mat, ts, [100, 130], deleted=(3, 104))
+    vc = VectorCache(store=store, embed_fn=EMB, lexical_fn=LEXICAL)
+    got = vc.search(TOKENS + " keyword:server fuse:filter",
+                    now=NOW, engine=engine)
+    want = vc.search(TOKENS, candidate_ids=LEX_IDS, now=NOW, engine=engine)
+    assert got == want
+    assert {i for i, _ in got} <= set(LEX_IDS)
+    assert 3 not in {i for i, _ in got}  # tombstones stay dead
+
+
+def test_fuse_filter_routes_through_prefilter_router():
+    """The satellite contract: the lexical hit set hits the
+    selectivity-aware router exactly like a SQL pre-filter."""
+    from repro.core.backends import PrefilterRouter
+
+    mat, ts = _corpus()
+    # sharp hit set (7/230 = 3% < 20% threshold) -> gather-host
+    vc = VectorCache(store=_store_from_splits(mat, ts, [230]),
+                     embed_fn=EMB, lexical_fn=LEXICAL,
+                     prefilter=PrefilterRouter())
+    vc.search(TOKENS + " keyword:server fuse:filter", now=NOW,
+              engine="fused-numpy")
+    assert vc.prefilter.routed_gather == 1
+    assert vc.prefilter.routed_masked == 0
+    # broad hit set (120/230 = 52%; pool: must not truncate it below the
+    # crossover) -> masked-device
+    broad = _stub_lexical(list(range(120)),
+                          np.linspace(1.0, 0.1, 120).astype(np.float32))
+    vc2 = VectorCache(store=_store_from_splits(mat, ts, [230]),
+                      embed_fn=EMB, lexical_fn=broad,
+                      prefilter=PrefilterRouter())
+    vc2.search(TOKENS.replace("pool:40", "pool:200")
+               + " keyword:server fuse:filter", now=NOW,
+               engine="fused-numpy")
+    assert vc2.prefilter.routed_masked == 1
+    assert vc2.prefilter.routed_gather == 0
+
+
+def test_fuse_filter_empty_hits_returns_empty():
+    mat, ts = _corpus()
+    vc = VectorCache(store=_store_from_splits(mat, ts, [230]),
+                     embed_fn=EMB,
+                     lexical_fn=_stub_lexical([], []))
+    got = vc.search("similar:x keyword:zzz fuse:filter", now=NOW,
+                    engine="fused-numpy")
+    assert got == []
+
+
+@pytest.mark.parametrize("engine", ["reference", "fused-numpy"])
+def test_fuse_filter_weight_reranks_within_hits(engine):
+    """fuse:filter,W with W<1: hard filter to the hit set, then the
+    weighted blend re-ranks WITHIN it (host oracle)."""
+    w = 0.5
+    mat, ts = _corpus()
+    store = _store_from_splits(mat, ts, [230])
+    vc = VectorCache(store=store, embed_fn=EMB, lexical_fn=LEXICAL)
+    got = vc.search(TOKENS + f" keyword:server fuse:filter,{w}",
+                    now=NOW, engine=engine)
+    plan = grammar.parse(TOKENS, EMB)
+    days_ago = (NOW - ts) / 86400.0
+    base = M.modulate_scores(mat, days_ago, plan) * w
+    full = np.full(mat.shape[0], -np.inf)
+    for cid, s in zip(LEX_IDS, LEX_SCORES):
+        full[cid] = base[cid] + (1.0 - w) * s
+    order = [int(i) for i in np.argsort(-full, kind="stable")
+             if np.isfinite(full[i])]
+    assert [i for i, _ in got] == order
+    np.testing.assert_allclose([s for _, s in got],
+                               [full[i] for i in order],
+                               rtol=2e-5, atol=1e-6)
+
+
+# -- 9. multi-keyword lexical pools (dedup + CombSUM) ------------------------
+
+
+def test_combine_lexical_pools_unit():
+    pools = [(np.array([1, 2, 3]), np.array([1.0, 0.5, 0.25], np.float32)),
+             (np.array([3, 4]), np.array([1.0, 0.5], np.float32))]
+    ids, scores = M.combine_lexical_pools(pools, 10)
+    # id 3 matches both clauses: 0.25 + 1.0 = 1.25 tops the list;
+    # ids 2 and 4 tie at 0.5 -> first-seen (token order) breaks it
+    assert list(ids) == [3, 1, 2, 4]
+    np.testing.assert_allclose(
+        scores, (np.array([1.25, 1.0, 0.5, 0.5]) - 0.5) / 0.75, rtol=1e-6)
+    # truncation to the pool width happens BEFORE renormalization
+    ids2, scores2 = M.combine_lexical_pools(pools, 2)
+    assert list(ids2) == [3, 1]
+    # no hits at all -> empty, typed
+    ids3, scores3 = M.combine_lexical_pools(
+        [(np.empty(0, np.int64), np.empty(0, np.float32))], 5)
+    assert ids3.size == 0 and scores3.size == 0
+    assert ids3.dtype == np.int64 and scores3.dtype == np.float32
+
+
+def test_multi_keyword_tokenize_keeps_clauses():
+    p = grammar.tokenize("similar:x keyword:alpha beta keyword:gamma "
+                         "fuse:rrf pool:40")
+    assert p.keywords == ["alpha beta", "gamma"]
+    assert p.keyword == "alpha beta gamma"  # joined display text
+
+
+def test_multi_keyword_plan_dedups_and_combsums():
+    calls = []
+
+    def lex(term, pool):
+        calls.append((term, pool))
+        if term == "alpha":
+            return (np.array([7, 12, 55], np.int64),
+                    np.array([1.0, 0.6, 0.2], np.float32))
+        return (np.array([55, 102], np.int64),
+                np.array([1.0, 0.4], np.float32))
+
+    plan = grammar.parse(
+        "similar:x keyword:alpha keyword:beta fuse:weighted,0.5 pool:40",
+        EMB, None, lex)
+    # one FTS pool per clause, each at the plan's pool width
+    assert calls == [("alpha", 40), ("beta", 40)]
+    ids = list(plan.lexical.ids)
+    assert ids == [55, 7, 12, 102]       # 55: 0.2+1.0 CombSUM tops
+    assert len(ids) == len(set(ids))     # overlapping hits deduped
+    np.testing.assert_allclose(
+        plan.lexical.scores,
+        (np.array([1.2, 1.0, 0.6, 0.4]) - 0.4) / 0.8, rtol=1e-6)
+
+
+def test_multi_keyword_end_to_end():
+    mat, ts = _corpus()
+    store = _store_from_splits(mat, ts, [230])
+
+    def lex(term, pool):
+        if term == "server":
+            return (np.asarray(LEX_IDS, np.int64),
+                    np.asarray(LEX_SCORES, np.float32))
+        return (np.array([12, 77], np.int64),
+                np.array([1.0, 0.8], np.float32))
+
+    vc = VectorCache(store=store, embed_fn=EMB, lexical_fn=lex)
+    got = vc.search(TOKENS + " keyword:server keyword:restart "
+                    "fuse:weighted,0.4", now=NOW, engine="fused-numpy")
+    ids = [i for i, _ in got]
+    assert len(ids) == len(set(ids))     # no duplicate rows from overlap
+    # id 12 matches both clauses -> its fused rank beats the single-clause
+    # run of the same query
+    single = vc.search(TOKENS + " keyword:server fuse:weighted,0.4",
+                       now=NOW, engine="fused-numpy",
+                       lexical_fn=_stub_lexical(LEX_IDS, LEX_SCORES))
+    assert ids.index(12) < [i for i, _ in single].index(12)

@@ -1,0 +1,505 @@
+"""Cross-shard merge parity: the ProcessGroup shard-replica router vs the
+monolithic fused-numpy oracle.
+
+The pinned contract (see ``repro/dist/procgroup.py``): with every sealed
+per-shard slice block-aligned (row counts divisible by 4 — these tests
+deal appends divisible by ``n_shards * 32``), the group's fan-out +
+exact-union merge is BIT-IDENTICAL to a monolithic ``VectorCache`` over
+the same rows, across segmentations x tombstones x candidate masks x
+diverse lambdas, including exact cross-shard score ties (resolved by
+insertion rank, = the monolith's stable sort order).  Filtered cases pin
+against an always-mask oracle (``PrefilterRouter(mask_threshold=0.0)``)
+because the router's gather path scores a scratch matrix whose BLAS
+tail-kernel low bits differ from the warm-segment masked pass.
+
+Batched-engine routing is pinned at id level, the same contract as
+``test_batched_engine_matches_direct``: the engine folds B plans into one
+GEMM panel whose low bits differ from the B=1 direct pass.
+"""
+
+import concurrent.futures as cf
+import dataclasses
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import grammar
+from repro.core import modulations as M
+from repro.core.backends import PrefilterRouter, top_idx
+from repro.core.segments import pack_bf16, unpack_bf16
+from repro.core.vectorcache import VectorCache
+from repro.dist.procgroup import ProcessGroup, ShardWorker
+from repro.embed import HashEmbedder
+
+DIM = 64
+NOW = 1_770_000_000.0
+N = 480  # 3 shards x 160 rows, 160 % 4 == 0
+
+
+def _texts(n, offset=0):
+    # i and i+407 share a text exactly -> identical embeddings -> exact
+    # score ties, landing in DIFFERENT shards (407 % 3 != 0), so the
+    # cross-shard rank-based tie merge is actually exercised
+    return [f"topic {(offset + i) % 37} filler {(offset + i) % 11}"
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def emb():
+    return HashEmbedder(DIM)
+
+
+@pytest.fixture(scope="module")
+def corpus(emb):
+    ids = np.arange(N, dtype=np.int64)
+    matrix = emb.embed_batch(_texts(N))
+    ts = np.linspace(NOW - 90 * 86400.0, NOW - 3600.0, N)
+    return ids, matrix, ts
+
+
+def _lex(term, limit):
+    """Deterministic synthetic keyword resolver over ids 0..N-1."""
+    seed = zlib.crc32(term.encode())
+    rng = np.random.default_rng(seed)
+    n = min(limit, 64)
+    ids = rng.choice(N, size=n, replace=False).astype(np.int64)
+    scores = np.sort(rng.random(n).astype(np.float32))[::-1]
+    return ids, M.minmax_normalize(scores)
+
+
+def _oracle(corpus, emb, always_mask=False):
+    ids, matrix, ts = corpus
+    pf = PrefilterRouter(mask_threshold=0.0) if always_mask else None
+    return VectorCache(ids, matrix, ts, emb, prefilter=pf, lexical_fn=_lex)
+
+
+def _group(corpus, **kw):
+    ids, matrix, ts = corpus
+    kw.setdefault("n_shards", 3)
+    kw.setdefault("transport", "inline")
+    return ProcessGroup.build(ids, matrix, ts, **kw)
+
+
+def _parse(vc, tokens):
+    return grammar.parse(tokens, vc.embed_fn, vc.embeddings_for_ids,
+                         vc.lexical_fn)
+
+
+TOKEN_SHAPES = [
+    "similar:server lifecycle pool:60",
+    "similar:session handling suppress:landing page pool:60",
+    "similar:retry logic decay:21 pool:60",
+    "similar:cache eviction suppress:website design decay:30 pool:64",
+    "similar:error handling diverse pool:48",
+    "similar:auth keyword:token fuse:weighted,0.6 pool:40",
+    "similar:auth keyword:token fuse:rrf pool:40",
+]
+
+
+# -- bf16 codec -----------------------------------------------------------
+
+
+def test_bf16_roundtrip():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((257, DIM)).astype(np.float32)
+    codes = pack_bf16(x)
+    assert codes.dtype == np.uint16 and codes.shape == x.shape
+    dec = unpack_bf16(codes)
+    # decode == truncate-to-bf16 exactly (low 16 mantissa bits zeroed)
+    want = (x.view(np.uint32) & np.uint32(0xFFFF0000)).view(np.float32)
+    np.testing.assert_array_equal(dec, want)
+    # codes survive a decode->re-encode cycle bit-for-bit
+    np.testing.assert_array_equal(pack_bf16(dec), codes)
+    # reusable scratch path
+    scratch = np.empty(codes.shape, dtype=np.uint32)
+    np.testing.assert_array_equal(unpack_bf16(codes, out=scratch), want)
+
+
+def test_top_idx_deterministic_ties():
+    rng = np.random.default_rng(1)
+    scores = rng.integers(0, 40, 500).astype(np.float32)  # heavy ties
+    for k in (1, 7, 40, 250, 499, 500):
+        got = top_idx(scores, k)
+        want = np.argsort(-scores, kind="stable")[:k]
+        np.testing.assert_array_equal(got, want)
+
+
+# -- group vs monolith parity --------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["inline", "thread"])
+def test_group_matches_monolith(corpus, emb, transport):
+    vc = _oracle(corpus, emb)
+    with _group(corpus, transport=transport) as g:
+        for tokens in TOKEN_SHAPES:
+            plan = _parse(vc, tokens)
+            a = g.search_plan(plan, now=NOW)
+            b = vc.search_plan(plan, now=NOW, engine="fused-numpy")
+            assert a == b, f"mismatch for {tokens!r}"
+
+
+def test_group_segmentations_and_tombstones(corpus, emb):
+    ids, matrix, ts = corpus
+    vc = _oracle(corpus, emb)
+    with _group(corpus) as g:
+        # grow both sides in aligned slices (96 and 192 rows: per-shard
+        # slices of 32/64 rows) -> multiple sealed segments per shard
+        for extra, off in ((96, 1000), (192, 2000)):
+            eids = np.arange(off, off + extra, dtype=np.int64)
+            emat = emb.embed_batch(_texts(extra, offset=off))
+            ets = np.linspace(NOW - 40 * 86400.0, NOW - 7200.0, extra)
+            vc.store.append(eids, emat, ets)
+            g.append(eids, emat, ets)
+        # tombstones: full-segment GEMMs are unaffected by liveness, so
+        # any spread works; hit every shard and every segment
+        dead = ([int(i) for i in range(0, 90, 5)]
+                + [1000 + i for i in range(0, 40, 7)]
+                + [2000 + i for i in range(0, 150, 11)])
+        assert vc.store.delete(dead) == g.delete(dead) == len(dead)
+        assert g.n_live == vc.store.n_live
+        for tokens in TOKEN_SHAPES:
+            plan = _parse(vc, tokens)
+            a = g.search_plan(plan, now=NOW)
+            b = vc.search_plan(plan, now=NOW, engine="fused-numpy")
+            assert a == b, f"mismatch for {tokens!r}"
+
+
+def test_group_candidate_masks(corpus, emb):
+    # always-mask oracle: the default router would gather sharp filters
+    # into a scratch matrix whose tail-kernel low bits diverge
+    vc = _oracle(corpus, emb, always_mask=True)
+    rng = np.random.default_rng(7)
+    with _group(corpus) as g:
+        for frac in (0.5, 0.3):
+            cand = rng.choice(N, size=int(N * frac), replace=False)
+            for tokens in TOKEN_SHAPES:
+                plan = _parse(vc, tokens)
+                a = g.search_plan(plan, list(cand), now=NOW)
+                b = vc.search_plan(plan, list(cand), now=NOW,
+                                   engine="fused-numpy")
+                assert a == b, f"mismatch for {tokens!r} @ {frac}"
+        # empty candidate set -> empty result, not an error
+        plan = _parse(vc, TOKEN_SHAPES[0])
+        assert g.search_plan(plan, [], now=NOW) == []
+
+
+def test_group_diverse_lambda_sweep(corpus, emb):
+    vc = _oracle(corpus, emb)
+    with _group(corpus) as g:
+        base = _parse(vc, "similar:error handling diverse pool:48")
+        for lam in (0.0, 0.3, 0.7, 1.0):
+            plan = dataclasses.replace(
+                base, diverse=M.DiverseSpec(lam=lam))
+            a = g.search_plan(plan, now=NOW)
+            b = vc.search_plan(plan, now=NOW, engine="fused-numpy")
+            assert a == b, f"mismatch at lambda={lam}"
+
+
+def test_group_cross_shard_tie_order(corpus, emb):
+    """Exact duplicate rows in different shards: global order must be the
+    monolith's insertion order (rank merge), asserted on a plan whose
+    top-k actually contains both tie members."""
+    vc = _oracle(corpus, emb)
+    with _group(corpus) as g:
+        tokens = f"similar:{_texts(1)[0]} pool:80"  # query == row 0's text
+        plan = _parse(vc, tokens)
+        a = g.search_plan(plan, now=NOW)
+        b = vc.search_plan(plan, now=NOW, engine="fused-numpy")
+        assert a == b
+        pos = {int(i): p for p, (i, _) in enumerate(a)}
+        assert 0 in pos and 407 in pos, "tie pair missing from top-80"
+        assert pos[0] < pos[407], "tie must resolve by insertion order"
+
+
+def test_group_fuse_filter_parity(corpus, emb):
+    """fuse:filter promotes the FTS hit set to the Phase-1 candidate set
+    on both sides (satellite: selectivity crossover for the lexical leg)."""
+    vc = _oracle(corpus, emb, always_mask=True)
+    with _group(corpus) as g:
+        for tokens in ("similar:auth keyword:token fuse:filter pool:40",
+                       "similar:auth keyword:token fuse:filter,0.8 pool:40"):
+            plan = _parse(vc, tokens)
+            a = g.search_plan(plan, now=NOW)
+            b = vc.search_plan(plan, now=NOW, engine="fused-numpy")
+            assert a == b, f"mismatch for {tokens!r}"
+            got = {int(i) for i, _ in a}
+            hits = set(int(i) for i in plan.lexical.ids)
+            assert got <= hits, "fuse:filter must restrict to FTS hits"
+
+
+def test_group_k_truncation(corpus, emb):
+    vc = _oracle(corpus, emb)
+    with _group(corpus) as g:
+        plan = _parse(vc, "similar:server lifecycle pool:60")
+        full = g.search_plan(plan, now=NOW)
+        assert len(full) == 60
+        assert g.search_plan(plan, now=NOW, k=10) == full[:10]
+        assert len(g.search_plan(plan, now=NOW, k=10_000)) == g.n_live
+
+
+# -- process transport ----------------------------------------------------
+
+
+def test_process_transport_parity(emb):
+    ids = np.arange(128, dtype=np.int64)
+    matrix = emb.embed_batch(_texts(128))
+    ts = np.linspace(NOW - 30 * 86400.0, NOW - 3600.0, 128)
+    vc = VectorCache(ids, matrix, ts, emb, lexical_fn=_lex)
+    with ProcessGroup.build(ids, matrix, ts, n_shards=2,
+                            transport="process") as g:
+        for tokens in ("similar:server lifecycle pool:40",
+                       "similar:retry logic decay:21 diverse pool:32"):
+            plan = _parse(vc, tokens)
+            a = g.search_plan(plan, now=NOW)
+            b = vc.search_plan(plan, now=NOW, engine="fused-numpy")
+            assert a == b, f"mismatch for {tokens!r}"
+        # mutations cross the pipe too
+        g.delete([0, 1, 2, 3])
+        vc.store.delete([0, 1, 2, 3])
+        plan = _parse(vc, "similar:server lifecycle pool:40")
+        assert (g.search_plan(plan, now=NOW)
+                == vc.search_plan(plan, now=NOW, engine="fused-numpy"))
+
+
+# -- bf16 scoring mode ----------------------------------------------------
+
+
+def test_bf16_group_quality_and_fallback(corpus, emb):
+    ids, matrix, ts = corpus
+    vc = _oracle(corpus, emb, always_mask=True)
+    with _group(corpus, dtype="bf16") as g, _group(corpus) as g32:
+        plan = _parse(vc, "similar:server lifecycle decay:21 pool:60")
+        b16 = g.search_plan(plan, now=NOW, k=20)
+        f32 = g32.search_plan(plan, now=NOW, k=20)
+        top = {int(i) for i, _ in b16} & {int(i) for i, _ in f32}
+        assert len(top) >= 15, f"bf16 top-20 overlap too low: {len(top)}"
+        # candidate sets disable the packed fast path -> exact f32 parity
+        cand = [int(i) for i in ids[::2]]
+        a = g.search_plan(plan, cand, now=NOW)
+        b = vc.search_plan(plan, cand, now=NOW, engine="fused-numpy")
+        assert a == b
+        st = g.stats()
+        for s in st["shards"]:
+            assert s["dtype"] == "bf16"
+            assert 0 < s["codes_bytes"] == s["matrix_bytes"] // 2
+            assert s["scoring_bytes"] in (s["codes_bytes"],
+                                          s["matrix_bytes"])
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "f32b"])
+def test_fast_path_decay_requires_timestamps(emb, dtype):
+    ids = np.arange(64, dtype=np.int64)
+    matrix = emb.embed_batch(_texts(64))
+    vc = VectorCache(ids, matrix, None, emb)
+    with ProcessGroup.build(ids, matrix, n_shards=2, dtype=dtype) as g:
+        plan = _parse(vc, "similar:x decay:14")
+        with pytest.raises(ValueError, match="decay"):
+            g.search_plan(plan, now=NOW)
+
+
+# -- f32b blocked single-stream mode --------------------------------------
+
+
+def test_f32b_group_quality_and_fallback(corpus, emb):
+    ids, matrix, ts = corpus
+    vc = _oracle(corpus, emb, always_mask=True)
+    with _group(corpus, dtype="f32b") as g, _group(corpus) as g32:
+        plan = _parse(vc, "similar:server lifecycle decay:21 pool:60")
+        fast = g.search_plan(plan, now=NOW, k=20)
+        exact = g32.search_plan(plan, now=NOW, k=20)
+        # same rows, same formula — only final-ulp GEMM accumulation
+        # order differs, so rankings agree up to boundary near-ties
+        top = {int(i) for i, _ in fast} & {int(i) for i, _ in exact}
+        assert len(top) >= 18, f"f32b top-20 overlap too low: {len(top)}"
+        got = np.array([s for _, s in fast], dtype=np.float32)
+        want = dict(exact)
+        ref = np.array([want.get(int(i), np.nan) for i, _ in fast],
+                       dtype=np.float32)
+        mask = ~np.isnan(ref)
+        np.testing.assert_allclose(got[mask], ref[mask], atol=1e-5)
+        # candidate sets disable the blocked fast path -> exact parity
+        cand = [int(i) for i in ids[::2]]
+        a = g.search_plan(plan, cand, now=NOW)
+        b = vc.search_plan(plan, cand, now=NOW, engine="fused-numpy")
+        assert a == b
+        st = g.stats()
+        for s in st["shards"]:
+            assert s["dtype"] == "f32b"
+            assert s["codes_bytes"] == 0  # no packed codes in this mode
+            # the live view is a zero-copy segment reference here
+            assert s["scoring_bytes"] == s["matrix_bytes"]
+
+
+def test_f32b_group_mutations_rebuild_view(corpus, emb):
+    ids, matrix, ts = corpus
+    vc = _oracle(corpus, emb)
+    with _group(corpus, dtype="f32b") as g:
+        plan = _parse(vc, "similar:session handling pool:48")
+        g.search_plan(plan, now=NOW)
+        # tombstone a spread of rows and append a fresh slice: the live
+        # view must rebuild (gather path) and stay in ranking agreement
+        # with the exact monolith over the same mutations
+        dead = [int(i) for i in ids[5:200:7]]
+        g.delete(dead)
+        vc.store.delete(dead)
+        new_ids = np.arange(5000, 5000 + 96, dtype=np.int64)
+        new_mat = emb.embed_batch(_texts(96, offset=600))
+        new_ts = np.full(96, NOW - 7200.0)
+        g.append(new_ids, new_mat, new_ts)
+        vc.store.append(new_ids, new_mat, new_ts)
+        fast = g.search_plan(plan, now=NOW, k=20)
+        exact = vc.search_plan(plan, now=NOW, engine="fused-numpy")[:20]
+        top = {int(i) for i, _ in fast} & {int(i) for i, _ in exact}
+        assert len(top) >= 18
+        assert not ({int(i) for i, _ in fast} & set(dead))
+        for s in g.stats()["shards"]:
+            # gathered live view: dead rows dropped from scoring bytes
+            assert 0 < s["scoring_bytes"] < s["matrix_bytes"]
+
+
+def test_f32b_batched_plans_agree(corpus, emb):
+    vc = _oracle(corpus, emb)
+    plans = [_parse(vc, t) for t in
+             ("similar:server lifecycle pool:60",
+              "similar:retry logic decay:21 pool:60")]
+    with _group(corpus, dtype="f32b") as g:
+        batch = g.search_plan_batch(plans, [None, None], now=NOW,
+                                    ks=[20, 20])
+        for plan, got in zip(plans, batch):
+            want = vc.search_plan(plan, now=NOW, engine="fused-numpy")[:20]
+            top = {int(i) for i, _ in got[:20]} & {int(i) for i, _ in want}
+            assert len(top) >= 18
+
+
+# -- replicas, stats, validation -----------------------------------------
+
+
+def test_replicas_round_robin(corpus, emb):
+    vc = _oracle(corpus, emb)
+    with _group(corpus, replicas=2) as g:
+        plan = _parse(vc, "similar:server lifecycle pool:60")
+        want = vc.search_plan(plan, now=NOW, engine="fused-numpy")
+        # consecutive searches hit alternating replicas; both exact
+        assert g.search_plan(plan, now=NOW) == want
+        assert g.search_plan(plan, now=NOW) == want
+        # mutations fan to every replica
+        g.delete([10, 11])
+        vc.store.delete([10, 11])
+        want = vc.search_plan(plan, now=NOW, engine="fused-numpy")
+        assert g.search_plan(plan, now=NOW) == want
+        assert g.search_plan(plan, now=NOW) == want
+        st = g.stats()
+        assert st["replicas"] == 2
+        assert len(st["shards"]) == 6  # 3 shards x 2 replicas
+        assert {s["replica"] for s in st["shards"]} == {0, 1}
+
+
+def test_group_stats_shape(corpus, emb):
+    vc = _oracle(corpus, emb)
+    with _group(corpus) as g:
+        plan = _parse(vc, "similar:server lifecycle pool:60")
+        g.search_plan(plan, now=NOW)
+        st = g.stats()
+        assert st["n_shards"] == 3 and st["live"] == N
+        assert st["searches"] == 1
+        assert st["last_fanout_ms"] >= 0 and st["last_merge_ms"] >= 0
+        rows = st["shards"]
+        assert len(rows) == 3 and sum(s["live"] for s in rows) == N
+        for s in rows:  # per-shard memory + latency ledger
+            assert s["matrix_bytes"] > 0 and s["scoring_bytes"] > 0
+            assert s["passes"] == 1 and s["last_pass_ms"] >= 0
+
+
+def test_group_append_validation(corpus):
+    with _group(corpus) as g:
+        dup = np.array([5], dtype=np.int64)
+        vec = np.ones((1, DIM), dtype=np.float32)
+        with pytest.raises(ValueError, match="already live|duplicate"):
+            g.append(dup, vec, [NOW])
+        with pytest.raises(ValueError):
+            g.append(np.array([9000, 9001]), np.ones((2, DIM), np.float32),
+                     [NOW])  # misaligned timestamps
+        with pytest.raises(ValueError):
+            g.append(np.array([9000]), np.ones((1, 16), np.float32), [NOW])
+
+
+def test_group_compact(corpus, emb):
+    with _group(corpus) as g:
+        g.delete(list(range(0, 240)))
+        n = g.n_live
+        folded = g.compact(min_live_fraction=0.9)
+        assert folded == 3  # one fold per shard
+        assert g.n_live == n
+        st = g.stats()
+        assert all(s["rows"] == s["live"] for s in st["shards"])
+
+
+# -- serve-layer routing --------------------------------------------------
+
+
+@pytest.fixture()
+def service():
+    import sqlite3
+
+    from repro.data.corpus import build_database, generate_corpus
+    from repro.serve.retrieval import RetrievalService
+
+    e = HashEmbedder(DIM)
+    chunks = generate_corpus(n_chunks=N, n_sessions=24, seed=11)
+    conn = sqlite3.connect(":memory:", check_same_thread=False)
+    build_database(conn, chunks, e)
+    svc = RetrievalService(conn, dim=DIM, embedder=e, now=NOW)
+    yield svc
+    svc.close()
+
+
+SVC_TOKENS = [
+    "similar:server lifecycle pool:50",
+    "similar:session handling suppress:landing page decay:30 pool:64",
+    "similar:retry logic diverse pool:48",
+    "similar:cache keyword:server fuse:rrf pool:40",
+]
+
+
+def test_service_shard_group_routing(service):
+    oracle = [service.search(t, k=20) for t in SVC_TOKENS]
+    g = service.shard_group(n_shards=3, transport="inline")
+    assert g is service.shard_group()  # idempotent attach
+    for t, want in zip(SVC_TOKENS, oracle):
+        assert service.search(t, k=20) == want, f"mismatch for {t!r}"
+    st = service.stats()
+    assert len(st["shard_group"]["shards"]) == 3
+    service.close()
+    assert service._shard_group is None
+
+
+def test_service_shard_group_mutations(service):
+    g = service.shard_group(n_shards=3, transport="inline")
+    rows = [(10_000 + i, f"s{i % 4}", "text",
+             f"fresh server lifecycle note {i}", NOW - i * 3600.0,
+             i, "proj", None, None, None) for i in range(48)]
+    service.ingest(rows)          # 16 rows/shard, block-aligned
+    service.delete(list(range(0, 96, 2)))
+    assert g.n_live == service.cache.store.n_live
+    # group-routed search agrees with the group's own plan-level answer
+    res = service.search(SVC_TOKENS[0], k=20)
+    plan = _parse(service.cache, SVC_TOKENS[0])
+    assert res == g.search_plan(plan, now=NOW, k=20)
+    assert any(i >= 10_000 for i, _ in res)
+
+
+def test_service_engine_fans_out_to_group(service):
+    g = service.shard_group(n_shards=3, transport="inline")
+    direct = [service.search(t, k=20) for t in SVC_TOKENS]
+    eng = service.serving(max_batch=8, max_wait_ms=4.0)
+    assert eng.shard_group is g
+    with cf.ThreadPoolExecutor(8) as ex:
+        batched = list(ex.map(lambda t: service.search(t, k=20),
+                              SVC_TOKENS * 3))
+    # id-level contract (panel-width GEMM low bits; see module docstring)
+    for t, got, want in zip(SVC_TOKENS * 3, batched,
+                            direct * 3):
+        assert [i for i, _ in got] == [i for i, _ in want], \
+            f"engine mismatch for {t!r}"
+    assert eng.batches_served < 12  # batching actually batched
