@@ -28,7 +28,11 @@ a fusion bias that stops riding the fused pass and falls back to a
 second retrieval gates) and the ``scale_1m`` section (the cross-process
 shard-group corpus pass — rows keyed by scoring mode, always present at
 the smoke scale so dropping or regressing the sharded path gates even
-when CI cannot afford the full million-chunk corpus) — is
+when CI cannot afford the full million-chunk corpus) and the
+``cohort_throughput`` section (cohort-streamed scoring: the Q-query
+shard-group panel pass vs the serial per-query comparator plus the
+closed-loop serving rows, so both an un-amortized corpus stream and a
+broken batch window gate) — is
 compared against the committed ``BENCH_pem.smoke.json`` baseline; the gate
 fails on a > ``FLEX_BENCH_TOL`` (default 1.5) ratio for ANY backend that
 is not recorded as skipped in the baseline.  A backend present in the
@@ -129,7 +133,8 @@ def compare_all(
     notes: List[str] = []
     for section in ("backends", "delta_backends", "serve_throughput",
                     "prefilter_backends", "diverse_backends",
-                    "filter_panel", "hybrid_backends", "scale_1m"):
+                    "filter_panel", "hybrid_backends", "scale_1m",
+                    "cohort_throughput"):
         if section not in baseline:
             continue
         if section != "backends" and section not in new:
@@ -150,7 +155,8 @@ def merge_min(snapshots: List[Dict]) -> Dict:
     merged: Dict = dict(snapshots[0])
     for section in ("backends", "delta_backends", "serve_throughput",
                     "prefilter_backends", "diverse_backends",
-                    "filter_panel", "hybrid_backends", "scale_1m"):
+                    "filter_panel", "hybrid_backends", "scale_1m",
+                    "cohort_throughput"):
         backends: Dict[str, Dict] = {}
         for snap in snapshots:
             for name, row in snap.get(section, {}).items():

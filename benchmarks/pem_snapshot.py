@@ -68,9 +68,12 @@ sustained QPS and client-side p50/p99 latency per load, the engine's
 ``overlapped_batches`` counter, and ``total_ms`` (the whole sweep's wall
 time) — the number the regression gate diffs.
 
-Two extra rows, ``sync_core_emudev`` / ``pipelined_emudev``, run the
-same closed-loop workload through an EMULATED two-stage pipeline with
-fixed stage durations: the scoring pass models an accelerator busy for
+Three extra rows — ``sync_core_emudev`` / ``pipelined_emudev`` /
+``async_emudev`` (the pipelined scheduler with real async device
+dispatch: the serve loop stays live during the device pass, so the
+admission window keeps filling and ``overlapped_collects`` counts the
+holds) — run the same closed-loop workload through an EMULATED
+two-stage pipeline with fixed stage durations: the scoring pass models an accelerator busy for
 ``EMUDEV_DEVICE_MS`` (wall time, zero host CPU — what a TPU pass looks
 like from the host) and the host tail models ``EMUDEV_TAIL_MS`` of
 finishing work on a dedicated core.  With deterministic stages the two
@@ -94,6 +97,21 @@ half-resident-bytes memory claim plus ranking overlap.  Gated on
 ``total_ms`` per row; ``FLEX_SCALE_1M=1`` runs the true 1M+ corpus
 (the paper's 82 ms budget) where the smoke scale only pins the
 trajectory and the oracle contract.
+
+``cohort_throughput`` measures COHORT-STREAMED scoring: the Q-query
+panel pass (``search_plan_batch`` -> ``ShardWorker._fast_pass`` Q>1)
+that streams each shard's corpus from RAM ONCE per cohort instead of
+once per query, against the serial per-query ``f32b`` comparator over
+the same composed three-modulation queries — rankings bit-identical by
+construction (the cohort pass is a loop reordering of the serial one)
+and checked before timing, the one-stream-per-shard-per-cohort claim
+counter-pinned via ``corpus_streams``.  Two engine rows ride along:
+the continuous-batching engine under closed-loop load with cohorts
+disabled (``max_batch=1``) vs enabled (``max_batch=16``), QPS +
+p50/p99 per row.  Every row gates on ``total_ms``; the q16 row records
+``speedup_vs_serial`` (the >=3x headline lives at ``FLEX_SCALE_1M=1``
+scale — at smoke scale the corpus fits cache and the row only pins the
+trajectory).
 
 ``FLEX_BENCH_OUT`` overrides the output path (the CI gate writes the
 smoke-scale run to a scratch file so the committed full-scale snapshot
@@ -771,6 +789,155 @@ def _bench_scale1m():
     return n_target, rows
 
 
+COHORT_QS = (4, 16)
+COHORT_K = 50
+COHORT_SERVE_REQUESTS = 32
+
+
+def _cohort_query_tokens(i: int) -> str:
+    """Composed three-modulation query i of the cohort (similar +
+    suppress + decay — the scale_1m headline shape, distinct per slot)."""
+    return (f"similar:how the system works architecture variant {i} "
+            "suppress:website landing page design decay:30 pool:500")
+
+
+def _best(fn, repeats: int = 3, warmup: int = 1) -> float:
+    """Best-of wall seconds: the cohort/serial RATIO is the claim here,
+    and closed-loop noise on a quota-throttled runner is one-sided (a
+    contended run only reads slow), so min — not median — estimates the
+    uncontended pass both sides of the ratio deserve."""
+    import time as _time
+
+    for _ in range(warmup):
+        fn()
+    best = None
+    for _ in range(repeats):
+        t0 = _time.perf_counter()
+        fn()
+        dt = _time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return best
+
+
+def _bench_cohort_throughput():
+    """Cohort-streamed scoring: amortize the corpus stream across Q.
+
+    The shard group scores a Q-query cohort (``search_plan_batch``) in
+    ONE blocked pass per shard — every L2-resident corpus block is
+    scored for all Q plans before the next block loads, so the corpus
+    streams from RAM once per cohort instead of once per query.  The
+    pass is a LOOP REORDERING of the serial one (identical per-plan
+    GEMMs on identical blocks), so rankings AND scores are
+    bit-identical — checked before timing (``bit_identical``), with the
+    bandwidth claim counter-pinned (``corpus_streams_per_cohort`` == 1).
+
+    Rows, each gated on ``total_ms``:
+
+    * ``serial_f32b`` — the comparator: ``COHORT_QS[-1]`` composed
+      three-modulation queries through ``search_plan`` one at a time.
+    * ``cohort_f32b_q4`` / ``cohort_f32b_q16`` — the same queries as
+      one cohort; the q16 row records ``speedup_vs_serial`` (the >=3x
+      headline at ``FLEX_SCALE_1M=1`` scale, where the corpus is
+      RAM-resident; at smoke scale it only pins the trajectory).
+    * ``serve_serial`` / ``serve_cohort`` — the continuous-batching
+      engine under closed-loop load with cohorts disabled
+      (``max_batch=1``) vs enabled (``max_batch=16``): the adaptive
+      window + async dispatch turn concurrent arrivals into device
+      cohorts, so the QPS gap is the end-to-end serving win.
+    """
+    from repro.core.vectorcache import VectorCache
+    from repro.dist.procgroup import ProcessGroup
+    from repro.serve.engine import BatchedRetrievalEngine
+
+    full = os.environ.get("FLEX_SCALE_1M", "") not in ("", "0")
+    transport = _scale1m_transport()
+    if full:
+        n_target = SCALE1M_FULL_N
+    else:
+        n_target = max(16_000, int(SCALE1M_FULL_N * SCALE))
+        n_target -= n_target % (SCALE1M_SHARDS * 32)
+    ids, matrix, stamps, emb = _scale1m_corpus(n_target)
+    vc = VectorCache(ids, matrix, stamps, emb, normalized=True)
+    q_max = max(COHORT_QS)
+    plans = [parse(_cohort_query_tokens(i), emb, vc.embeddings_for_ids)
+             for i in range(q_max)]
+
+    rows = {}
+    with ProcessGroup.build(ids, matrix, stamps, normalized=True,
+                            n_shards=SCALE1M_SHARDS, transport=transport,
+                            dtype="f32b") as g:
+        serial_out = [g.search_plan(p, now=NOW, k=COHORT_K) for p in plans]
+        t_serial = _best(lambda: [g.search_plan(p, now=NOW, k=COHORT_K)
+                                  for p in plans])
+        rows["serial_f32b"] = {
+            "n": n_target,
+            "queries": q_max,
+            "transport": transport,
+            "total_ms": round(t_serial * 1e3, 3),
+            "per_query_ms": round(t_serial * 1e3 / q_max, 3),
+            "qps": round(q_max / t_serial, 1),
+        }
+        emit("pem/cohort_serial_f32b", t_serial,
+             f"n={n_target} {q_max} queries one at a time")
+
+        for q in COHORT_QS:
+            sub = plans[:q]
+            cohort_out = g.search_plan_batch(sub, [None] * q, now=NOW,
+                                             ks=[COHORT_K] * q)
+            identical = (cohort_out == serial_out[:q])
+            before = {s["shard"]: s["corpus_streams"]
+                      for s in g.stats()["shards"]}
+            g.search_plan_batch(sub, [None] * q, now=NOW, ks=[COHORT_K] * q)
+            streams = max(s["corpus_streams"] - before[s["shard"]]
+                          for s in g.stats()["shards"])
+            t_cohort = _best(lambda: g.search_plan_batch(
+                sub, [None] * q, now=NOW, ks=[COHORT_K] * q))
+            row = {
+                "n": n_target,
+                "q": q,
+                "total_ms": round(t_cohort * 1e3, 3),
+                "per_query_ms": round(t_cohort * 1e3 / q, 3),
+                "qps": round(q / t_cohort, 1),
+                "bit_identical": identical,
+                "corpus_streams_per_cohort": streams,
+            }
+            if q == q_max:
+                row["speedup_vs_serial"] = round(t_serial / t_cohort, 2)
+            rows[f"cohort_f32b_q{q}"] = row
+            emit(f"pem/cohort_f32b_q{q}", t_cohort,
+                 f"n={n_target} streams/cohort={streams} "
+                 f"identical={identical} "
+                 f"speedup={t_serial / t_cohort:.2f}x")
+
+    queries = [_cohort_query_tokens(i).replace("pool:500", "pool:200")
+               for i in range(COHORT_SERVE_REQUESTS)]
+    for mode, max_batch in (("serve_serial", 1), ("serve_cohort", 16)):
+        engine = BatchedRetrievalEngine(
+            vc, max_batch=max_batch, max_wait_ms=2.0, now=NOW,
+            engine="fused", pipeline=True)
+        try:
+            engine.search(queries[0], 10)  # warm plan/device caches
+            wall, lat_ms = _closed_loop(engine, queries, load=16, k=10)
+            st = engine.stats()
+            rows[mode] = {
+                "total_ms": round(wall * 1e3, 3),
+                "requests": COHORT_SERVE_REQUESTS,
+                "max_batch": max_batch,
+                "qps": round(COHORT_SERVE_REQUESTS / wall, 1),
+                "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+                "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+                "batches_served": engine.batches_served,
+                "overlapped_collects": engine.overlapped_collects,
+                "window_ms": st["window_ms"],
+            }
+            emit(f"pem/cohort_{mode}", wall,
+                 f"{COHORT_SERVE_REQUESTS} reqs "
+                 f"qps={rows[mode]['qps']} batches={engine.batches_served}")
+        finally:
+            engine.close()
+    return rows
+
+
 SERVE_LOADS = (4, 16, 48)     # concurrent closed-loop clients per level
 SERVE_REQUESTS = 64           # requests per load level
 SERVE_TOPICS = (
@@ -938,11 +1105,19 @@ def _bench_serve_emudev():
     ]
 
     rows = {}
-    for mode, pipelined in (("sync_core_emudev", False),
-                            ("pipelined_emudev", True)):
+    # async_emudev pins the HOST-FREE overlap: with async dispatch the
+    # serve loop itself stays live during the 40 ms device sleep, so the
+    # next batch's admission window fills while the device is busy
+    # (overlapped_collects) and the tail still overlaps the next pass
+    # (overlapped_batches) — same max(device, tail) wall, counted holds.
+    for mode, kw in (("sync_core_emudev", dict(pipeline=False)),
+                     ("pipelined_emudev", dict(pipeline=True,
+                                               async_dispatch=False)),
+                     ("async_emudev", dict(pipeline=True,
+                                           async_dispatch=True))):
         engine = EmulatedTailEngine(
             cache, max_batch=EMUDEV_BATCH, max_wait_ms=4.0, now=NOW,
-            engine=EmulatedDeviceBackend(), pipeline=pipelined)
+            engine=EmulatedDeviceBackend(), **kw)
         try:
             engine.search(queries[0], 10)
             wall, lat_ms = _closed_loop(engine, queries, EMUDEV_REQUESTS,
@@ -959,6 +1134,7 @@ def _bench_serve_emudev():
                 "device_ms_per_batch": EMUDEV_DEVICE_MS,
                 "tail_ms_per_batch": EMUDEV_TAIL_MS,
                 "overlapped_batches": engine.overlapped_batches,
+                "overlapped_collects": engine.overlapped_collects,
                 "batches_served": engine.batches_served,
             }
         finally:
@@ -981,6 +1157,7 @@ def run() -> None:
     hybrid_rows = _bench_hybrid()
     serve_rows = _bench_serve()
     scale1m_n, scale1m_rows = _bench_scale1m()
+    cohort_rows = _bench_cohort_throughput()
     snapshot = {
         "bench": "pem_phase2_composed",
         "tokens": TOKENS,
@@ -998,6 +1175,7 @@ def run() -> None:
         "serve_throughput": serve_rows,
         "scale_1m": scale1m_rows,
         "scale_1m_chunks": scale1m_n,
+        "cohort_throughput": cohort_rows,
     }
     SNAPSHOT_PATH.write_text(json.dumps(snapshot, indent=2) + "\n")
     print(f"# wrote {SNAPSHOT_PATH}", flush=True)

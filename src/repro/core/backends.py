@@ -89,6 +89,7 @@ __all__ = [
     "selection_width",
     "finalize_candidates",
     "score_select_segments",
+    "score_select_cohort",
     "score_select_prefiltered",
     "score_select_filter_panel",
     "finalize_segment_candidates",
@@ -347,7 +348,14 @@ class PlanStructure:
         device_mmr: bool = False,
         panel: bool = False,
         bias: bool = False,
+        cohort: bool = False,
     ) -> "PlanStructure":
+        """``cohort=True`` pow2-buckets the BATCH axis even without a
+        mask panel — the multi-query cohort path's trace bound: a stream
+        of varying admitted-batch sizes (Q = 3, then 5, then 4 ...) pads
+        into pow2 query-panel buckets and compiles one graph per bucket
+        instead of one per Q (padded columns carry zero queries and are
+        never sliced out into results)."""
         max_sup = max((len(p.suppress) for p in plans), default=0)
         w = max(widths, default=0)
         bucket = max(_pow2_bucket(n_rows), 1)
@@ -358,7 +366,7 @@ class PlanStructure:
             k_max = max((min(max(k, 0), n_rows) for k in ks), default=0)
             mmr_k = min(max(_pow2_bucket(k_max), 1), width)
         return cls(
-            batch=(max(_pow2_bucket(len(plans)), 1) if panel
+            batch=(max(_pow2_bucket(len(plans)), 1) if (panel or cohort)
                    else len(plans)),
             n_rows=bucket,
             has_decay=any(p.decay is not None for p in plans),
@@ -676,9 +684,17 @@ class ExecutionBackend:
         mask: Optional[np.ndarray] = None,
         fused_mmr: Optional[bool] = None,
         score_bias: Optional[np.ndarray] = None,
+        cohort: bool = False,
     ) -> List[Candidates]:
         """Fused score->select: per-plan ``(indices, scores)`` of the top
         ``selection_width(plan, k, N)`` candidates, descending by score.
+
+        ``cohort=True`` marks a multi-query cohort call (several admitted
+        queries folded into one panel): device backends pow2-bucket the
+        batch axis of their :class:`PlanStructure` key so a stream of
+        varying cohort sizes compiles one graph per bucket instead of one
+        per Q.  The host path has no compiled executables to bucket, so
+        the flag is accepted (one signature everywhere) and ignored.
 
         ``score_bias`` is an optional additive score panel — (N,) shared
         by every plan or (N, B) per-plan — added to the modulated scores
@@ -855,7 +871,7 @@ class JitJaxBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         )
 
     def score_select(self, matrix, days_ago, plans, ks, *, mask=None,
-                     fused_mmr=None, score_bias=None):
+                     fused_mmr=None, score_bias=None, cohort=False):
         for p in plans:
             _require_days(p, days_ago)
         n = matrix.shape[0]
@@ -866,7 +882,8 @@ class JitJaxBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         panel2d = mask is not None and mask.ndim == 2
         structure = PlanStructure.of(plans, widths, n, ks=ks,
                                      device_mmr=use_mmr, panel=panel2d,
-                                     bias=score_bias is not None)
+                                     bias=score_bias is not None,
+                                     cohort=cohort)
         fn = self.plan_cache.get(structure)
         pad = structure.n_rows - n
         q_pre, q_sup, half_lives, lams = _panel_inputs(plans, structure,
@@ -950,7 +967,9 @@ class PallasBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         return np.asarray(panel)
 
     def score_select(self, matrix, days_ago, plans, ks, *, mask=None,
-                     fused_mmr=None, score_bias=None):
+                     fused_mmr=None, score_bias=None, cohort=False):
+        # the kernels take exact shapes (no executable cache keyed on
+        # batch), so the cohort flag has nothing to bucket here
         import jax.numpy as jnp
 
         from repro.kernels.topk.ops import topk
@@ -1181,7 +1200,7 @@ class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         return out[:n]
 
     def score_select(self, matrix, days_ago, plans, ks, *, mask=None,
-                     fused_mmr=None, score_bias=None):
+                     fused_mmr=None, score_bias=None, cohort=False):
         import jax
 
         for p in plans:
@@ -1195,7 +1214,8 @@ class ShardedBackend(_DeviceMMRMixin, _DeviceMatrixMixin, ExecutionBackend):
         panel2d = mask is not None and mask.ndim == 2
         structure = PlanStructure.of(plans, widths, n, ks=ks,
                                      device_mmr=use_mmr, panel=panel2d,
-                                     bias=score_bias is not None)
+                                     bias=score_bias is not None,
+                                     cohort=cohort)
         fn = self.plan_cache.get(structure)
         # row grid: pow2 bucket (the PlanCache key), then up to a shard
         # multiple — derived from the bucket alone, so one trace per bucket
@@ -1345,6 +1365,7 @@ def score_select_segments(
     device_mmr: Optional[bool] = None,
     counters: Optional[FusedCounters] = None,
     score_bias: Optional[Sequence[Optional[np.ndarray]]] = None,
+    cohort: bool = False,
 ) -> List[Candidates]:
     """Fused score->select over a SEGMENTED corpus (repro.core.segments).
 
@@ -1462,7 +1483,8 @@ def score_select_segments(
         out = backend.score_select(
             seg.matrix, seg.days_ago(now), plans,
             [min(k, n_el) for k in ks], fused_mmr=device_mmr,
-            score_bias=None if score_bias is None else score_bias[i])
+            score_bias=None if score_bias is None else score_bias[i],
+            cohort=cohort)
         if use_mmr and counters is not None:
             counters.device_mmr += sum(
                 1 for p, k in zip(plans, ks)
@@ -1484,7 +1506,8 @@ def score_select_segments(
     for i, seg, m, _ in scored:
         sel = backend.score_select(
             seg.matrix, seg.days_ago(now), seg_plans, widths, mask=m,
-            score_bias=None if score_bias is None else score_bias[i])
+            score_bias=None if score_bias is None else score_bias[i],
+            cohort=cohort)
         parts.append([(idx + offsets[i], vals) for idx, vals in sel])
 
     merged: List[Candidates] = []
@@ -1521,6 +1544,39 @@ def score_select_segments(
     return merged
 
 
+def score_select_cohort(
+    backend: Union[str, "ExecutionBackend"],
+    segments: Sequence,
+    plans: Sequence[M.ModulationPlan],
+    ks: Sequence[int],
+    *,
+    now: Optional[float] = None,
+    candidate_masks: Optional[Sequence[Optional[np.ndarray]]] = None,
+    device_mmr: Optional[bool] = None,
+    counters: Optional[FusedCounters] = None,
+    score_bias: Optional[Sequence[Optional[np.ndarray]]] = None,
+) -> List[Candidates]:
+    """Cohort-panel score->select: one device pass for a MULTI-QUERY batch.
+
+    ``plans`` here is a cohort — one plan per admitted query, folded into
+    one fused ``(d, 2·Q)`` query panel so each segment matrix streams
+    through device memory once per cohort instead of once per query.
+    Execution is :func:`score_select_segments` with ``cohort=True``, which
+    pow2-buckets the BATCH axis of the :class:`PlanStructure` cache key on
+    device backends: a stream of varying cohort sizes (Q=3, Q=5, Q=7 …)
+    compiles one executable per pow2 bucket, padded columns carry zero
+    queries and are sliced away.  Rankings are bit-identical to Q serial
+    single-plan calls on the same snapshot — cohort mode reorders loops,
+    never arithmetic.  The cross-process analogue (one RPC, one corpus
+    stream per shard per cohort) is ``dist.procgroup.ProcessGroup``'s
+    ``search_plan_batch``.
+    """
+    return score_select_segments(
+        backend, segments, plans, ks, now=now,
+        candidate_masks=candidate_masks, device_mmr=device_mmr,
+        counters=counters, score_bias=score_bias, cohort=True)
+
+
 @dataclasses.dataclass
 class PrefilterRouter:
     """Selectivity-aware router for Phase-1 filtered retrieval.
@@ -1540,24 +1596,64 @@ class PrefilterRouter:
       filter is sharp (a few hundred rows out of a million).
 
     The router picks per query on REQUESTED selectivity — unique
-    candidate count over live rows — against ``mask_threshold`` (the
-    measured crossover lives in ``BENCH_pem.json``'s
-    ``prefilter_backends`` scenario; tune the threshold per deployment).
-    Counters are benign int/float bumps (same convention as the store's)
-    surfaced through ``RetrievalService.stats()["prefilter"]``.
+    candidate count over live rows — against the crossover threshold.
+    ``mask_threshold`` seeds it statically (the measured crossover lives
+    in ``BENCH_pem.json``'s ``prefilter_backends`` scenario); with
+    ``adaptive`` on, the router then LEARNS the crossover from its own
+    recorded timing samples: masked cost is bandwidth-bound in live rows
+    (≈ ``a·n_live``), gather cost is linear in candidates
+    (≈ ``b·n_candidates``), so masked wins once ``a·n_live ≤
+    b·n_candidates`` — i.e. at selectivity ≥ ``a/b``.  Until BOTH arms
+    have ``min_samples`` recorded passes the static seed stays in force,
+    and the learned value is clamped to [0.01, 0.9] so one degenerate
+    timing sample can't pin the router to a single arm.  Counters are
+    benign int/float bumps (same convention as the store's) surfaced
+    through ``RetrievalService.stats()["prefilter"]``.
     """
 
-    mask_threshold: float = 0.2  # selectivity at/above which masked wins
+    mask_threshold: float = 0.2  # static seed: selectivity where masked wins
+    adaptive: bool = True        # learn the crossover from timing samples
+    min_samples: int = 5         # per-arm passes before the learned value arms
     routed_masked: int = 0       # queries served by the masked-device path
     routed_gather: int = 0       # queries served by the gather-host path
     routed_panel: int = 0        # queries served by a batched (N, B) panel
     mask_build_ms: float = 0.0   # cumulative candidate-mask build time
+    masked_ms: float = 0.0       # cumulative masked-arm scoring time
+    masked_rows: int = 0         # cumulative live rows swept by masked passes
+    masked_samples: int = 0
+    gather_ms: float = 0.0       # cumulative gather-arm scoring time
+    gather_rows: int = 0         # cumulative candidate rows gathered+scored
+    gather_samples: int = 0
     # routed_* count QUERIES: a batched scoring call serving n folded
     # identical filters bumps by n (score_select_prefiltered's weight=),
     # and a panel pass serving a B-request cohort bumps routed_panel by B
 
+    def record_masked(self, ms: float, n_live: int) -> None:
+        if ms >= 0.0 and n_live > 0:
+            self.masked_ms += ms
+            self.masked_rows += n_live
+            self.masked_samples += 1
+
+    def record_gather(self, ms: float, n_candidates: int) -> None:
+        if ms >= 0.0 and n_candidates > 0:
+            self.gather_ms += ms
+            self.gather_rows += n_candidates
+            self.gather_samples += 1
+
+    def effective_threshold(self) -> float:
+        if (not self.adaptive
+                or self.masked_samples < self.min_samples
+                or self.gather_samples < self.min_samples
+                or not self.masked_rows or not self.gather_rows
+                or self.gather_ms <= 0.0):
+            return self.mask_threshold
+        a = self.masked_ms / self.masked_rows    # ms per live row swept
+        b = self.gather_ms / self.gather_rows    # ms per candidate gathered
+        return min(max(a / b, 0.01), 0.9)
+
     def use_masked(self, n_candidates: int, n_live: int) -> bool:
-        return n_live > 0 and n_candidates >= self.mask_threshold * n_live
+        return (n_live > 0
+                and n_candidates >= self.effective_threshold() * n_live)
 
     def use_panel(
         self,
@@ -1580,10 +1676,13 @@ class PrefilterRouter:
     def stats(self) -> Dict[str, Union[int, float]]:
         return {
             "threshold": self.mask_threshold,
+            "threshold_effective": round(self.effective_threshold(), 4),
             "routed_masked": self.routed_masked,
             "routed_gather": self.routed_gather,
             "routed_panel": self.routed_panel,
             "mask_build_ms": round(self.mask_build_ms, 3),
+            "masked_samples": self.masked_samples,
+            "gather_samples": self.gather_samples,
         }
 
 
@@ -1647,15 +1746,21 @@ def score_select_prefiltered(
         router.routed_masked += weight
         if matched == 0:
             return [_empty_candidates() for _ in plans]
-        return score_select_segments(
+        t0 = time.perf_counter()
+        out = score_select_segments(
             backend, segments, plans, ks, now=now, candidate_masks=masks,
             device_mmr=device_mmr, counters=counters,
             score_bias=score_bias)
+        # adaptive crossover: the masked arm's cost scales with the live
+        # rows it sweeps, regardless of how few candidates survive
+        router.record_masked((time.perf_counter() - t0) * 1e3, n_live)
+        return out
 
     router.routed_gather += weight
     rows = store.locate_rows(cand, segments)
     if rows.size == 0:
         return [_empty_candidates() for _ in plans]
+    t0 = time.perf_counter()
     sub = gather_rows(segments, rows)
     days = gather_days(segments, rows, now)
     ks_eff = [min(k, int(rows.size)) for k in ks]
@@ -1663,6 +1768,8 @@ def score_select_prefiltered(
                 else _gather_bias(score_bias, segments, rows))
     sel = backend.score_select(sub, days, plans, ks_eff,
                                fused_mmr=device_mmr, score_bias=sub_bias)
+    # the gather arm pays resolve+gather+upload+score per candidate row
+    router.record_gather((time.perf_counter() - t0) * 1e3, int(rows.size))
     if (counters is not None and backend.device_mmr
             and device_mmr is not False):
         counters.device_mmr += sum(

@@ -70,6 +70,7 @@ independent; parity suites run the same cases across all three.
 from __future__ import annotations
 
 import concurrent.futures as cf
+import functools
 import multiprocessing as mp
 import threading
 import time
@@ -125,6 +126,12 @@ class ShardWorker:
         self.passes = 0
         self.last_pass_ms = 0.0
         self.total_pass_ms = 0.0
+        # one blocked pass = ONE trip of this shard's corpus through RAM,
+        # whether it served one query or a whole cohort — the counter the
+        # cohort-throughput scenario pins (Q queries, one stream)
+        self.corpus_streams = 0
+        self.cohort_passes = 0   # blocked passes that served >1 plan
+        self.cohort_plans = 0    # plans served by those cohort passes
         # (store version, codes, global rows, timestamps) — rebuilt lazily
         # on mutation, like the VectorCache live view
         self._packed: Optional[Tuple] = None
@@ -295,12 +302,25 @@ class ShardWorker:
         return mat, rows, ts
 
     def _fast_pass(self, segs, plans, ks, now):
-        """Blocked single-stream panel pass over the live rows — the
-        exact fused-numpy formula (pre columns scaled by decay, plus sup
-        columns) evaluated one cache-resident row block at a time, so
-        every plan direction shares ONE trip through RAM.  ``f32b``
-        slices the live f32 rows directly; ``bf16`` decodes its packed
-        codes into a reusable scratch block first."""
+        """Blocked single-stream pass over the live rows: ONE trip of the
+        corpus through RAM serves every plan in the call.
+
+        Q == 1 keeps the original shape — one ``(d, 2)`` panel GEMM per
+        cache-resident block (pre column scaled by decay, plus the sup
+        column).  Q > 1 is COHORT mode: the block loop moves outermost
+        and every plan scores the SAME resident block with its own
+        ``(d, 2)`` panel before the stream advances, so the corpus
+        streams from RAM once per cohort instead of once per query.  The
+        cohort deliberately does NOT widen the GEMM to ``(d, 2Q)``: BLAS
+        per-column bits depend on the panel width (and on ragged tail
+        shapes), so a wide panel could not be bit-identical to the
+        serial pass — reordering the loops keeps every plan's GEMM call
+        (operand shapes, block boundaries, accumulation order) exactly
+        the serial pass's, which is what makes cohort rankings
+        bit-identical to Q serial queries.  The block is L2-resident, so
+        plan 2..Q hit cache, not RAM.  ``bf16`` decodes each packed
+        block into the f32 scratch ONCE per cohort (decode amortizes
+        across Q the same way the stream does)."""
         if self.dtype == "bf16":
             codes, rows, ts = self._packed_view(segs)
             n = int(codes.shape[0])
@@ -311,6 +331,7 @@ class ShardWorker:
         empty = (np.empty(0, np.int64), np.empty(0, np.float32))
         if n == 0:
             return [empty for _ in plans]
+        days = None
         if any(p.decay is not None for p in plans):
             if ts is None:
                 raise ValueError(
@@ -318,34 +339,79 @@ class ShardWorker:
             days = np.maximum(
                 (now - ts) / SECONDS_PER_DAY, 0.0).astype(np.float32)
         q_pre, q_sup = M.fold_plans(plans)
-        # one (d, 2B) panel: columns [:B] are the decay-scaled pre
-        # directions, [B:] the suppression tail — one GEMM per block
-        qcat = np.ascontiguousarray(
-            np.concatenate([q_pre, q_sup], axis=1), dtype=np.float32)
-        scores = np.empty((n, nplans), dtype=np.float32)
         block = max(1, self.block)
         scratch = (np.empty((min(block, n), self.store.dim), dtype=np.uint32)
                    if self.dtype == "bf16" else None)
-        for s in range(0, n, block):
-            e = min(n, s + block)
-            f = (unpack_bf16(codes[s:e], out=scratch[: e - s])
-                 if scratch is not None else mat[s:e])
-            res = f @ qcat
-            out = res[:, :nplans]
-            for j, plan in enumerate(plans):
-                if plan.decay is not None:
-                    out[:, j] *= 1.0 / (
-                        1.0 + days[s:e] / plan.decay.half_life_days)
-            out += res[:, nplans:]
-            scores[s:e] = out
+        self.corpus_streams += 1  # one stream serves the whole call
+        if nplans == 1:
+            plan0 = plans[0]
+            qcat = np.ascontiguousarray(
+                np.concatenate([q_pre, q_sup], axis=1), dtype=np.float32)
+            col1 = np.empty(n, dtype=np.float32)
+            for s in range(0, n, block):
+                e = min(n, s + block)
+                f = (unpack_bf16(codes[s:e], out=scratch[: e - s])
+                     if scratch is not None else mat[s:e])
+                res = f @ qcat
+                out = res[:, 0]
+                if plan0.decay is not None:
+                    out *= 1.0 / (
+                        1.0 + days[s:e] / plan0.decay.half_life_days)
+                out += res[:, 1]
+                col1[s:e] = out
+            cols = [col1]
+        else:
+            self.cohort_passes += 1
+            self.cohort_plans += nplans
+            # per-plan contiguous (d, 2) panels — pairs[j] is exactly the
+            # qcat the serial pass would build for plan j alone
+            pairs = np.ascontiguousarray(
+                np.stack([q_pre.T, q_sup.T], axis=2), dtype=np.float32)
+            # the decay factor column is shared within a half-life group,
+            # so the combine vectorizes across the whole cohort in the
+            # common uniform-half-life case and degrades to per-plan rows
+            # only for genuinely mixed cohorts
+            hl_groups: Dict[Optional[float], List[int]] = {}
+            for j, p in enumerate(plans):
+                hl = (None if p.decay is None
+                      else float(p.decay.half_life_days))
+                hl_groups.setdefault(hl, []).append(j)
+            bm = min(block, n)
+            rb = np.empty((nplans, bm, 2), dtype=np.float32)
+            tmp = np.empty((nplans, bm), dtype=np.float32)
+            # plan-major scores: per-plan top-k reads a contiguous row
+            # instead of paying a strided copy per column
+            scores = np.empty((nplans, n), dtype=np.float32)
+            for s in range(0, n, block):
+                e = min(n, s + block)
+                m = e - s
+                f = (unpack_bf16(codes[s:e], out=scratch[:m])
+                     if scratch is not None else mat[s:e])
+                for j in range(nplans):
+                    np.matmul(f, pairs[j], out=rb[j, :m])
+                pre, sup = rb[:, :m, 0], rb[:, :m, 1]
+                out = scores[:, s:e]
+                for hl, js in hl_groups.items():
+                    if hl is None:
+                        for j in js:
+                            np.add(pre[j], sup[j], out=out[j])
+                        continue
+                    dec = 1.0 / (1.0 + days[s:e] / hl)
+                    if len(js) == nplans:
+                        np.multiply(pre, dec, out=tmp[:, :m])
+                        np.add(tmp[:, :m], sup, out=out)
+                    else:
+                        for j in js:
+                            np.multiply(pre[j], dec, out=tmp[j, :m])
+                            np.add(tmp[j, :m], sup[j], out=out[j])
+            cols = list(scores)
         sel = []
         for j, (plan, k) in enumerate(zip(plans, ks)):
             w = selection_width(plan, min(int(k), n), n)
             if w == 0:
                 sel.append(empty)
                 continue
-            col = (scores[:, 0] if nplans == 1
-                   else np.ascontiguousarray(scores[:, j]))
+            col = cols[j]
             idx = top_idx(col, w)
             sel.append((rows[idx], col[idx]))
         return sel
@@ -379,6 +445,9 @@ class ShardWorker:
             "passes": self.passes,
             "last_pass_ms": round(self.last_pass_ms, 3),
             "total_pass_ms": round(self.total_pass_ms, 3),
+            "corpus_streams": self.corpus_streams,
+            "cohort_passes": self.cohort_passes,
+            "cohort_plans": self.cohort_plans,
         }
 
 
@@ -522,6 +591,14 @@ class ProcessGroup:
         self.searches = 0
         self.last_fanout_ms = 0.0
         self.last_merge_ms = 0.0
+        # replica-aware failover: a replica whose TRANSPORT dies (pipe
+        # EOF/OSError — not an application error, which propagates) is
+        # marked dead and the call retries the shard's survivors;
+        # ``failovers`` counts query calls served by a non-preferred
+        # replica because the preferred one was (or just went) dead
+        self._dead = [[False] * self.replicas for _ in range(self.n_shards)]
+        self._fail_lock = threading.Lock()
+        self.failovers = 0
         self._closed = False
 
     # -- lifecycle ------------------------------------------------------------
@@ -607,9 +684,10 @@ class ProcessGroup:
                     continue
                 part = (ids_arr[rows], np.ascontiguousarray(matrix[rows]),
                         None if ts is None else ts[rows])
-                for client in self._clients[s]:
-                    calls.append((client, "append", part,
-                                  {"normalized": normalized}))
+                for r in range(self.replicas):
+                    calls.append(functools.partial(
+                        self._mutation_call, s, r, "append", *part,
+                        normalized=normalized))
             self._fanout(calls)
             for j, cid in enumerate(ids_arr):
                 self._rank[int(cid)] = self._row_counter + j
@@ -630,26 +708,37 @@ class ProcessGroup:
             if not by_shard:
                 return 0
             calls = []
-            firsts = []
+            bases = []  # (shard, index of its first replica's result)
             for s, victims in by_shard.items():
                 arr = np.asarray(victims, dtype=np.int64)
-                for r, client in enumerate(self._clients[s]):
-                    calls.append((client, "delete", (arr,), {}))
-                    if r == 0:
-                        firsts.append(len(calls) - 1)
+                bases.append(len(calls))
+                for r in range(self.replicas):
+                    calls.append(functools.partial(
+                        self._mutation_call, s, r, "delete", arr))
             results = self._fanout(calls)
             for victims in by_shard.values():
                 for cid in victims:
                     del self._shard_of[cid]
-            return int(sum(results[i] for i in firsts))
+            # per shard: the first SURVIVING replica's count (dead
+            # replicas return None)
+            return int(sum(
+                next((results[b + r] for r in range(self.replicas)
+                      if results[b + r] is not None), 0)
+                for b in bases))
 
     def compact(self, min_live_fraction: float = 1.0) -> int:
         """Shard-local GC on every replica; returns segments folded
-        (first replica per shard)."""
-        calls = [(client, "compact", (min_live_fraction,), {})
-                 for row in self._clients for client in row]
+        (first surviving replica per shard)."""
+        calls = [functools.partial(self._mutation_call, s, r, "compact",
+                                   min_live_fraction)
+                 for s in range(self.n_shards)
+                 for r in range(self.replicas)]
         results = self._fanout(calls)
-        return int(sum(results[::self.replicas]))
+        return int(sum(
+            next((results[s * self.replicas + r]
+                  for r in range(self.replicas)
+                  if results[s * self.replicas + r] is not None), 0)
+            for s in range(self.n_shards)))
 
     # -- search ---------------------------------------------------------------
 
@@ -707,8 +796,11 @@ class ProcessGroup:
             self._rr = (self._rr + 1) % self.replicas
         self.searches += 1
         t0 = time.perf_counter()
-        calls = [(self._clients[s][r], "local_pass",
-                  (list(plans), ks_eff, ref, cands), {})
+        # the whole plan cohort ships to ONE replica per shard in ONE RPC,
+        # so each shard's corpus streams once per cohort (see _fast_pass);
+        # a dead replica fails over to the shard's survivors
+        calls = [functools.partial(self._call_failover, s, r, "local_pass",
+                                   list(plans), ks_eff, ref, cands)
                  for s in range(self.n_shards)]
         parts = self._fanout(calls)
         t1 = time.perf_counter()
@@ -764,22 +856,91 @@ class ProcessGroup:
 
     # -- plumbing -------------------------------------------------------------
 
-    def _fanout(self, calls):
+    #: a replica whose transport raises one of these is DEAD (the pipe
+    #: closed under it); application errors ship as (False, msg) and
+    #: surface as RuntimeError, which propagates — never fails over
+    _TRANSPORT_ERRORS = (EOFError, OSError)
+
+    def _mark_dead(self, s: int, r: int) -> None:
+        with self._fail_lock:
+            self._dead[s][r] = True
+        try:
+            self._clients[s][r].close()
+        except Exception:
+            pass
+
+    def _call_failover(self, s: int, r: int, method: str, *args, **kwargs):
+        """Query-path call: try the preferred replica ``r``, fail over
+        across the shard's survivors on transport death.  Raises only
+        when the shard has NO surviving replica."""
+        last: Optional[BaseException] = None
+        for attempt in range(self.replicas):
+            rr = (r + attempt) % self.replicas
+            if self._dead[s][rr]:
+                continue
+            try:
+                res = self._clients[s][rr].call(method, *args, **kwargs)
+            except self._TRANSPORT_ERRORS as e:
+                self._mark_dead(s, rr)
+                last = e
+                continue
+            if attempt:  # served by a survivor, not the preferred replica
+                with self._fail_lock:
+                    self.failovers += 1
+            return res
+        raise RuntimeError(
+            f"shard {s}: no surviving replicas"
+            + (f" (last transport error: {last!r})" if last else ""))
+
+    def _mutation_call(self, s: int, r: int, method: str, *args, **kwargs):
+        """Mutation-path call: every LIVE replica applies the mutation;
+        a dead one is skipped (returns None — it can never serve a query
+        again, so missing the write is safe).  Raises only when the death
+        leaves the shard with zero survivors: the shard's rows would be
+        gone, which no retry can hide."""
+        if self._dead[s][r]:
+            return None
+        try:
+            return self._clients[s][r].call(method, *args, **kwargs)
+        except self._TRANSPORT_ERRORS:
+            self._mark_dead(s, r)
+            if not any(not d for d in self._dead[s]):
+                raise RuntimeError(f"shard {s}: no surviving replicas")
+            return None
+
+    def _fanout(self, thunks):
         if self._pool is None:
-            return [client.call(method, *args, **kwargs)
-                    for client, method, args, kwargs in calls]
-        futs = [self._pool.submit(client.call, method, *args, **kwargs)
-                for client, method, args, kwargs in calls]
+            return [t() for t in thunks]
+        futs = [self._pool.submit(t) for t in thunks]
         return [f.result() for f in futs]
 
     def stats(self) -> Dict[str, Any]:
-        """Topology + per-shard memory/latency rows (every replica)."""
+        """Topology + per-shard memory/latency rows (every live replica),
+        plus the failover ledger and per-shard row skew (round-robin
+        dealing assumes uniform rows; deletes can unbalance shards, and
+        the slowest — biggest — shard bounds every fan-out)."""
         shard_rows = []
+        live_per_shard: List[int] = []
+        streams = 0
         for s in range(self.n_shards):
-            for r_i, client in enumerate(self._clients[s]):
-                row = dict(client.call("stats"))
+            first: Optional[Dict[str, Any]] = None
+            for r_i in range(self.replicas):
+                if self._dead[s][r_i]:
+                    continue
+                try:
+                    row = dict(self._clients[s][r_i].call("stats"))
+                except self._TRANSPORT_ERRORS:
+                    self._mark_dead(s, r_i)
+                    continue
                 row["replica"] = r_i
                 shard_rows.append(row)
+                if first is None:
+                    first = row
+            live_per_shard.append(0 if first is None else int(first["live"]))
+            streams += 0 if first is None else int(
+                first.get("corpus_streams", 0))
+        max_live = max(live_per_shard, default=0)
+        min_live = min(live_per_shard, default=0)
         return {
             "n_shards": self.n_shards,
             "replicas": self.replicas,
@@ -790,5 +951,14 @@ class ProcessGroup:
             "searches": self.searches,
             "last_fanout_ms": round(self.last_fanout_ms, 3),
             "last_merge_ms": round(self.last_merge_ms, 3),
+            "failovers": self.failovers,
+            "dead_replicas": sum(d for row in self._dead for d in row),
+            "row_skew": {
+                "max_live": int(max_live),
+                "min_live": int(min_live),
+                "spread": int(max_live - min_live),
+                "ratio": round(max_live / min_live, 3) if min_live else None,
+            },
+            "corpus_streams": streams,
             "shards": shard_rows,
         }

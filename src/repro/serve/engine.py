@@ -24,16 +24,30 @@ The core is an **asyncio event loop** on a private thread:
   parse work spreads across client threads instead of serializing on the
   device stage, and the device pass stays dominated by the GIL-releasing
   matmul — which is what makes the stage overlap real parallelism.
-* **collect** — the scheduler lingers ``max_wait_ms`` after the first
-  arrival (up to ``max_batch``), then drops requests whose deadline
-  already passed (:class:`DeadlineExceededError`, counted in
-  ``deadline_misses``) and serves the rest highest-``priority``-first
-  (FIFO within a priority).
+* **collect** — the scheduler lingers after the first arrival (up to
+  ``max_batch``), then drops requests whose deadline already passed
+  (:class:`DeadlineExceededError`, counted in ``deadline_misses``) and
+  serves the rest highest-``priority``-first (FIFO within a priority).
+  With ``adaptive_window`` (default) the linger is a QUIESCENCE GAP
+  learned online — an EWMA of inter-arrival deltas, clamped to
+  [0.05 ms, 4·``max_wait_ms``] with a hard cap at 8·``max_wait_ms`` —
+  so bursty closed-loop load keeps folding into one cohort while a lone
+  request closes its window as soon as arrivals quiesce, instead of the
+  fixed ``max_wait_ms`` fragmenting cohorts (``adaptive_window=False``
+  restores the fixed window exactly).
 * **pipeline** — one device pass and one host tail may be in flight at
   once (two single-thread executors); ``overlapped_batches`` counts
   batches whose device pass ran while the previous tail was still
-  finishing.  ``pipeline=False`` reproduces the PRE-ASYNC synchronous
-  core faithfully — parsing serialized inside the serve loop (not at
+  finishing.  With ``async_dispatch`` (default) the dispatch is REAL
+  async: the scheduler submits the device pass as a future and returns
+  to admission immediately — the loop thread is free DURING the pass,
+  so the next cohort keeps forming while the device crunches (the
+  admission window stays open until the device frees;
+  ``overlapped_collects`` counts windows held open that way) and a
+  completion task chains device future → host tail in batch order.
+  ``async_dispatch=False`` keeps the await-in-dispatch pipeline step.
+  ``pipeline=False`` reproduces the PRE-ASYNC synchronous core
+  faithfully — parsing serialized inside the serve loop (not at
   admission) and the host tail serialized behind the device pass, the
   old one-thread strict collect→score→finalize phasing — kept as the
   benchmark comparator (`serve_throughput`) and conservative fallback.
@@ -206,6 +220,8 @@ class BatchedRetrievalEngine:
         *,
         max_queue: int = 256,
         pipeline: bool = True,
+        async_dispatch: bool = True,
+        adaptive_window: bool = True,
         compaction: Optional[CompactionPolicy] = None,
         shard_group: Optional[Any] = None,
     ):
@@ -216,6 +232,10 @@ class BatchedRetrievalEngine:
         self.backend = get_backend(engine)
         self.max_queue = max_queue
         self.pipeline = pipeline
+        # real async dispatch rides the pipeline split; the sync-core
+        # comparator keeps its strict one-thread phasing
+        self.async_dispatch = bool(async_dispatch and pipeline)
+        self.adaptive_window = adaptive_window
         self.compaction = compaction
         # cross-process shard router (repro.dist.procgroup.ProcessGroup):
         # when attached, the device stage fans each collected batch out to
@@ -230,6 +250,9 @@ class BatchedRetrievalEngine:
         self.rejected = 0            # admissions refused at capacity
         self.deadline_misses = 0     # requests expired at collect time
         self.overlapped_batches = 0  # device pass ran while prev tail ran
+        self.overlapped_collects = 0  # admission windows held open on a
+        #                               busy device (async dispatch)
+        self.windows_extended = 0    # adaptive windows that outlingered base
         self.compactions_run = 0     # idle-gap compactions that folded
 
         self._depth = 0              # queued, not yet collected into a batch
@@ -241,6 +264,15 @@ class BatchedRetrievalEngine:
         self._pending: List[Request] = []       # loop-confined
         self._arrival = asyncio.Event()         # loop-confined
         self._tail_fut: Optional[asyncio.Future] = None
+        # async-dispatch state (loop-confined except _tail_running, which
+        # the tail thread clears when its host tail actually finishes)
+        self._dev_fut: Optional[asyncio.Future] = None
+        self._finish_task: Optional[asyncio.Task] = None
+        self._tail_running = False
+        # adaptive window state: EWMA of inter-arrival gaps (ms); None
+        # until the first delta lands, so the static base stays in force
+        self._gap_ms: Optional[float] = None
+        self._last_arrival_t: Optional[float] = None
 
         # one thread per pipeline stage: the device pass and the host tail
         # each get a dedicated executor, so exactly one of each runs at a
@@ -376,6 +408,11 @@ class BatchedRetrievalEngine:
             "rejected": self.rejected,
             "deadline_misses": self.deadline_misses,
             "overlapped_batches": self.overlapped_batches,
+            "overlapped_collects": self.overlapped_collects,
+            "windows_extended": self.windows_extended,
+            "window_ms": round(self._window_s() * 1e3, 3),
+            "async_dispatch": self.async_dispatch,
+            "adaptive_window": self.adaptive_window,
             "compactions_run": self.compactions_run,
         }
 
@@ -430,11 +467,29 @@ class BatchedRetrievalEngine:
         if plan.decay is not None and not self.cache.store.has_timestamps:
             raise ValueError("decay: requires timestamps in the cache")
 
+    def _window_s(self) -> float:
+        """Current admission-window linger in seconds: the static base, or
+        the learned quiescence gap clamped to [0.05 ms, 4·base]."""
+        if not self.adaptive_window or self._gap_ms is None:
+            return self.max_wait_ms / 1e3
+        return min(max(self._gap_ms, 0.05), self.max_wait_ms * 4) / 1e3
+
     def _admit(self, req: Request) -> None:  # loop thread
         if self._closing:
             self._fail(req, EngineClosedError(
                 "engine closed before the request was served"))
             return
+        t = self._loop.time()
+        last = self._last_arrival_t
+        self._last_arrival_t = t
+        if self.adaptive_window and last is not None:
+            delta_ms = (t - last) * 1e3
+            # a gap past the hard cap is a NEW burst, not a cadence
+            # sample — folding it in would freeze the window wide open
+            if delta_ms <= self.max_wait_ms * 8:
+                g = self._gap_ms
+                self._gap_ms = (delta_ms if g is None
+                                else g + 0.2 * (delta_ms - g))
         self._pending.append(req)
         self._arrival.set()
 
@@ -464,6 +519,13 @@ class BatchedRetrievalEngine:
             for req in pending:
                 self._fail(req, EngineClosedError(
                     "engine closed before the request was served"))
+            if self._finish_task is not None:
+                # async dispatch: the completion chain delivers the last
+                # in-flight batch (device future -> host tail) — drain it
+                try:
+                    await self._finish_task
+                except Exception:
+                    pass
             if self._tail_fut is not None:
                 try:
                     await self._tail_fut
@@ -473,9 +535,13 @@ class BatchedRetrievalEngine:
             self._loop.call_soon(self._loop.stop)
 
     async def _collect(self) -> List[Request]:
-        """One admission window: first arrival, then linger ``max_wait_ms``
-        (or until ``max_batch`` are pending); expire deadlines; pick the
-        highest-priority ``max_batch`` (FIFO within a priority)."""
+        """One admission window: first arrival, then linger (fixed
+        ``max_wait_ms``, or the learned quiescence gap per arrival when
+        ``adaptive_window`` — close as soon as arrivals quiesce, hard cap
+        8·base); under async dispatch a busy device HOLDS the window open
+        (arrivals keep folding into this cohort — queuing a micro-batch
+        behind the pass would only fragment it); expire deadlines; pick
+        the highest-priority ``max_batch`` (FIFO within a priority)."""
         if not self._pending:
             self._arrival.clear()
             try:
@@ -484,9 +550,18 @@ class BatchedRetrievalEngine:
                 return []
         if self._closing:
             return []
-        deadline = self._loop.time() + self.max_wait_ms / 1e3
+        start = self._loop.time()
+        base_s = self.max_wait_ms / 1e3
+        deadline = start + base_s
+        hard_deadline = start + base_s * 8
         while len(self._pending) < self.max_batch:
-            remaining = deadline - self._loop.time()
+            now_t = self._loop.time()
+            if self.adaptive_window:
+                # each arrival re-arms a quiescence gap: the window stays
+                # open while the burst keeps delivering, closes one gap
+                # after it stops
+                deadline = min(now_t + self._window_s(), hard_deadline)
+            remaining = deadline - now_t
             if remaining <= 0:
                 break
             self._arrival.clear()
@@ -496,6 +571,18 @@ class BatchedRetrievalEngine:
                 break
             if self._closing:
                 return []
+        if self.adaptive_window and self._loop.time() - start > base_s:
+            self.windows_extended += 1
+
+        if self.async_dispatch:
+            dev = self._dev_fut
+            if dev is not None and not dev.done():
+                if self._pending:
+                    self.overlapped_collects += 1
+                try:
+                    await dev  # arrivals keep appending while we wait
+                except Exception:
+                    pass  # the completion chain fails that batch
 
         now_mono = time.monotonic()
         live: List[Request] = []
@@ -520,6 +607,10 @@ class BatchedRetrievalEngine:
         policy = self.compaction
         if policy is None:
             return
+        if self._dev_fut is not None and not self._dev_fut.done():
+            # async dispatch: a pass is in flight on the device executor —
+            # don't queue compaction behind it, the next idle gap will do
+            return
         store = self.cache.store
         if not policy.should_compact(store):
             return
@@ -530,7 +621,21 @@ class BatchedRetrievalEngine:
 
     async def _dispatch(self, batch: List[Request]) -> None:
         """Two-stage pipeline step: run this batch's device pass while the
-        PREVIOUS batch's host tail is (possibly) still finishing."""
+        PREVIOUS batch's host tail is (possibly) still finishing.
+
+        Async mode submits the device pass as a FUTURE and returns to the
+        scheduler immediately — the loop thread is free during the pass
+        (admission keeps forming the next cohort) and a completion task
+        chains device future → host tail, tails strictly in batch order,
+        at most one tail outstanding."""
+        if self.async_dispatch:
+            prev_finish = self._finish_task
+            dev_fut = self._loop.run_in_executor(
+                self._dev_pool, self._device_stage_async, batch)
+            self._dev_fut = dev_fut
+            self._finish_task = self._loop.create_task(
+                self._finish_batch(batch, dev_fut, prev_finish))
+            return
         prev_tail = self._tail_fut
         overlapped = prev_tail is not None and not prev_tail.done()
         try:
@@ -563,7 +668,60 @@ class BatchedRetrievalEngine:
                 pass
             self._tail_fut = None
 
+    async def _finish_batch(self, batch: List[Request],
+                            dev_fut: asyncio.Future,
+                            prev_finish: Optional[asyncio.Task]) -> None:
+        """Async-dispatch completion chain: await this batch's device
+        future, then the previous batch's chain (tails launch strictly in
+        batch order), then the previous tail itself (at most ONE tail
+        outstanding, same bound as the legacy step), then hand off to the
+        host tail executor."""
+        try:
+            work = await dev_fut
+        except Exception as e:  # defensive: _device_stage fails per request
+            if prev_finish is not None:
+                try:
+                    await prev_finish
+                except Exception:
+                    pass
+            for req in batch:
+                if not req.future.done():
+                    self._fail(req, e, count_depth=False)
+            return
+        if prev_finish is not None:
+            try:
+                await prev_finish
+            except Exception:
+                pass
+        prev_tail = self._tail_fut
+        if prev_tail is not None:
+            try:
+                await prev_tail
+            except Exception:
+                pass
+            self._tail_fut = None
+        if work is None:
+            return
+        # flag raised on the LOOP thread before the submit, cleared by the
+        # tail thread when the tail truly finishes: the next device stage
+        # reads it at ITS start, so the overlap counter measures real
+        # device-pass/host-tail concurrency, not dispatch bookkeeping
+        self._tail_running = True
+        self._tail_fut = self._loop.run_in_executor(
+            self._tail_pool, self._run_tail, work)
+
     # -- pipeline stages (executor threads) ----------------------------------
+
+    def _device_stage_async(self, batch: List[Request]) -> Optional[_TailWork]:
+        if self._tail_running:
+            self.overlapped_batches += 1
+        return self._device_stage(batch)
+
+    def _run_tail(self, work: _TailWork) -> None:
+        try:
+            self._host_tail(work)
+        finally:
+            self._tail_running = False
 
     def _device_stage(self, batch: List[Request]) -> Optional[_TailWork]:
         """One fused backend pass: fold every request's (admission-parsed)
@@ -668,9 +826,14 @@ class BatchedRetrievalEngine:
                         # no weighted-fusion plans — the common case)
                         g_bias = fusion_bias_arrays(store, segs, g_plans)
                         if key is None:
+                            # the batch IS a cohort: one fused (d, 2·Q)
+                            # panel per segment pass, pow2 Q-bucketed on
+                            # device backends so varying cohort sizes
+                            # share executables
                             sel = score_select_segments(
                                 self.backend, segs, g_plans, g_ks, now=ref,
-                                counters=counters, score_bias=g_bias)
+                                counters=counters, score_bias=g_bias,
+                                cohort=True)
                         else:
                             sel = score_select_prefiltered(
                                 self.backend, store, segs, g_plans, g_ks,

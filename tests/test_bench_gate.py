@@ -346,6 +346,59 @@ def test_scale1m_row_missing_fails():
     assert "scale_1m/sharded_bf16" in failures[0] and "MISSING" in failures[0]
 
 
+def test_cohort_section_gated_and_drop_fails():
+    """The cohort-streamed-scoring scenario gates under the same rules:
+    a cohort-pass regression past tolerance fails (an un-amortized
+    corpus stream reads as a slowdown of exactly the row that exists to
+    pin it), and dropping the whole section is section-level silent
+    omission."""
+    base = _snap({"jit-jax": _row(30.0)})
+    base["cohort_throughput"] = {"serial_f32b": _row(1100.0),
+                                 "cohort_f32b_q16": _row(340.0),
+                                 "serve_cohort": _row(900.0)}
+    ok = _snap({"jit-jax": _row(30.0)})
+    ok["cohort_throughput"] = {"serial_f32b": _row(1150.0),
+                               "cohort_f32b_q16": _row(360.0),
+                               "serve_cohort": _row(950.0)}
+    failures, notes = compare_all(ok, base, DEFAULT_TOL)
+    assert failures == []
+    assert any(n.startswith("cohort_throughput/") for n in notes)
+    bad = _snap({"jit-jax": _row(30.0)})
+    bad["cohort_throughput"] = {"serial_f32b": _row(1100.0),
+                                "cohort_f32b_q16": _row(900.0),
+                                "serve_cohort": _row(900.0)}
+    failures, _ = compare_all(bad, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "cohort_throughput/cohort_f32b_q16" in failures[0]
+    dropped = _snap({"jit-jax": _row(30.0)})
+    failures, _ = compare_all(dropped, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "cohort_throughput" in failures[0] and "dropped" in failures[0]
+
+
+def test_cohort_row_missing_fails():
+    """Dropping ONE cohort row (say the q16 headline) while keeping the
+    section is row-level silent omission."""
+    base = _snap({})
+    base["cohort_throughput"] = {"serial_f32b": _row(1100.0),
+                                 "cohort_f32b_q16": _row(340.0)}
+    new = _snap({})
+    new["cohort_throughput"] = {"serial_f32b": _row(1100.0)}
+    failures, _ = compare_all(new, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert ("cohort_throughput/cohort_f32b_q16" in failures[0]
+            and "MISSING" in failures[0])
+
+
+def test_merge_min_folds_cohort_section():
+    a = _snap({"jit-jax": _row(30.0)})
+    a["cohort_throughput"] = {"cohort_f32b_q16": _row(390.0)}
+    b = _snap({"jit-jax": _row(29.0)})
+    b["cohort_throughput"] = {"cohort_f32b_q16": _row(355.0)}
+    merged = merge_min([a, b])
+    assert merged["cohort_throughput"]["cohort_f32b_q16"]["total_ms"] == 355.0
+
+
 def test_merge_min_folds_scale1m_section():
     a = _snap({"jit-jax": _row(30.0)})
     a["scale_1m"] = {"sharded_bf16": _row(61.0)}

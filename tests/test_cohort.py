@@ -1,0 +1,276 @@
+"""Cohort-streamed scoring: the multi-query corpus-stream-amortizing mode.
+
+The pinned contract (``ShardWorker._fast_pass`` Q>1 branch + the
+``score_select_cohort`` entry in ``core/backends``): a Q-plan cohort is a
+LOOP REORDERING of Q serial passes — every per-plan (d, 2) GEMM runs on
+the same 1536-row corpus blocks with the same operands — so cohort
+rankings AND scores are bit-identical to the serial per-query pass, while
+each shard's corpus streams from RAM once per cohort instead of once per
+query (counter-pinned via ``corpus_streams``).  Satellites ride along:
+replica failover, per-shard row skew, and pow2 Q-bucketing of the device
+plan cache.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import grammar
+from repro.core import modulations as M
+from repro.core.backends import (JitJaxBackend, score_select_cohort,
+                                 score_select_segments)
+from repro.core.segments import SegmentedCorpusStore
+from repro.core.vectorcache import VectorCache
+from repro.dist.procgroup import ProcessGroup
+from repro.embed import HashEmbedder
+
+DIM = 64
+NOW = 1_770_000_000.0
+N = 480  # 3 shards x 160 rows, block-aligned (160 % 4 == 0)
+
+
+@pytest.fixture(scope="module")
+def emb():
+    return HashEmbedder(DIM)
+
+
+def _texts(n, offset=0):
+    return [f"topic {(offset + i) % 37} filler {(offset + i) % 11}"
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def corpus(emb):
+    ids = np.arange(N, dtype=np.int64)
+    matrix = emb.embed_batch(_texts(N))
+    ts = np.linspace(NOW - 90 * 86400.0, NOW - 3600.0, N)
+    return ids, matrix, ts
+
+
+def _group(corpus, **kw):
+    ids, matrix, ts = corpus
+    kw.setdefault("n_shards", 3)
+    kw.setdefault("transport", "inline")
+    kw.setdefault("dtype", "f32b")
+    return ProcessGroup.build(ids, matrix, ts, **kw)
+
+
+def _vc(corpus, emb):
+    ids, matrix, ts = corpus
+    return VectorCache(ids, matrix, ts, emb)
+
+
+def _parse(vc, tokens):
+    return grammar.parse(tokens, vc.embed_fn, vc.embeddings_for_ids,
+                         vc.lexical_fn)
+
+
+# mixed cohort: distinct half-lives (incl. none), suppression widths 0-2,
+# one diverse plan — every hl-group branch of the cohort pass executes
+COHORT_SHAPES = [
+    "similar:server lifecycle pool:60",
+    "similar:session handling suppress:landing page decay:30 pool:60",
+    "similar:retry logic decay:7 pool:60",
+    "similar:cache eviction suppress:website design suppress:draft decay:30 pool:64",
+    "similar:error handling diverse pool:48",
+]
+
+
+def _cohort_plans(vc, q):
+    return [_parse(vc, COHORT_SHAPES[i % len(COHORT_SHAPES)])
+            for i in range(q)]
+
+
+# -- cohort == serial, bit for bit ----------------------------------------
+
+
+@pytest.mark.parametrize("dtype", ["f32b", "bf16"])
+@pytest.mark.parametrize("transport,n_shards",
+                         [("inline", 1), ("inline", 3), ("thread", 3)])
+def test_cohort_bit_identical_to_serial(corpus, emb, dtype, transport,
+                                        n_shards):
+    vc = _vc(corpus, emb)
+    with _group(corpus, dtype=dtype, transport=transport,
+                n_shards=n_shards) as g:
+        for q in (1, 4, 16):
+            plans = _cohort_plans(vc, q)
+            serial = [g.search_plan(p, now=NOW, k=20) for p in plans]
+            cohort = g.search_plan_batch(plans, [None] * q, now=NOW,
+                                         ks=[20] * q)
+            # full tuple equality: ids AND float scores, no tolerance
+            assert cohort == serial, (dtype, transport, n_shards, q)
+
+
+def test_cohort_streams_corpus_once(corpus, emb):
+    """The counter-pinned bandwidth claim: Q=16 -> ONE blocked stream per
+    shard per cohort; 16 serial queries -> 16 streams per shard."""
+    vc = _vc(corpus, emb)
+    with _group(corpus) as g:
+        plans = _cohort_plans(vc, 16)
+        before = {s["shard"]: s["corpus_streams"]
+                  for s in g.stats()["shards"]}
+        g.search_plan_batch(plans, [None] * 16, now=NOW, ks=[10] * 16)
+        after = {s["shard"]: s for s in g.stats()["shards"]}
+        for sid, row in after.items():
+            assert row["corpus_streams"] - before[sid] == 1
+            assert row["cohort_passes"] >= 1
+            assert row["cohort_plans"] >= 16
+        mid = {s["shard"]: s["corpus_streams"]
+               for s in g.stats()["shards"]}
+        for p in plans:
+            g.search_plan(p, now=NOW, k=10)
+        final = {s["shard"]: s["corpus_streams"]
+                 for s in g.stats()["shards"]}
+        for sid in final:
+            assert final[sid] - mid[sid] == 16
+        assert g.stats()["corpus_streams"] >= 17
+
+
+def test_cohort_parity_under_mutations(corpus, emb):
+    """Delete + append between cohorts: cohort == serial at every store
+    state (the blocked view rebuilds identically for both paths)."""
+    ids, matrix, ts = corpus
+    vc = _vc(corpus, emb)
+    with _group(corpus) as g:
+        rng = np.random.default_rng(3)
+        next_id = 20_000
+        for burst in range(3):
+            dead = [int(i) for i in rng.choice(ids, 25, replace=False)
+                    if i < N][:20]
+            g.delete(dead)
+            fresh = np.arange(next_id, next_id + 96, dtype=np.int64)
+            next_id += 96
+            g.append(fresh, emb.embed_batch(_texts(96, offset=700 + burst)),
+                     np.full(96, NOW - 7200.0 * (burst + 1)))
+            plans = _cohort_plans(vc, 8)
+            serial = [g.search_plan(p, now=NOW, k=15) for p in plans]
+            cohort = g.search_plan_batch(plans, [None] * 8, now=NOW,
+                                         ks=[15] * 8)
+            assert cohort == serial, f"burst {burst}"
+
+
+# -- satellite: replica failover ------------------------------------------
+
+
+def _small(emb, n=128):
+    ids = np.arange(n, dtype=np.int64)
+    matrix = emb.embed_batch(_texts(n))
+    ts = np.linspace(NOW - 30 * 86400.0, NOW - 3600.0, n)
+    return ids, matrix, ts
+
+
+def test_failover_retries_surviving_replica(emb):
+    ids, matrix, ts = _small(emb)
+    vc = VectorCache(ids, matrix, ts, emb)
+    plan = _parse(vc, "similar:server lifecycle pool:40")
+    with ProcessGroup.build(ids, matrix, ts, n_shards=2, replicas=2,
+                            transport="process") as g:
+        want = g.search_plan(plan, now=NOW)
+        victim = g._clients[0][0]
+        victim._proc.kill()
+        victim._proc.join(timeout=5.0)
+        # both round-robin positions must survive the dead replica
+        assert g.search_plan(plan, now=NOW) == want
+        assert g.search_plan(plan, now=NOW) == want
+        st = g.stats()
+        assert st["failovers"] >= 1
+        assert st["dead_replicas"] == 1
+        # mutations keep fanning to survivors (dead replica skipped)
+        assert g.delete([0, 1, 2, 3]) == 4
+        assert g.n_live == len(ids) - 4
+        vc.store.delete([0, 1, 2, 3])
+        got = g.search_plan(plan, now=NOW)
+        assert {int(i) for i, _ in got}.isdisjoint({0, 1, 2, 3})
+
+
+def test_failover_exhausted_raises(emb):
+    ids, matrix, ts = _small(emb, n=64)
+    vc = VectorCache(ids, matrix, ts, emb)
+    plan = _parse(vc, "similar:server lifecycle pool:20")
+    with ProcessGroup.build(ids, matrix, ts, n_shards=2, replicas=1,
+                            transport="process") as g:
+        g.search_plan(plan, now=NOW)
+        victim = g._clients[1][0]
+        victim._proc.kill()
+        victim._proc.join(timeout=5.0)
+        with pytest.raises(RuntimeError, match="no surviving replicas"):
+            for _ in range(2):  # hit both round-robin positions
+                g.search_plan(plan, now=NOW)
+
+
+def test_application_errors_do_not_failover(emb):
+    """A worker-side ValueError is a BAD REQUEST, not a dead transport:
+    it must propagate (as the pickle-RPC's wrapped RuntimeError — the
+    worker stays alive) and never retry a replica or mark anything dead."""
+    ids, matrix, _ = _small(emb, n=64)
+    vc = VectorCache(ids, matrix, None, emb)
+    plan = _parse(vc, "similar:x decay:14")  # decay w/o timestamps
+    with ProcessGroup.build(ids, matrix, n_shards=2, replicas=2,
+                            transport="process") as g:
+        with pytest.raises(RuntimeError, match="decay"):
+            g.search_plan(plan, now=NOW)
+        st = g.stats()
+        assert st["failovers"] == 0
+        assert st["dead_replicas"] == 0
+
+
+# -- satellite: per-shard row skew ----------------------------------------
+
+
+def test_stats_expose_row_skew(corpus, emb):
+    with _group(corpus) as g:
+        st = g.stats()
+        skew = st["row_skew"]
+        assert skew["max_live"] == skew["min_live"] == N // 3
+        assert skew["spread"] == 0 and skew["ratio"] == 1.0
+        # tombstone 100 rows dealt to shard 0 only -> visible imbalance
+        dead = [i for i, s in g._shard_of.items() if s == 0][:100]
+        g.delete(dead)
+        skew = g.stats()["row_skew"]
+        assert skew["max_live"] == N // 3
+        assert skew["min_live"] == N // 3 - 100
+        assert skew["spread"] == 100
+        assert skew["ratio"] == round((N // 3) / (N // 3 - 100), 3)
+
+
+# -- device plan-cache Q-bucketing ----------------------------------------
+
+
+def _seg_store(emb, n=256):
+    mat = emb.embed_batch(_texts(n))
+    ts = NOW - np.linspace(1.0, 50.0, n) * 86400.0
+    store = SegmentedCorpusStore(dim=DIM)
+    store.append(np.arange(n), mat, ts, normalized=True)
+    return store
+
+
+def test_jit_cohort_pow2_buckets_share_executables(corpus, emb):
+    """cohort=True pow2-buckets the batch axis: Q=3 and Q=4 cohorts of
+    the same plan shape compile ONE executable; without the flag each Q
+    is its own structure."""
+    store = _seg_store(emb)
+    vc = VectorCache(store=store, embed_fn=emb)
+    segs = store.segments
+    mk = lambda i: _parse(vc, f"similar:topic {i} filler pool:40")
+
+    be = JitJaxBackend()
+    out3 = score_select_cohort(be, segs, [mk(i) for i in range(3)],
+                               [10] * 3, now=NOW)
+    out4 = score_select_cohort(be, segs, [mk(i + 3) for i in range(4)],
+                               [10] * 4, now=NOW)
+    assert be.plan_cache.builds == 1  # both cohorts land in the Q=4 bucket
+    assert len(out3) == 3 and len(out4) == 4
+
+    be2 = JitJaxBackend()
+    score_select_segments(be2, segs, [mk(i) for i in range(3)],
+                          [10] * 3, now=NOW)
+    score_select_segments(be2, segs, [mk(i + 3) for i in range(4)],
+                          [10] * 4, now=NOW)
+    assert be2.plan_cache.builds == 2  # exact-Q structures don't bucket
+
+    # padded cohort columns slice away: per-plan ids == the fused oracle
+    for j, (gidx, _) in enumerate(out3):
+        (want,) = score_select_segments("fused-numpy", segs, [mk(j)], [10],
+                                        now=NOW)
+        np.testing.assert_array_equal(gidx, want[0])

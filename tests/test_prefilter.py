@@ -401,3 +401,70 @@ def test_prefiltered_driver_empty_and_unknown_sets():
             get_backend("fused-numpy"), store, store.segments,
             [plan], [10], [777, 888], now=NOW, router=router)
         assert [o[0].size for o in out] == [0]
+
+
+# ---------------------------------------------------------------------------
+# adaptive threshold: the crossover learned from the router's own samples
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_threshold_static_until_both_arms_warm():
+    r = PrefilterRouter(mask_threshold=0.25, min_samples=3)
+    assert r.effective_threshold() == 0.25
+    for _ in range(3):
+        r.record_masked(10.0, 100_000)   # a = 1e-4 ms per live row
+    assert r.effective_threshold() == 0.25   # gather arm still cold
+    for _ in range(2):
+        r.record_gather(1.0, 1_000)      # b = 1e-3 ms per candidate
+    assert r.effective_threshold() == 0.25   # 2 < min_samples
+    r.record_gather(1.0, 1_000)
+    # both arms warm: crossover a/b = 0.1 replaces the static seed,
+    # and the >= routing boundary moves with it
+    assert abs(r.effective_threshold() - 0.1) < 1e-12
+    assert r.use_masked(10_000, 100_000)
+    assert not r.use_masked(9_999, 100_000)
+    st = r.stats()
+    assert st["threshold"] == 0.25
+    assert st["threshold_effective"] == 0.1
+    assert st["masked_samples"] == 3 and st["gather_samples"] == 3
+
+
+def test_adaptive_threshold_clamps_and_opt_out():
+    hi = PrefilterRouter(min_samples=1)
+    hi.record_masked(100.0, 100)         # masked terrible: 1 ms/live row
+    hi.record_gather(0.001, 10_000)
+    assert hi.effective_threshold() == 0.9   # clamped: never all-gather
+    lo = PrefilterRouter(min_samples=1)
+    lo.record_masked(0.0001, 1_000_000)  # masked nearly free
+    lo.record_gather(100.0, 10)
+    assert lo.effective_threshold() == 0.01  # clamped: never all-masked
+    off = PrefilterRouter(adaptive=False, min_samples=1)
+    off.record_masked(100.0, 100)
+    off.record_gather(0.001, 10_000)
+    assert off.effective_threshold() == off.mask_threshold
+    # degenerate samples are ignored, not folded into the model
+    z = PrefilterRouter(min_samples=1)
+    z.record_masked(1.0, 0)
+    z.record_gather(-1.0, 100)
+    assert z.masked_samples == 0 and z.gather_samples == 0
+
+
+def test_prefiltered_passes_record_timing_samples():
+    """Both router arms feed the adaptive model from the REAL driver:
+    the masked arm records live rows swept, the gather arm candidates."""
+    mat, ts = _corpus(n=200, seed=9)
+    store = _store_from_splits(mat, ts, [200])
+    router = PrefilterRouter(mask_threshold=0.3)
+    vc = VectorCache(store=store, embed_fn=EMB, prefilter=router)
+    plan = _composed_plan(diverse=False)
+    vc.search_plan(plan, list(range(100)), now=NOW, engine="fused-numpy")
+    assert router.masked_samples == 1 and router.masked_rows == 200
+    assert router.masked_ms > 0.0
+    vc.search_plan(plan, list(range(10)), now=NOW, engine="fused-numpy")
+    assert router.gather_samples == 1 and router.gather_rows == 10
+    assert router.gather_ms > 0.0
+    # empty early-returns record nothing (no cost model pollution)
+    score_select_prefiltered(
+        get_backend("fused-numpy"), store, store.segments, [plan], [10],
+        [777_777], now=NOW, router=router)
+    assert router.gather_samples == 1 and router.masked_samples == 1

@@ -501,3 +501,119 @@ def test_service_async_surface(async_service):
     for key in ("rejected", "deadline_misses", "overlapped_batches",
                 "compactions_run", "max_queue", "batches_served"):
         assert key in serving
+
+
+# ---------------------------------------------------------------------------
+# async dispatch: device future + held admission window
+# ---------------------------------------------------------------------------
+
+
+def test_async_dispatch_holds_window_on_busy_device():
+    """While a device pass is in flight, the admission window stays open:
+    arrivals fold into ONE next cohort instead of fragmenting into queued
+    micro-batches behind the busy executor."""
+    cache, _ = make_cache()
+    gate = GateBackend()
+    eng = BatchedRetrievalEngine(cache, max_batch=4, engine=gate)
+    try:
+        assert eng.async_dispatch
+        with cf.ThreadPoolExecutor(4) as ex:
+            first = ex.submit(eng.search, "similar:group 1 tail", 5)
+            assert gate.entered.wait(5.0)  # batch 1 is IN the device pass
+            held = [ex.submit(eng.search, f"similar:group {i} tail", 5)
+                    for i in (2, 3)]
+            assert wait_for(lambda: eng.queue_depth == 2)
+            # the scheduler reaches the busy-device hold (device still
+            # gated, held arrivals pending) before we let the pass finish
+            assert wait_for(lambda: eng.overlapped_collects >= 1)
+            gate.release.set()
+            assert len(first.result(10.0)) == 5
+            for f in held:
+                assert len(f.result(10.0)) == 5
+        assert eng.overlapped_collects >= 1
+        assert eng.batches_served == 2  # the two held requests = one cohort
+    finally:
+        gate.release.set()
+        eng.close()
+
+
+def test_async_dispatch_off_matches_on_and_direct():
+    cache, _ = make_cache(300)
+    tokens = [f"similar:group {i % 7} tail decay:14" for i in range(16)]
+    res = {}
+    for mode in (True, False):
+        eng = BatchedRetrievalEngine(cache, max_batch=8, now=NOW,
+                                     engine="fused", async_dispatch=mode)
+        try:
+            with cf.ThreadPoolExecutor(8) as ex:
+                res[mode] = list(ex.map(lambda t: eng.search(t, 5), tokens))
+        finally:
+            eng.close()
+    direct = [cache.search(t, now=NOW)[:5] for t in tokens]
+    for a, b, d in zip(res[True], res[False], direct):
+        assert ([i for i, _ in a] == [i for i, _ in b]
+                == [i for i, _ in d])
+
+
+def test_async_dispatch_failures_stay_per_batch():
+    """A backend failure under async dispatch fails ITS batch through the
+    completion chain; the engine keeps serving."""
+    cache, _ = make_cache()
+
+    class FlakyBackend(FusedNumpyBackend):
+        name = "flaky"
+        boom = True
+
+        def score_select(self, *args, **kwargs):
+            if FlakyBackend.boom:
+                FlakyBackend.boom = False
+                raise RuntimeError("injected device failure")
+            return super().score_select(*args, **kwargs)
+
+    eng = BatchedRetrievalEngine(cache, max_batch=4, engine=FlakyBackend())
+    try:
+        with pytest.raises(RuntimeError, match="injected"):
+            eng.search("similar:group 1 tail", 5, timeout=10.0)
+        assert len(eng.search("similar:group 2 tail", 5, timeout=10.0)) == 5
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# adaptive batch window
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_window_learns_gap_and_reports():
+    cache, _ = make_cache()
+    eng = BatchedRetrievalEngine(cache, max_batch=64, max_wait_ms=2.0,
+                                 engine="fused")
+    try:
+        with cf.ThreadPoolExecutor(8) as ex:
+            futs = [ex.submit(eng.search, f"similar:group {i % 7} tail", 3)
+                    for i in range(24)]
+            for f in futs:
+                assert len(f.result(10.0)) == 3
+        st = eng.stats()
+        assert st["adaptive_window"] is True
+        # learned quiescence gap: clamped to [0.05 ms, 4x base]
+        assert 0.05 <= st["window_ms"] <= 8.0
+        for key in ("overlapped_collects", "windows_extended",
+                    "async_dispatch"):
+            assert key in st
+    finally:
+        eng.close()
+
+
+def test_fixed_window_mode_reports_base():
+    cache, _ = make_cache()
+    eng = BatchedRetrievalEngine(cache, max_wait_ms=3.0, engine="fused",
+                                 adaptive_window=False)
+    try:
+        st = eng.stats()
+        assert st["adaptive_window"] is False
+        assert st["window_ms"] == 3.0
+        assert len(eng.search("similar:group 1 tail", 5)) == 5
+        assert eng.windows_extended == 0
+    finally:
+        eng.close()
