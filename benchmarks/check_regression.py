@@ -32,7 +32,10 @@ when CI cannot afford the full million-chunk corpus) and the
 ``cohort_throughput`` section (cohort-streamed scoring: the Q-query
 shard-group panel pass vs the serial per-query comparator plus the
 closed-loop serving rows, so both an un-amortized corpus stream and a
-broken batch window gate) — is
+broken batch window gate) and the ``ingest_durability`` section (the
+WAL-journaled ingest cycle: sync-inline vs queued-worker INSERT
+latency plus snapshot/delta recovery time, so a slowed journal fsync
+path, a broken idle-gap drain or an O(corpus) recovery all gate) — is
 compared against the committed ``BENCH_pem.smoke.json`` baseline; the gate
 fails on a > ``FLEX_BENCH_TOL`` (default 1.5) ratio for ANY backend that
 is not recorded as skipped in the baseline.  A backend present in the
@@ -134,7 +137,7 @@ def compare_all(
     for section in ("backends", "delta_backends", "serve_throughput",
                     "prefilter_backends", "diverse_backends",
                     "filter_panel", "hybrid_backends", "scale_1m",
-                    "cohort_throughput"):
+                    "cohort_throughput", "ingest_durability"):
         if section not in baseline:
             continue
         if section != "backends" and section not in new:
@@ -156,7 +159,7 @@ def merge_min(snapshots: List[Dict]) -> Dict:
     for section in ("backends", "delta_backends", "serve_throughput",
                     "prefilter_backends", "diverse_backends",
                     "filter_panel", "hybrid_backends", "scale_1m",
-                    "cohort_throughput"):
+                    "cohort_throughput", "ingest_durability"):
         backends: Dict[str, Dict] = {}
         for snap in snapshots:
             for name, row in snap.get(section, {}).items():

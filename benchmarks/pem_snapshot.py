@@ -113,6 +113,16 @@ p50/p99 per row.  Every row gates on ``total_ms``; the q16 row records
 scale — at smoke scale the corpus fits cache and the row only pins the
 trajectory).
 
+``ingest_durability`` measures the DURABLE ingest cycle: ``INSERT INTO
+chunks`` with the embedder inline on the write path vs. through the
+bounded queue + background vectorizer (the INSERT returns after
+enqueue + journal fsync; embedding happens in scheduler idle gaps or
+the close flush), p50/p99 per insert, ``total_ms`` covering inserts +
+close so deferred work can't game the gate — plus
+``SegmentedCorpusStore.open`` recovery walls right after a checkpoint
+(0 records replayed) and after a post-snapshot delta, pinning the
+O(delta)-not-O(corpus) recovery claim in milliseconds.
+
 ``FLEX_BENCH_OUT`` overrides the output path (the CI gate writes the
 smoke-scale run to a scratch file so the committed full-scale snapshot
 is never clobbered).
@@ -1142,6 +1152,134 @@ def _bench_serve_emudev():
     return rows
 
 
+def _bench_ingest_durability():
+    """Durable ingest: journaled INSERT latency + journal recovery time.
+
+    Three claims, each a gated row:
+
+    * ``insert_inline`` — ``INSERT INTO chunks`` with the embedder inline
+      on the write path (no serving engine attached), journal fsync per
+      mutation.  ``total_ms`` is the full cycle (all inserts + close
+      checkpoint), so the journaling overhead itself gates.
+    * ``insert_queued`` — the same inserts through the background
+      vectorizer: the INSERT returns after enqueue + journal, embedding
+      happens in the scheduler's idle gaps / the close flush.  The
+      per-insert p50/p99 is the decoupling win (no embedder round-trip on
+      the write path); ``total_ms`` again covers inserts + close, so
+      deferring work can't game the gate.
+    * ``recovery_snapshot`` / ``recovery_delta`` — ``SegmentedCorpusStore
+      .open`` wall time right after a checkpoint (replay = 0 records) and
+      after ``delta`` post-snapshot mutations.  An O(corpus) recovery —
+      the exact failure snapshots exist to prevent — blows
+      ``recovery_delta`` past tolerance immediately.
+    """
+    import shutil
+    import tempfile
+    import time as _time
+
+    from repro.core.segments import SegmentedCorpusStore
+    from repro.serve.retrieval import RetrievalService
+
+    n_inserts = max(12, int(round(300 * SCALE)))
+    rows = {}
+
+    def insert_cycle(queued: bool):
+        # production_db() is process-cached, so both cycles share one
+        # sqlite db: each needs its own id range.
+        base_id = 11_000_000 if queued else 10_000_000
+        conn, _cache, _chunks, emb = production_db()
+        tmp = tempfile.mkdtemp(prefix="flexvec-bench-ingest-")
+        svc = RetrievalService(conn, dim=DIM, embedder=emb,
+                               store_path=Path(tmp) / "store")
+        lat = []
+        try:
+            if queued:
+                svc.serving(max_wait_ms=1.0,
+                            ingest_queue=max(1024, 2 * n_inserts))
+            t_all = _time.perf_counter()
+            for i in range(n_inserts):
+                sql = ("INSERT INTO chunks (id, session_id, type, content,"
+                       " created_at) VALUES "
+                       f"({base_id + i}, 'bench-ingest', 'assistant', "
+                       f"'durable ingest payload row {i} with enough text "
+                       f"to embed', {float(NOW - i)})")
+                t0 = _time.perf_counter()
+                res = svc.flex_search(sql)
+                lat.append((_time.perf_counter() - t0) * 1e3)
+                assert res.ok, res.error
+            embedded_async = (svc.stats()["ingest"]["embedded"]
+                              if queued else 0)
+            svc.close()  # queued: flushes the vectorizer, then checkpoints
+            total_ms = (_time.perf_counter() - t_all) * 1e3
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+        name = "insert_queued" if queued else "insert_inline"
+        row = {
+            "total_ms": round(total_ms, 3),
+            "inserts": n_inserts,
+            "p50_ms": round(float(np.percentile(lat, 50)), 3),
+            "p99_ms": round(float(np.percentile(lat, 99)), 3),
+        }
+        if queued:
+            row["embedded_in_idle_gaps"] = int(embedded_async)
+        emit(f"pem/ingest_{name}", total_ms / 1e3,
+             f"{n_inserts} inserts p50={row['p50_ms']}ms "
+             f"p99={row['p99_ms']}ms")
+        rows[name] = row
+
+    insert_cycle(queued=False)
+    insert_cycle(queued=True)
+
+    # recovery time: snapshot-only vs snapshot + delta replay
+    base_rows = max(64, int(round(20_000 * SCALE)))
+    delta = max(8, int(round(200 * SCALE)))
+    rng = np.random.default_rng(17)
+    tmp = tempfile.mkdtemp(prefix="flexvec-bench-recover-")
+    try:
+        path = Path(tmp) / "store"
+        store = SegmentedCorpusStore.open(path, dim=DIM)
+        store.append(np.arange(base_rows, dtype=np.int64),
+                     rng.standard_normal((base_rows, DIM)).astype(np.float32),
+                     np.full(base_rows, NOW))
+        store.checkpoint()
+        store.journal.close()
+
+        def reopen():
+            s = SegmentedCorpusStore.open(path, dim=DIM)
+            s.journal.close()
+            return s
+
+        t_snap = _best(reopen)
+        assert reopen().recovered_records == 0
+        rows["recovery_snapshot"] = {
+            "total_ms": round(t_snap * 1e3, 3),
+            "rows": base_rows,
+            "replayed_records": 0,
+        }
+        emit("pem/ingest_recovery_snapshot", t_snap,
+             f"{base_rows} rows, 0 records replayed")
+
+        store = SegmentedCorpusStore.open(path, dim=DIM)
+        for j in range(delta):
+            store.append(
+                np.asarray([1_000_000 + j], dtype=np.int64),
+                rng.standard_normal((1, DIM)).astype(np.float32),
+                np.asarray([NOW]))
+        store.journal.close()
+        t_delta = _best(reopen)
+        assert reopen().recovered_records == delta
+        rows["recovery_delta"] = {
+            "total_ms": round(t_delta * 1e3, 3),
+            "rows": base_rows + delta,
+            "replayed_records": delta,
+        }
+        emit("pem/ingest_recovery_delta", t_delta,
+             f"{base_rows + delta} rows, {delta} records replayed")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
 def run_prefilter() -> None:
     """Standalone filtered-retrieval sweep (the old ``table3`` suite,
     folded into the snapshot's gated ``prefilter_backends`` scenario)."""
@@ -1158,6 +1296,7 @@ def run() -> None:
     serve_rows = _bench_serve()
     scale1m_n, scale1m_rows = _bench_scale1m()
     cohort_rows = _bench_cohort_throughput()
+    ingest_rows = _bench_ingest_durability()
     snapshot = {
         "bench": "pem_phase2_composed",
         "tokens": TOKENS,
@@ -1176,6 +1315,7 @@ def run() -> None:
         "scale_1m": scale1m_rows,
         "scale_1m_chunks": scale1m_n,
         "cohort_throughput": cohort_rows,
+        "ingest_durability": ingest_rows,
     }
     SNAPSHOT_PATH.write_text(json.dumps(snapshot, indent=2) + "\n")
     print(f"# wrote {SNAPSHOT_PATH}", flush=True)

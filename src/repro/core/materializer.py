@@ -490,37 +490,66 @@ class Materializer:
                 f"SELECT id, content, created_at, embedding FROM _raw_chunks "
                 f"WHERE id IN ({ph}) ORDER BY id", ids
             ).fetchall()
-            emb = np.empty((len(rows), self.cache.dim), dtype=np.float32)
+            # queued-worker path: with a serving engine carrying a
+            # background vectorizer, rows WITHOUT embeddings enqueue for
+            # batch embedding in the scheduler's idle gaps (the INSERT
+            # returns after enqueue — no inline embedder round-trip on the
+            # SQL path); rows WITH embeddings still seal a segment now.
+            # Without a vectorizer the legacy inline embed applies.
+            vectorize = (self.serving is not None
+                         and getattr(self.serving, "vectorizer", None)
+                         is not None)
+            ready: List[tuple] = []
+            queued: List[Tuple[int, str, Optional[float]]] = []
             blob_updates = []
-            for i, (cid, content, _created, blob) in enumerate(rows):
+            emb_rows: List[np.ndarray] = []
+            for cid, content, created, blob in rows:
                 if blob is not None:
-                    emb[i] = np.frombuffer(blob, dtype=np.float32,
-                                           count=self.cache.dim)
+                    emb_rows.append(np.frombuffer(
+                        blob, dtype=np.float32, count=self.cache.dim))
+                    ready.append((cid, content, created))
+                elif vectorize:
+                    queued.append((cid, content or "", created))
                 else:
                     if self.cache.embed_fn is None:
                         raise MaterializeError(
                             "ingest: rows without embeddings need an embed "
                             "function on the cache"
                         )
-                    emb[i] = self.cache.embed_fn(content or "")
-                    blob_updates.append((emb[i].tobytes(), cid))
+                    vec = np.asarray(self.cache.embed_fn(content or ""),
+                                     dtype=np.float32)
+                    emb_rows.append(vec)
+                    blob_updates.append((vec.tobytes(), cid))
+                    ready.append((cid, content, created))
             if blob_updates:
                 self.conn.executemany(
                     "UPDATE _raw_chunks SET embedding = ? WHERE id = ?",
                     blob_updates,
                 )
-            # external-content FTS5 needs explicit sync
+            # external-content FTS5 needs explicit sync (queued rows too:
+            # the lexical leg serves them before their embedding lands)
             self.conn.executemany(
                 f"INSERT INTO {self.fts_table} (rowid, content) "
                 f"VALUES (?, ?)",
                 [(r[0], r[1] or "") for r in rows],
             )
-            self.cache.ingest(
-                [r[0] for r in rows], emb,
-                [r[2] or 0.0 for r in rows]
-                if self.cache.store.has_timestamps
-                or not self.cache.store.n_segments else None,
-            )
+            if ready:
+                emb = np.stack(emb_rows).astype(np.float32, copy=False)
+                self.cache.ingest(
+                    [r[0] for r in ready], emb,
+                    [r[2] or 0.0 for r in ready]
+                    if self.cache.store.has_timestamps
+                    or not self.cache.store.n_segments else None,
+                )
+            if queued:
+                # LAST step before commit: a full queue (backpressure)
+                # rolls the whole INSERT back, and nothing fallible runs
+                # after the rows are journaled as accepted
+                try:
+                    self.serving.enqueue_ingest(queued)
+                except RuntimeError as e:
+                    raise MaterializeError(
+                        f"ingest enqueue failed: {e}") from e
         except (sqlite3.Error, ValueError) as e:
             self.conn.rollback()
             raise MaterializeError(f"ingest INSERT failed: {e}") from e
@@ -548,6 +577,12 @@ class Materializer:
         removed = delete_chunks(self.conn, ids, fts_table=self.fts_table)
         if self.cache is not None and removed:
             self.cache.delete(removed)
+        if removed and self.serving is not None:
+            vec = getattr(self.serving, "vectorizer", None)
+            if vec is not None:
+                # a row may still be queued for background embedding: the
+                # DELETE must not let the worker resurrect it later
+                vec.queue.discard(removed)
         return ["id"], [(i,) for i in removed]
 
     def _fts_query(self, term: str, limit: int = M.DEFAULT_POOL) -> List[tuple]:

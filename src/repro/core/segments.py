@@ -32,12 +32,19 @@ resolve global rows against a segment-list snapshot.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import modulations as M
+from repro.core.journal import (
+    FaultPlan,
+    JournalRecord,
+    StoreJournal,
+    recover_pending,
+)
 
 __all__ = [
     "CorpusSegment",
@@ -259,9 +266,18 @@ class SegmentedCorpusStore:
     across snapshot + scoring, so ingest is usable *between* batches
     without torn reads.  ``version`` bumps on every mutation — consumers
     (the VectorCache live view) use it for cheap invalidation.
+
+    Durability: pass ``journal=`` (a :class:`~repro.core.journal.
+    StoreJournal`) and every mutation is journaled + fsync'd BEFORE it is
+    applied in memory — an acknowledged write survives a crash at any
+    point.  :meth:`open` recovers a store from its journal directory
+    (snapshot + post-snapshot delta replay, torn-tail tolerant);
+    :meth:`checkpoint` writes a fresh snapshot and rotates the journal so
+    the next recovery replays only the records since.
     """
 
-    def __init__(self, dim: int) -> None:
+    def __init__(self, dim: int, *,
+                 journal: Optional[StoreJournal] = None) -> None:
         self.dim = int(dim)
         self._segments: List[CorpusSegment] = []
         self._loc: Dict[int, Tuple[CorpusSegment, int]] = {}
@@ -271,6 +287,11 @@ class SegmentedCorpusStore:
         self.appends = 0
         self.deletes = 0
         self.compactions = 0
+        self.journal = journal
+        self.checkpoints = 0
+        self.recovered_records = 0
+        self.recovered_pending: List[Tuple[int, str, Optional[float]]] = []
+        self.recovered_dead_letters: List[Dict[str, Any]] = []
 
     # -- introspection -------------------------------------------------------
 
@@ -301,7 +322,7 @@ class SegmentedCorpusStore:
 
     def stats(self) -> Dict[str, int]:
         with self.lock:
-            return {
+            out = {
                 "segments": self.n_segments,
                 "rows": self.n_rows,
                 "live": self.n_live,
@@ -311,6 +332,16 @@ class SegmentedCorpusStore:
                 "compactions": self.compactions,
                 "version": self.version,
             }
+            if self.journal is not None:
+                out["checkpoints"] = self.checkpoints
+                out["recovered_records"] = self.recovered_records
+                out["journal_bytes"] = self.journal.journal_bytes
+            return out
+
+    def _fault(self, point: str) -> None:
+        """Hit a FaultPlan crash point (no-op without an attached plan)."""
+        if self.journal is not None and self.journal.fault_plan is not None:
+            self.journal.fault_plan.reach(point)
 
     # -- mutations -----------------------------------------------------------
 
@@ -362,20 +393,39 @@ class SegmentedCorpusStore:
                 )
             if not normalized:
                 matrix = np.asarray(M.l2_normalize(matrix), dtype=np.float32)
-            seg = CorpusSegment(
-                seg_id=self._next_seg_id,
-                ids=ids_arr,
-                matrix=matrix,
-                timestamps=ts,
-                tombstones=np.zeros(ids_arr.shape[0], dtype=bool),
-            )
-            self._next_seg_id += 1
-            self._segments = self._segments + [seg]
-            for row, cid in enumerate(ids_arr):
-                self._loc[int(cid)] = (seg, row)
-            self.version += 1
-            self.appends += 1
-            return seg
+            if self.journal is not None:
+                # WAL-first: the POST-normalization matrix is journaled so
+                # replay (normalized=True) reseals bit-identical rows
+                self.journal.append_record("append", {
+                    "seg_id": self._next_seg_id,
+                    "ids": ids_arr,
+                    "matrix": matrix,
+                    "timestamps": ts,
+                })
+                self._fault("append:post-journal")
+            return self._seal(ids_arr, matrix, ts)
+
+    def _seal(
+        self,
+        ids_arr: np.ndarray,
+        matrix: np.ndarray,
+        ts: Optional[np.ndarray],
+    ) -> CorpusSegment:
+        """Seal a validated, normalized batch (caller holds the lock)."""
+        seg = CorpusSegment(
+            seg_id=self._next_seg_id,
+            ids=ids_arr,
+            matrix=matrix,
+            timestamps=ts,
+            tombstones=np.zeros(ids_arr.shape[0], dtype=bool),
+        )
+        self._next_seg_id += 1
+        self._segments = self._segments + [seg]
+        for row, cid in enumerate(ids_arr):
+            self._loc[int(cid)] = (seg, row)
+        self.version += 1
+        self.appends += 1
+        return seg
 
     def delete(self, ids: Sequence[int], *, strict: bool = False) -> int:
         """Tombstone ``ids``; returns how many rows were newly tombstoned.
@@ -384,27 +434,33 @@ class SegmentedCorpusStore:
         """
         with self.lock:
             missing: List[int] = []
-            flipped = 0
+            to_flip: List[int] = []
+            seen: set = set()
             for cid in ids:
-                loc = self._loc.get(int(cid))
-                if loc is None:
-                    missing.append(int(cid))
-                    continue
-                seg, row = loc
-                if not seg.tombstones[row]:
-                    seg.tombstones[row] = True
-                    seg.n_dead += 1
-                    flipped += 1
-                del self._loc[int(cid)]
+                cid = int(cid)
+                if cid in seen or cid not in self._loc:
+                    missing.append(cid)
+                else:
+                    seen.add(cid)
+                    to_flip.append(cid)
             if missing and strict:
                 raise KeyError(
                     f"delete: ids not live in the store: {missing[:10]}"
                     + ("..." if len(missing) > 10 else "")
                 )
-            if flipped:
-                self.version += 1
-                self.deletes += 1
-            return flipped
+            if not to_flip:
+                return 0
+            if self.journal is not None:
+                self.journal.append_record(
+                    "delete", {"ids": np.asarray(to_flip, dtype=np.int64)})
+                self._fault("delete:post-journal")
+            for cid in to_flip:
+                seg, row = self._loc.pop(cid)
+                seg.tombstones[row] = True
+                seg.n_dead += 1
+            self.version += 1
+            self.deletes += 1
+            return len(to_flip)
 
     def compact(self, min_live_fraction: float = 1.0) -> int:
         """Merge sparse segments: every segment whose live fraction is
@@ -438,6 +494,17 @@ class SegmentedCorpusStore:
         segment at the first victim's position; caller holds the lock."""
         if not victims:
             return 0
+        if self.journal is not None:
+            # the fold is deterministic given the victims' seg_ids, so the
+            # record carries only those; replay redoes the merge itself
+            self.journal.append_record("compact", {
+                "victims": [s.seg_id for s in victims],
+                "merged_seg_id": self._next_seg_id,
+            })
+            self._fault("compact:post-journal")
+        return self._apply_fold(victims)
+
+    def _apply_fold(self, victims: List[CorpusSegment]) -> int:
         keep = [s for s in self._segments if s not in victims]
         first_at = self._segments.index(victims[0])
         insert_at = sum(1 for s in self._segments[:first_at]
@@ -467,6 +534,151 @@ class SegmentedCorpusStore:
         self.version += 1
         self.compactions += 1
         return len(victims)
+
+    # -- durability: open / checkpoint / replay ------------------------------
+
+    @classmethod
+    def open(
+        cls,
+        path: os.PathLike,
+        dim: Optional[int] = None,
+        *,
+        fault_plan: Optional[FaultPlan] = None,
+        fsync: bool = True,
+    ) -> "SegmentedCorpusStore":
+        """Open (or create) a journal-backed store at ``path``.
+
+        Recovery = load the last snapshot (if any) + replay only the
+        post-snapshot journal delta; ``recovered_records`` counts the
+        replayed records (the O(delta) pin) and a torn/truncated tail
+        record is tolerated (replay stops cleanly before it).  Rows that
+        were enqueued for background embedding but never embedded
+        resurface in ``recovered_pending`` (with any ``recovered_dead_
+        letters``) for the vectorizer to re-adopt.  ``dim`` is required
+        only for a brand-new (empty) journal directory.
+        """
+        journal = StoreJournal(path, fault_plan=fault_plan, fsync=fsync)
+        snap = journal.load_snapshot()
+        after = int(snap["seq"]) if snap is not None else -1
+        records = list(journal.replay(after_seq=after))
+        journal.truncate_torn_tail()
+        if snap is not None:
+            if dim is not None and int(snap["dim"]) != int(dim):
+                raise ValueError(
+                    f"open: dim {dim} != snapshot dim {snap['dim']}")
+            store = cls(int(snap["dim"]))
+            store._restore_snapshot(snap)
+        else:
+            if dim is None:
+                for rec in records:
+                    if rec.kind == "append":
+                        dim = int(rec.payload["matrix"].shape[1])
+                        break
+            if dim is None:
+                raise ValueError(
+                    "open: empty journal directory needs an explicit dim")
+            store = cls(int(dim))
+        # journal attaches AFTER replay so re-applied records don't re-journal
+        for rec in records:
+            store._apply_record(rec)
+        store.recovered_records = len(records)
+        pending, dead = recover_pending(
+            snap, records, set(store._loc.keys()))
+        store.recovered_pending = pending
+        store.recovered_dead_letters = dead
+        store.journal = journal
+        return store
+
+    def checkpoint(
+        self,
+        pending: Sequence[Tuple[int, str, Optional[float]]] = (),
+        dead_letters: Sequence[Dict[str, Any]] = (),
+    ) -> None:
+        """Snapshot the full sealed-segment state and rotate the journal.
+
+        ``pending``/``dead_letters`` carry the vectorizer's not-yet-
+        embedded queue into the snapshot (their journal records rotate
+        away with everything else).  After a checkpoint, recovery replays
+        only records written since — keep calling it periodically and
+        recovery stays O(delta).
+        """
+        if self.journal is None:
+            raise RuntimeError("checkpoint: store has no journal attached")
+        with self.lock:
+            state = {
+                "dim": self.dim,
+                "next_seg_id": self._next_seg_id,
+                "version": self.version,
+                "appends": self.appends,
+                "deletes": self.deletes,
+                "compactions": self.compactions,
+                "segments": [
+                    {
+                        "seg_id": s.seg_id,
+                        "ids": s.ids,
+                        "matrix": s.matrix,
+                        "timestamps": s.timestamps,
+                        "tombstones": s.tombstones,
+                        "n_dead": s.n_dead,
+                    }
+                    for s in self._segments
+                ],
+                "pending": [tuple(r) for r in pending],
+                "dead_letters": [dict(d) for d in dead_letters],
+            }
+            self.journal.write_snapshot(state)
+            self.checkpoints += 1
+
+    def _restore_snapshot(self, snap: Dict[str, Any]) -> None:
+        with self.lock:
+            segs: List[CorpusSegment] = []
+            for s in snap["segments"]:
+                segs.append(CorpusSegment(
+                    seg_id=int(s["seg_id"]),
+                    ids=s["ids"],
+                    matrix=s["matrix"],
+                    timestamps=s["timestamps"],
+                    tombstones=s["tombstones"],
+                    n_dead=int(s["n_dead"]),
+                ))
+            self._segments = segs
+            self._loc = {}
+            for seg in segs:
+                for row in np.nonzero(~seg.tombstones)[0]:
+                    self._loc[int(seg.ids[row])] = (seg, int(row))
+            self._next_seg_id = int(snap["next_seg_id"])
+            self.version = int(snap["version"])
+            self.appends = int(snap["appends"])
+            self.deletes = int(snap["deletes"])
+            self.compactions = int(snap["compactions"])
+
+    def _apply_record(self, rec: JournalRecord) -> None:
+        """Re-apply one journal record during recovery (journal detached,
+        so nothing is re-journaled; replay is deterministic and the
+        journaled seg_ids double as a divergence check)."""
+        kind, p = rec.kind, rec.payload
+        if kind == "append":
+            seg = self.append(
+                p["ids"], p["matrix"], p["timestamps"], normalized=True)
+            if seg is not None and seg.seg_id != int(p["seg_id"]):
+                raise ValueError(
+                    f"replay divergence: sealed seg_id {seg.seg_id} != "
+                    f"journaled {p['seg_id']}")
+        elif kind == "delete":
+            self.delete(p["ids"])
+        elif kind == "compact":
+            want = {int(v) for v in p["victims"]}
+            with self.lock:
+                victims = [s for s in self._segments if s.seg_id in want]
+                if len(victims) != len(want):
+                    raise ValueError(
+                        f"replay divergence: compaction victims {sorted(want)} "
+                        f"not all present")
+                self._fold(victims)
+        elif kind in ("enqueue", "dead_letter"):
+            pass  # ingest-queue records; folded in by recover_pending
+        else:
+            raise ValueError(f"unknown journal record kind {kind!r}")
 
     # -- id lookups ----------------------------------------------------------
 

@@ -72,13 +72,15 @@ from __future__ import annotations
 import concurrent.futures as cf
 import functools
 import multiprocessing as mp
+import os
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core import modulations as M
+from repro.core.journal import StoreJournal
 from repro.core.backends import (fusion_bias_arrays, get_backend, mmr_host,
                                  score_select_segments, selection_width,
                                  top_idx)
@@ -115,11 +117,23 @@ class ShardWorker:
         engine: str = "fused-numpy",
         dtype: str = "f32",
         block: Optional[int] = None,
+        replica: int = 0,
+        journal_dir: Optional[str] = None,
+        fsync: bool = True,
     ) -> None:
         if dtype not in _DTYPES:
             raise ValueError(f"dtype must be one of {_DTYPES}, got {dtype!r}")
         self.shard_id = int(shard_id)
-        self.store = SegmentedCorpusStore(dim)
+        self.replica = int(replica)
+        if journal_dir is not None:
+            # each replica owns its own journal subdir, so every replica
+            # recovers its shard slice independently after a crash
+            self.store = SegmentedCorpusStore.open(
+                os.path.join(journal_dir,
+                             f"shard{self.shard_id}-r{self.replica}"),
+                dim, fsync=fsync)
+        else:
+            self.store = SegmentedCorpusStore(dim)
         self.backend = get_backend(engine)
         self.dtype = dtype
         self.block = int(block) if block else _BLOCK_DEFAULTS[dtype]
@@ -157,6 +171,27 @@ class ShardWorker:
 
     def compact(self, min_live_fraction: float = 1.0) -> int:
         return self.store.compact(min_live_fraction)
+
+    # -- durability -----------------------------------------------------------
+
+    def live_ids(self) -> np.ndarray:
+        """This replica's live chunk ids (coordinator reconciliation)."""
+        with self.store.lock:
+            segs = self.store.segments
+            if not segs:
+                return np.empty(0, dtype=np.int64)
+            return np.concatenate([s.ids[s.live_mask] for s in segs])
+
+    def checkpoint(self) -> int:
+        """Snapshot + rotate this replica's journal (no-op unjournaled)."""
+        if self.store.journal is None:
+            return 0
+        self.store.checkpoint()
+        return self.store.checkpoints
+
+    def close(self) -> None:
+        if self.store.journal is not None:
+            self.store.journal.close()
 
     # -- scoring --------------------------------------------------------------
 
@@ -430,7 +465,7 @@ class ShardWorker:
             scoring_bytes = codes_bytes
         else:
             scoring_bytes = int(matrix_bytes)
-        return {
+        out = {
             "shard": self.shard_id,
             "dtype": self.dtype,
             "rows": st["rows"],
@@ -449,6 +484,10 @@ class ShardWorker:
             "cohort_passes": self.cohort_passes,
             "cohort_plans": self.cohort_plans,
         }
+        for key in ("checkpoints", "recovered_records", "journal_bytes"):
+            if key in st:
+                out[key] = st[key]
+        return out
 
 
 # -- transports ---------------------------------------------------------------
@@ -458,20 +497,22 @@ class _LocalClient:
     """In-process replica (the ``inline`` and ``thread`` transports —
     thread parallelism lives in the group's fan-out pool, not here)."""
 
-    def __init__(self, shard_id: int, dim: int, opts: Dict[str, Any]) -> None:
-        self.worker = ShardWorker(shard_id, dim, **opts)
+    def __init__(self, shard_id: int, replica: int, dim: int,
+                 opts: Dict[str, Any]) -> None:
+        self.worker = ShardWorker(shard_id, dim, replica=replica, **opts)
 
     def call(self, method: str, *args, **kwargs):
         return getattr(self.worker, method)(*args, **kwargs)
 
     def close(self) -> None:
-        pass
+        self.worker.close()
 
 
-def _worker_loop(conn, shard_id: int, dim: int, opts: Dict[str, Any]) -> None:
+def _worker_loop(conn, shard_id: int, replica: int, dim: int,
+                 opts: Dict[str, Any]) -> None:
     """Child-process server: one ShardWorker, pickle-RPC over a Pipe.
     Never imports jax — the numpy backends resolve without it."""
-    worker = ShardWorker(shard_id, dim, **opts)
+    worker = ShardWorker(shard_id, dim, replica=replica, **opts)
     try:
         while True:
             msg = conn.recv()
@@ -485,6 +526,7 @@ def _worker_loop(conn, shard_id: int, dim: int, opts: Dict[str, Any]) -> None:
     except (EOFError, KeyboardInterrupt):
         pass
     finally:
+        worker.close()
         conn.close()
 
 
@@ -492,13 +534,14 @@ class _ProcessClient:
     """One OS-process replica behind a Pipe (fork-preferred: the corpus
     arrays and imported modules are shared copy-on-write at start)."""
 
-    def __init__(self, shard_id: int, dim: int, opts: Dict[str, Any]) -> None:
+    def __init__(self, shard_id: int, replica: int, dim: int,
+                 opts: Dict[str, Any]) -> None:
         method = ("fork" if "fork" in mp.get_all_start_methods()
                   else mp.get_start_method(allow_none=False))
         ctx = mp.get_context(method)
         self._conn, child = ctx.Pipe()
         self._proc = ctx.Process(
-            target=_worker_loop, args=(child, shard_id, dim, opts),
+            target=_worker_loop, args=(child, shard_id, replica, dim, opts),
             daemon=True)
         self._proc.start()
         child.close()
@@ -564,6 +607,8 @@ class ProcessGroup:
         dtype: str = "f32",
         engine: str = "fused-numpy",
         block: Optional[int] = None,
+        journal_dir: Optional[str] = None,
+        fsync: bool = True,
     ) -> None:
         if transport not in _TRANSPORTS:
             raise ValueError(
@@ -575,9 +620,14 @@ class ProcessGroup:
         self.replicas = int(replicas)
         self.transport = transport
         self.dtype = dtype
+        self.journal_dir = None if journal_dir is None else str(journal_dir)
         opts = {"engine": engine, "dtype": dtype, "block": block}
+        if self.journal_dir is not None:
+            os.makedirs(self.journal_dir, exist_ok=True)
+            opts["journal_dir"] = self.journal_dir
+            opts["fsync"] = fsync
         mk = _ProcessClient if transport == "process" else _LocalClient
-        self._clients = [[mk(s, dim, opts) for _ in range(self.replicas)]
+        self._clients = [[mk(s, r, dim, opts) for r in range(self.replicas)]
                          for s in range(self.n_shards)]
         self._pool = (None if transport == "inline" else cf.ThreadPoolExecutor(
             self.n_shards * self.replicas,
@@ -600,6 +650,16 @@ class ProcessGroup:
         self._fail_lock = threading.Lock()
         self.failovers = 0
         self._closed = False
+        # coordinator journal: group-level append/delete records (row ->
+        # shard routing + insertion ranks) so open() rebuilds the merge
+        # bookkeeping without rescanning every shard
+        self.journal = (None if self.journal_dir is None else StoreJournal(
+            os.path.join(self.journal_dir, "coordinator"), fsync=fsync))
+        self.checkpoints = 0
+        self.recovered_records = 0
+        self.reconciled_drops = 0
+        if self.journal is not None:
+            self._recover()
 
     # -- lifecycle ------------------------------------------------------------
 
@@ -619,12 +679,109 @@ class ProcessGroup:
         group.append(ids, matrix, timestamps, normalized=normalized)
         return group
 
+    @classmethod
+    def open(cls, journal_dir: str, dim: int, **kwargs) -> "ProcessGroup":
+        """Recover a journaled group: every shard replica reopens its
+        store from its own journal subdir, the coordinator replays its
+        group-level journal to rebuild the routing/rank maps, and rows
+        caught in the crash window (fanned out but never coordinator-
+        acknowledged, or the reverse for deletes) are reconciled away.
+        ``n_shards``/``replicas``/``dtype`` must match the writer's."""
+        return cls(dim, journal_dir=journal_dir, **kwargs)
+
+    def _recover(self) -> None:
+        """Coordinator recovery: snapshot + delta replay, then reconcile
+        the routing maps against what the shard stores actually hold.
+
+        The acknowledgement order is shards-first (each worker journals
+        WAL-first inside its own ``append``), coordinator journal second.
+        So after a crash either side may be ahead by one un-acked
+        mutation; the coordinator journal is the source of truth for what
+        was ACKED, and both directions converge to it:
+
+        * a row live on a shard but absent from the coordinator map was
+          never acknowledged -> tombstone it on that replica;
+        * a row the coordinator maps but some replica lacks was hit by an
+          un-acked delete -> drop it from the map (and from any replica
+          that still holds it, via the same orphan pass).
+        """
+        snap = self.journal.load_snapshot()
+        if snap is not None:
+            self._rank = {int(k): int(v) for k, v in snap["rank"].items()}
+            self._shard_of = {int(k): int(v)
+                              for k, v in snap["shard_of"].items()}
+            self._row_counter = int(snap["row_counter"])
+            self._has_ts = snap["has_ts"]
+        after = int(snap["seq"]) if snap is not None else -1
+        records = list(self.journal.replay(after_seq=after))
+        self.journal.truncate_torn_tail()
+        for rec in records:
+            p = rec.payload
+            if rec.kind == "group_append":
+                base = int(p["base"])
+                for j, (cid, s) in enumerate(zip(p["ids"], p["shards"])):
+                    self._rank[int(cid)] = base + j
+                    self._shard_of[int(cid)] = int(s)
+                self._row_counter = max(self._row_counter,
+                                        base + len(p["ids"]))
+                self._has_ts = bool(p["has_ts"])
+            elif rec.kind == "group_delete":
+                for cid in p["ids"]:
+                    self._shard_of.pop(int(cid), None)
+        self.recovered_records = len(records)
+        # reconcile: coordinator map vs the recovered shard stores
+        coord: List[Set[int]] = [set() for _ in range(self.n_shards)]
+        for cid, s in self._shard_of.items():
+            coord[s].add(cid)
+        live = [[{int(i) for i in self._clients[s][r].call("live_ids")}
+                 for r in range(self.replicas)]
+                for s in range(self.n_shards)]
+        ghosts: Set[int] = set()
+        for s in range(self.n_shards):
+            for r in range(self.replicas):
+                ghosts |= coord[s] - live[s][r]
+        for cid in ghosts:
+            self._shard_of.pop(cid, None)
+        dropped: Set[int] = set(ghosts)
+        for s in range(self.n_shards):
+            keep = coord[s] - ghosts
+            for r in range(self.replicas):
+                orphans = live[s][r] - keep
+                if orphans:
+                    dropped |= orphans
+                    self._clients[s][r].call(
+                        "delete",
+                        np.asarray(sorted(orphans), dtype=np.int64))
+        self.reconciled_drops = len(dropped)
+
+    def checkpoint(self) -> int:
+        """Snapshot the coordinator maps AND every shard replica's store,
+        rotating all journals — the next :meth:`open` replays only the
+        records written since.  Returns coordinator checkpoints so far."""
+        if self.journal is None:
+            return 0
+        calls = [functools.partial(self._mutation_call, s, r, "checkpoint")
+                 for s in range(self.n_shards)
+                 for r in range(self.replicas)]
+        self._fanout(calls)
+        with self._lock:
+            self.journal.write_snapshot({
+                "rank": dict(self._rank),
+                "shard_of": dict(self._shard_of),
+                "row_counter": self._row_counter,
+                "has_ts": self._has_ts,
+            })
+            self.checkpoints += 1
+        return self.checkpoints
+
     def close(self) -> None:
         if self._closed:
             return
         self._closed = True
         if self._pool is not None:
             self._pool.shutdown(wait=False)
+        if self.journal is not None:
+            self.journal.close()
         for row in self._clients:
             for client in row:
                 client.close()
@@ -689,6 +846,16 @@ class ProcessGroup:
                         self._mutation_call, s, r, "append", *part,
                         normalized=normalized))
             self._fanout(calls)
+            # shards ack first (each worker journals WAL-first); the
+            # coordinator record IS the group-level acknowledgement —
+            # open() drops shard rows that never reached this line
+            if self.journal is not None:
+                self.journal.append_record("group_append", {
+                    "ids": [int(i) for i in ids_arr],
+                    "shards": [int(s_) for s_ in shard],
+                    "base": int(self._row_counter),
+                    "has_ts": ts is not None,
+                })
             for j, cid in enumerate(ids_arr):
                 self._rank[int(cid)] = self._row_counter + j
                 self._shard_of[int(cid)] = int(shard[j])
@@ -716,6 +883,10 @@ class ProcessGroup:
                     calls.append(functools.partial(
                         self._mutation_call, s, r, "delete", arr))
             results = self._fanout(calls)
+            if self.journal is not None:
+                self.journal.append_record("group_delete", {
+                    "ids": [cid for victims in by_shard.values()
+                            for cid in victims]})
             for victims in by_shard.values():
                 for cid in victims:
                     del self._shard_of[cid]
@@ -941,6 +1112,12 @@ class ProcessGroup:
                 first.get("corpus_streams", 0))
         max_live = max(live_per_shard, default=0)
         min_live = min(live_per_shard, default=0)
+        journal = ({} if self.journal is None else {
+            "checkpoints": self.checkpoints,
+            "recovered_records": self.recovered_records,
+            "reconciled_drops": self.reconciled_drops,
+            "journal_bytes": self.journal.journal_bytes,
+        })
         return {
             "n_shards": self.n_shards,
             "replicas": self.replicas,
@@ -961,4 +1138,5 @@ class ProcessGroup:
             },
             "corpus_streams": streams,
             "shards": shard_rows,
+            **journal,
         }

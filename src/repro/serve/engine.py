@@ -224,6 +224,7 @@ class BatchedRetrievalEngine:
         adaptive_window: bool = True,
         compaction: Optional[CompactionPolicy] = None,
         shard_group: Optional[Any] = None,
+        vectorizer: Optional[Any] = None,
     ):
         self.cache = cache
         self.max_batch = max_batch
@@ -243,19 +244,29 @@ class BatchedRetrievalEngine:
         # instead of scoring the local cache; admission, batching,
         # priorities and the pipeline overlap are unchanged
         self.shard_group = shard_group
+        # background ingest vectorizer (repro.serve.vectorizer.
+        # VectorizerWorker): when attached, the materializer enqueues
+        # missing-embedding INSERT rows here and the idle-gap hook (next
+        # to compaction) drains them in batches through the embedder
+        self.vectorizer = vectorizer
 
         # counters (single-writer or benign int bumps, same as the store's)
         self.batches_served = 0
         self.requests_served = 0
         self.rejected = 0            # admissions refused at capacity
+        self.shed_low_priority = 0   # queued requests evicted for a
+        #                              higher-priority newcomer at capacity
         self.deadline_misses = 0     # requests expired at collect time
         self.overlapped_batches = 0  # device pass ran while prev tail ran
         self.overlapped_collects = 0  # admission windows held open on a
         #                               busy device (async dispatch)
         self.windows_extended = 0    # adaptive windows that outlingered base
         self.compactions_run = 0     # idle-gap compactions that folded
+        self.vectorizer_drains = 0   # idle-gap vectorizer batches ingested
 
         self._depth = 0              # queued, not yet collected into a batch
+        self._queued: Dict[int, Request] = {}  # seq -> queued request, the
+        #                              shedding candidate set (admission lock)
         self._admission_lock = threading.Lock()
         self._closed = False         # no new admissions (set by close())
         self._closing = False        # loop-confined shutdown flag
@@ -346,7 +357,9 @@ class BatchedRetrievalEngine:
     def close(self) -> None:
         """Stop the scheduler and DRAIN the queue: every request not yet
         served fails with :class:`EngineClosedError` immediately — nothing
-        hangs into its timeout."""
+        hangs into its timeout.  Pending ingest is NOT dropped: the
+        vectorizer queue is flushed (every accepted row either embeds or
+        dead-letters within its retry budget) before the executors stop."""
         with self._admission_lock:
             if self._closed:
                 return
@@ -357,6 +370,10 @@ class BatchedRetrievalEngine:
             pass
         self._done.wait(timeout=30.0)
         self._thread.join(timeout=2.0)
+        if self.vectorizer is not None:
+            # the scheduler has stopped (no concurrent idle-gap drain);
+            # flush on the closing thread so accepted INSERTs land
+            self.vectorizer.flush()
         if not self._thread.is_alive():
             # closing the loop makes a racing _submit's
             # call_soon_threadsafe raise (-> EngineClosedError) instead
@@ -386,11 +403,27 @@ class BatchedRetrievalEngine:
         return seg
 
     def delete(self, ids: Sequence[int], *, strict: bool = False) -> int:
-        """Tombstone chunks between batches; returns rows tombstoned."""
+        """Tombstone chunks between batches; returns rows tombstoned.
+        Rows still waiting in the ingest queue are discarded too — a
+        DELETE racing a not-yet-embedded INSERT must not resurrect it."""
         removed = self.cache.delete(ids, strict=strict)
+        if self.vectorizer is not None:
+            self.vectorizer.queue.discard(ids)
         if self.shard_group is not None:
             self.shard_group.delete(ids)
         return removed
+
+    def enqueue_ingest(self, rows: Sequence[Tuple[int, str,
+                                                  Optional[float]]]) -> int:
+        """Admit ``(chunk_id, content, timestamp)`` rows to the background
+        vectorizer (the materializer's INSERT path when embeddings are
+        missing).  Raises :class:`~repro.serve.vectorizer.
+        IngestQueueFullError` at capacity — ingest backpressure surfaces
+        to the SQL caller like admission backpressure does to search."""
+        if self.vectorizer is None:
+            raise RuntimeError(
+                "enqueue_ingest: engine has no vectorizer attached")
+        return self.vectorizer.enqueue(rows)
 
     @property
     def queue_depth(self) -> int:
@@ -406,6 +439,7 @@ class BatchedRetrievalEngine:
             "batches_served": self.batches_served,
             "requests_served": self.requests_served,
             "rejected": self.rejected,
+            "shed_low_priority": self.shed_low_priority,
             "deadline_misses": self.deadline_misses,
             "overlapped_batches": self.overlapped_batches,
             "overlapped_collects": self.overlapped_collects,
@@ -414,6 +448,7 @@ class BatchedRetrievalEngine:
             "async_dispatch": self.async_dispatch,
             "adaptive_window": self.adaptive_window,
             "compactions_run": self.compactions_run,
+            "vectorizer_drains": self.vectorizer_drains,
         }
 
     # -- admission -----------------------------------------------------------
@@ -423,11 +458,33 @@ class BatchedRetrievalEngine:
             if self._closed:
                 raise EngineClosedError("engine is closed")
             if self._depth >= self.max_queue:
-                self.rejected += 1
-                raise QueueFullError(
-                    f"admission queue at capacity ({self.max_queue}); "
-                    f"retry with backoff")
-            self._depth += 1  # slot reserved before the (costly) parse
+                # priority-aware shedding: at capacity, evict the lowest-
+                # priority queued request (newest arrival among ties) and
+                # hand its slot to the newcomer; the newcomer is rejected
+                # only if it is itself lowest.  Selection, eviction and
+                # the victim's failure all happen under the admission
+                # lock, so collect (which pops under the same lock) can
+                # never serve an evicted request.
+                victim: Optional[Request] = None
+                if self._queued:
+                    low = min(self._queued.values(),
+                              key=lambda r: (r.priority, -r.seq))
+                    if low.priority < req.priority:
+                        victim = low
+                if victim is None:
+                    self.rejected += 1
+                    raise QueueFullError(
+                        f"admission queue at capacity ({self.max_queue}); "
+                        f"retry with backoff")
+                del self._queued[victim.seq]
+                self.shed_low_priority += 1
+                self._fail(victim, QueueFullError(
+                    f"shed at capacity for a priority-{req.priority} "
+                    f"request (this request was priority {victim.priority})"),
+                    count_depth=False)  # its slot transfers to the newcomer
+            else:
+                self._depth += 1  # slot reserved before the (costly) parse
+            self._queued[req.seq] = req
         try:
             if req.plan is not None:
                 # pre-parsed plan handed over (materializer path): skip
@@ -444,17 +501,20 @@ class BatchedRetrievalEngine:
                 req.plan = self._parse(req)
             req.apply_plan_filter()
         except Exception:
-            self._dec_depth(1)
+            self._release_slot(req)
             raise
         try:
             self._loop.call_soon_threadsafe(self._admit, req)
         except RuntimeError:  # loop closed between the check and the call
-            self._dec_depth(1)
+            self._release_slot(req)
             raise EngineClosedError("engine is closed") from None
 
-    def _dec_depth(self, n: int) -> None:
+    def _release_slot(self, req: Request) -> None:
+        """Free one admission slot and drop the request from the shedding
+        candidate set (no-op on the latter if collect already took it)."""
         with self._admission_lock:
-            self._depth -= n
+            self._depth -= 1
+            self._queued.pop(req.seq, None)
 
     def _parse(self, req: Request):
         plan = parse(req.tokens, self.cache.embed_fn,
@@ -517,6 +577,8 @@ class BatchedRetrievalEngine:
         finally:
             pending, self._pending = self._pending, []
             for req in pending:
+                if req.future.done():
+                    continue  # shed at admission; slot already transferred
                 self._fail(req, EngineClosedError(
                     "engine closed before the request was served"))
             if self._finish_task is not None:
@@ -587,29 +649,48 @@ class BatchedRetrievalEngine:
         now_mono = time.monotonic()
         live: List[Request] = []
         expired: List[Request] = []
-        for req in self._pending:
-            (expired if req.expired(now_mono) else live).append(req)
+        with self._admission_lock:
+            # partition under the admission lock: a request shed by a
+            # concurrent _submit has a done future (set under this same
+            # lock) and is dropped here without touching its slot — that
+            # slot now belongs to the newcomer that evicted it
+            for req in self._pending:
+                if req.future.done():
+                    continue
+                (expired if req.expired(now_mono) else live).append(req)
+            live.sort(key=lambda r: (-r.priority, r.seq))
+            batch, rest = live[:self.max_batch], live[self.max_batch:]
+            self._depth -= len(batch) + len(expired)
+            for req in batch:
+                self._queued.pop(req.seq, None)
+            for req in expired:
+                self._queued.pop(req.seq, None)
+        self._pending = rest
         for req in expired:
             self.deadline_misses += 1
             self._fail(req, DeadlineExceededError(
                 f"deadline of {req.deadline_ms:.1f} ms passed before the "
-                f"request reached a batch"))
-        live.sort(key=lambda r: (-r.priority, r.seq))
-        batch, self._pending = live[:self.max_batch], live[self.max_batch:]
-        self._dec_depth(len(batch))
+                f"request reached a batch"), count_depth=False)
         return batch
 
     async def _idle_maintenance(self) -> None:
-        """Store maintenance in the scheduler's idle gaps.  Compaction
-        runs on the DEVICE executor and takes the store lock, so it can
-        never land inside a scoring pass — and never even queues behind
-        one mid-batch, because the executor is busy exactly then."""
-        policy = self.compaction
-        if policy is None:
-            return
+        """Store maintenance in the scheduler's idle gaps.  Both the
+        ingest vectorizer drain and compaction run on the DEVICE executor
+        and take the store lock, so neither can land inside a scoring
+        pass — and never even queues behind one mid-batch, because the
+        executor is busy exactly then."""
         if self._dev_fut is not None and not self._dev_fut.done():
             # async dispatch: a pass is in flight on the device executor —
-            # don't queue compaction behind it, the next idle gap will do
+            # don't queue maintenance behind it, the next idle gap will do
+            return
+        vec = self.vectorizer
+        if vec is not None and vec.has_due():
+            ingested = await self._loop.run_in_executor(
+                self._dev_pool, vec.drain_once)
+            if ingested:
+                self.vectorizer_drains += 1
+        policy = self.compaction
+        if policy is None:
             return
         store = self.cache.store
         if not policy.should_compact(store):
@@ -899,7 +980,7 @@ class BatchedRetrievalEngine:
               count_depth: bool = True) -> None:
         req.latency_ms = (time.monotonic() - req.enqueued_at) * 1e3
         if count_depth:
-            self._dec_depth(1)
+            self._release_slot(req)
         try:
             req.future.set_exception(err)
         except cf.InvalidStateError:  # pragma: no cover - already completed

@@ -64,14 +64,32 @@ class RetrievalService:
         embedder: Optional[HashEmbedder] = None,
         now: Optional[float] = None,
         engine: Union[str, ExecutionBackend] = "reference",
+        *,
+        store_path: Optional[Any] = None,
+        fault_plan: Optional[Any] = None,
     ):
         self.conn = conn
         self.embedder = embedder or HashEmbedder(dim)
         ids, matrix, ts = load_embedding_matrix(conn, dim)
+        self._fault_plan = fault_plan
         # the FTS5/BM25 resolver behind every keyword:/fuse: plan built
         # through this service — shares the materializer's quoting fallback
-        self.cache = VectorCache(ids, matrix, ts, self.embedder,
-                                 lexical_fn=self._lexical_scores)
+        if store_path is not None:
+            # durable mode: the segment store journals every mutation to
+            # ``store_path`` and recovers from its snapshot + delta on
+            # open; the SQLite matrix seeds it only when the journal is
+            # brand-new (afterwards the journal IS the vector-store truth)
+            from repro.core.segments import SegmentedCorpusStore
+
+            store = SegmentedCorpusStore.open(
+                store_path, dim=dim, fault_plan=fault_plan)
+            if store.n_rows == 0 and len(ids):
+                store.append(ids, matrix, ts)
+            self.cache = VectorCache(embed_fn=self.embedder, store=store,
+                                     lexical_fn=self._lexical_scores)
+        else:
+            self.cache = VectorCache(ids, matrix, ts, self.embedder,
+                                     lexical_fn=self._lexical_scores)
         self.now = now
         # one registry resolve for the service lifetime; every Materializer
         # this service builds shares the same backend instance — including
@@ -164,10 +182,28 @@ class RetrievalService:
 
     # -- async serving surface ----------------------------------------------
 
-    def serving(self, **engine_kwargs) -> "Any":
+    def serving(
+        self,
+        *,
+        vectorize: bool = True,
+        ingest_queue: int = 1024,
+        ingest_batch: int = 64,
+        ingest_max_attempts: int = 5,
+        ingest_base_backoff_s: float = 0.05,
+        **engine_kwargs,
+    ) -> "Any":
         """The service's continuous-batching engine, created on first use
         over the same VectorCache (same store, same compiled plans, same
         backend — batched and direct rankings stay bit-identical).
+
+        Unless ``vectorize=False``, the engine carries a background
+        ingest vectorizer: ``INSERT INTO chunks`` rows arriving without
+        embeddings enqueue (bounded at ``ingest_queue`` rows —
+        backpressure, not unbounded memory) and embed in batches of
+        ``ingest_batch`` in the scheduler's idle gaps, retrying embedder
+        failures with exponential backoff up to ``ingest_max_attempts``
+        before dead-lettering.  Rows recovered from a journal as
+        enqueued-but-never-embedded are re-adopted here.
 
         ``engine_kwargs`` (``max_batch``, ``max_wait_ms``, ``max_queue``,
         ``pipeline``, ``compaction``, ...) apply only on first creation.
@@ -176,10 +212,42 @@ class RetrievalService:
             if self._serving is None:
                 from repro.serve.engine import BatchedRetrievalEngine
 
+                vec = None
+                if vectorize:
+                    from repro.serve.vectorizer import (IngestQueue,
+                                                        VectorizerWorker)
+
+                    store = self.cache.store
+                    vec = VectorizerWorker(
+                        IngestQueue(ingest_queue),
+                        self.embedder,
+                        self._vectorizer_sink,
+                        batch_size=ingest_batch,
+                        max_attempts=ingest_max_attempts,
+                        base_backoff_s=ingest_base_backoff_s,
+                        journal=store.journal,
+                        fault_plan=self._fault_plan,
+                    )
+                    vec.adopt(store.recovered_pending,
+                              store.recovered_dead_letters)
+                    store.recovered_pending = []
+                    store.recovered_dead_letters = []
                 self._serving = BatchedRetrievalEngine(
                     self.cache, now=self.now, engine=self.engine,
-                    shard_group=self._shard_group, **engine_kwargs)
+                    shard_group=self._shard_group, vectorizer=vec,
+                    **engine_kwargs)
             return self._serving
+
+    def _vectorizer_sink(self, ids: List[int], vecs: np.ndarray,
+                         ts: List[Optional[float]]) -> None:
+        """Vectorizer batch -> sealed cache segment (+ shard mirror),
+        with the same timestamp-presence policy as the inline path."""
+        store = self.cache.store
+        use_ts = store.has_timestamps or not store.n_segments
+        stamps = [t or 0.0 for t in ts] if use_ts else None
+        self.cache.ingest(ids, vecs, stamps)
+        if self._shard_group is not None:
+            self._shard_group.append(ids, vecs, stamps)
 
     def shard_group(
         self,
@@ -254,11 +322,27 @@ class RetrievalService:
         return await asyncio.to_thread(self.delete, ids)
 
     def close(self) -> None:
-        """Shut down the attached serving engine (drains its queue) and
-        the shard group's worker replicas."""
-        if self._serving is not None:
-            self._serving.close()
-            self._serving = None
+        """Shut down the attached serving engine and the shard group's
+        worker replicas — WITHOUT dropping accepted ingest: the engine's
+        close flushes the vectorizer queue (every queued INSERT either
+        embeds or dead-letters within its retry budget), and a journaled
+        store writes a final checkpoint so the next open recovers the
+        exact serving state with zero replay."""
+        serving, self._serving = self._serving, None
+        if serving is not None:
+            serving.close()
+        store = self.cache.store
+        if store.journal is not None:
+            vec = serving.vectorizer if serving is not None else None
+            if vec is not None:
+                pending = vec.queue.snapshot_rows()  # empty unless a
+                #             sink failure interrupted the close flush
+                dead = vec.dead_letters
+            else:
+                pending = store.recovered_pending
+                dead = store.recovered_dead_letters
+            store.checkpoint(pending=pending, dead_letters=dead)
+            store.journal.close()
         if self._shard_group is not None:
             self._shard_group.close()
             self._shard_group = None
@@ -334,6 +418,25 @@ class RetrievalService:
         }
         if self._serving is not None:
             out["serving"] = self._serving.stats()
+        vec = (self._serving.vectorizer
+               if self._serving is not None else None)
+        store = self.cache.store
+        if vec is not None or store.journal is not None:
+            # the durable-ingest ledger: queue/worker counters plus the
+            # journal's recovery cost (records replayed at the last open,
+            # bytes a crash right now would have to replay)
+            ingest: Dict[str, Any] = {
+                "queued": 0, "in_queue": 0, "rejected": 0, "embedded": 0,
+                "batches": 0, "retries": 0, "dead_letter": 0,
+            }
+            if vec is not None:
+                ingest.update(vec.stats())
+            ingest["recovered_records"] = store.recovered_records
+            ingest["journal_bytes"] = (
+                store.journal.journal_bytes
+                if store.journal is not None else 0)
+            ingest["checkpoints"] = store.checkpoints
+            out["ingest"] = ingest
         if self._shard_group is not None:
             # topology + per-shard memory/latency rows (the million-chunk
             # capacity ledger: each shard reports its scoring-resident

@@ -406,3 +406,58 @@ def test_merge_min_folds_scale1m_section():
     b["scale_1m"] = {"sharded_bf16": _row(58.0)}
     merged = merge_min([a, b])
     assert merged["scale_1m"]["sharded_bf16"]["total_ms"] == 58.0
+
+
+def test_ingest_durability_section_gated_and_drop_fails():
+    """The durable-ingest scenario gates under the same rules: a slowed
+    journal fsync path or an O(corpus) recovery reads as a regression of
+    exactly the row that pins it, and dropping the whole section is
+    section-level silent omission."""
+    base = _snap({"jit-jax": _row(30.0)})
+    base["ingest_durability"] = {"insert_inline": _row(90.0),
+                                 "insert_queued": _row(80.0),
+                                 "recovery_snapshot": _row(4.0),
+                                 "recovery_delta": _row(6.0)}
+    ok = _snap({"jit-jax": _row(30.0)})
+    ok["ingest_durability"] = {"insert_inline": _row(95.0),
+                               "insert_queued": _row(85.0),
+                               "recovery_snapshot": _row(4.5),
+                               "recovery_delta": _row(6.5)}
+    failures, notes = compare_all(ok, base, DEFAULT_TOL)
+    assert failures == []
+    assert any(n.startswith("ingest_durability/") for n in notes)
+    bad = _snap({"jit-jax": _row(30.0)})
+    bad["ingest_durability"] = {"insert_inline": _row(90.0),
+                                "insert_queued": _row(80.0),
+                                "recovery_snapshot": _row(4.0),
+                                "recovery_delta": _row(60.0)}
+    failures, _ = compare_all(bad, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "ingest_durability/recovery_delta" in failures[0]
+    dropped = _snap({"jit-jax": _row(30.0)})
+    failures, _ = compare_all(dropped, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert "ingest_durability" in failures[0] and "dropped" in failures[0]
+
+
+def test_ingest_durability_row_missing_fails():
+    """Dropping ONE durable-ingest row (say the queued INSERT headline)
+    while keeping the section is row-level silent omission."""
+    base = _snap({})
+    base["ingest_durability"] = {"insert_inline": _row(90.0),
+                                 "insert_queued": _row(80.0)}
+    new = _snap({})
+    new["ingest_durability"] = {"insert_inline": _row(90.0)}
+    failures, _ = compare_all(new, base, DEFAULT_TOL)
+    assert len(failures) == 1
+    assert ("ingest_durability/insert_queued" in failures[0]
+            and "MISSING" in failures[0])
+
+
+def test_merge_min_folds_ingest_durability_section():
+    a = _snap({"jit-jax": _row(30.0)})
+    a["ingest_durability"] = {"insert_queued": _row(88.0)}
+    b = _snap({"jit-jax": _row(29.0)})
+    b["ingest_durability"] = {"insert_queued": _row(79.0)}
+    merged = merge_min([a, b])
+    assert merged["ingest_durability"]["insert_queued"]["total_ms"] == 79.0

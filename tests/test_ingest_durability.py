@@ -1,0 +1,721 @@
+"""Durable ingest: WAL recovery, fault injection, vectorizer, shedding.
+
+Every crash point a :class:`FaultPlan` can name is exercised: the store
+is driven to the point, the injected crash unwinds, and recovery from
+the on-disk journal must reproduce — bit for bit — the state an oracle
+store reached by applying exactly the acknowledged (journaled) ops.
+The vectorizer's retry/backoff schedule runs against a fake clock, so
+the exponential curve is asserted, not sampled.
+"""
+
+import os
+import sqlite3
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.journal import FaultPlan, InjectedCrash, StoreJournal
+from repro.core.segments import SegmentedCorpusStore
+from repro.core.vectorcache import VectorCache
+from repro.data.corpus import build_database, generate_corpus
+from repro.embed import HashEmbedder
+from repro.serve.engine import BatchedRetrievalEngine, QueueFullError
+from repro.serve.retrieval import RetrievalService
+from repro.serve.vectorizer import (IngestQueue, IngestQueueFullError,
+                                    VectorizerWorker)
+
+pytestmark = pytest.mark.durability
+
+DIM = 32
+RNG = np.random.default_rng(42)
+
+
+def _rows(n, start=0):
+    # seeded per (n, start): the oracle and the journaled store replay
+    # the same script and must see the same bytes
+    rng = np.random.default_rng(1_000 + 7 * start + n)
+    ids = np.arange(start, start + n, dtype=np.int64)
+    mat = rng.standard_normal((n, DIM)).astype(np.float32)
+    ts = np.linspace(0.0, 86400.0 * n, n)
+    return ids, mat, ts
+
+
+def wait_for(predicate, timeout=10.0, interval=0.005):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return False
+
+
+def assert_stores_identical(a: SegmentedCorpusStore,
+                            b: SegmentedCorpusStore) -> None:
+    """Bit-identical scoring state: same segments, same row order, same
+    matrices, same tombstones — hence identical rankings."""
+    assert a.n_segments == b.n_segments
+    assert a.n_live == b.n_live
+    for sa, sb in zip(a.segments, b.segments):
+        assert sa.seg_id == sb.seg_id
+        assert np.array_equal(sa.ids, sb.ids)
+        assert np.array_equal(sa.tombstones, sb.tombstones)
+        assert sa.matrix.tobytes() == sb.matrix.tobytes()  # bit-identical
+        if sa.timestamps is None:
+            assert sb.timestamps is None
+        else:
+            assert np.array_equal(sa.timestamps, sb.timestamps)
+
+
+# ---------------------------------------------------------------------------
+# store recovery: snapshot + delta replay, crash at every FaultPlan point
+# ---------------------------------------------------------------------------
+
+
+def _scripted_ops(store):
+    """The mutation script both the journaled store and the oracle run."""
+    ids, mat, ts = _rows(40)
+    store.append(ids, mat, ts)
+    store.delete([1, 5, 9])
+    ids2, mat2, ts2 = _rows(10, start=100)
+    store.append(ids2, mat2, ts2)
+    store.delete(list(range(0, 40, 2)))
+    store.compact(min_live_fraction=1.0)
+
+
+def test_reopen_matches_never_crashed_oracle(tmp_path):
+    oracle = SegmentedCorpusStore(DIM)
+    _scripted_ops(oracle)
+
+    store = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    _scripted_ops(store)
+    store.journal.close()
+
+    recovered = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    assert_stores_identical(recovered, oracle)
+    assert recovered.recovered_records == 5  # 2 appends + 2 deletes + compact
+
+
+@pytest.mark.parametrize("crash_at", [
+    "append:post-journal",
+    "delete:post-journal",
+    "compact:post-journal",
+    "snapshot:pre-rename",
+    "snapshot:post-rename",
+])
+def test_crash_at_every_point_recovers_to_oracle(tmp_path, crash_at):
+    """WAL-first: any op that reached its post-journal point IS durable —
+    recovery converges on the oracle that applied it.  The snapshot
+    points must not lose anything either way (a snapshot is not a
+    mutation, only a rotation)."""
+    plan = FaultPlan(crash_at=crash_at)
+    store = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM,
+                                      fault_plan=plan)
+    oracle = SegmentedCorpusStore(DIM)
+    ids, mat, ts = _rows(30)
+    ids2, mat2, ts2 = _rows(8, start=50)
+
+    with pytest.raises(InjectedCrash):
+        # drive until the configured point fires, mirroring each
+        # SUCCESSFUL op (and each journaled-but-interrupted one: the
+        # journal fsync'd before the crash point, so it is acknowledged
+        # state that recovery must reproduce) onto the oracle
+        store.append(ids, mat, ts)
+        oracle.append(ids, mat, ts)
+        if crash_at.startswith("snapshot:"):
+            store.checkpoint()
+        store.delete([2, 4])
+        oracle.delete([2, 4])
+        store.append(ids2, mat2, ts2)
+        oracle.append(ids2, mat2, ts2)
+        store.delete(list(range(0, 30, 2)))
+        oracle.delete(list(range(0, 30, 2)))
+        store.compact(min_live_fraction=1.0)
+        oracle.compact(min_live_fraction=1.0)
+        raise AssertionError(f"fault plan never fired: {crash_at}")
+    # the crashed op journaled before dying -> the oracle applies it too
+    if crash_at == "append:post-journal":
+        oracle.append(ids, mat, ts)
+    elif crash_at == "delete:post-journal":
+        oracle.delete([2, 4])
+    elif crash_at == "compact:post-journal":
+        # the delete already mirrored inside the script; only the
+        # journaled-but-unapplied fold is outstanding
+        oracle.compact(min_live_fraction=1.0)
+    assert crash_at in plan.fired
+
+    recovered = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    assert_stores_identical(recovered, oracle)
+
+    # the recovered store keeps working AND re-recovers identically
+    ids3, mat3, ts3 = _rows(5, start=200)
+    recovered.append(ids3, mat3, ts3)
+    oracle.append(ids3, mat3, ts3)
+    recovered.journal.close()
+    again = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    assert_stores_identical(again, oracle)
+
+
+def test_torn_tail_tolerated_and_truncated(tmp_path):
+    """A record torn mid-``write(2)`` is NOT acknowledged: replay stops
+    cleanly before it, the torn bytes are truncated away, and writes
+    after recovery are replayable (nothing hides behind garbage)."""
+    plan = FaultPlan()
+    store = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM,
+                                      fault_plan=plan)
+    ids, mat, ts = _rows(20)
+    store.append(ids, mat, ts)
+    plan.crash_at = "journal:torn-tail"  # arm: tear the NEXT record
+    ids2, mat2, ts2 = _rows(6, start=50)
+    with pytest.raises(InjectedCrash):
+        store.append(ids2, mat2, ts2)  # this frame is written only half
+
+    oracle = SegmentedCorpusStore(DIM)
+    oracle.append(ids, mat, ts)
+
+    recovered = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    assert_stores_identical(recovered, oracle)
+    assert recovered.journal.torn_tail_dropped == 1
+
+    # post-recovery writes land where replay will find them
+    recovered.append(ids2, mat2, ts2)
+    oracle.append(ids2, mat2, ts2)
+    recovered.journal.close()
+    again = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    assert_stores_identical(again, oracle)
+
+
+def test_recovery_is_o_delta_not_o_corpus(tmp_path):
+    """The O(delta) pin: after a checkpoint, recovery replays ONLY the
+    post-snapshot records, counted by ``recovered_records``."""
+    store = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    for i in range(25):
+        ids, mat, ts = _rows(4, start=i * 10)
+        store.append(ids, mat, ts)
+    store.checkpoint()
+    ids, mat, ts = _rows(3, start=900)
+    store.append(ids, mat, ts)
+    store.delete([900])
+    store.journal.close()
+
+    recovered = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    assert recovered.recovered_records == 2  # NOT 27
+    assert recovered.n_live == 25 * 4 + 3 - 1
+    # and a fresh checkpoint drops it to zero
+    recovered.checkpoint()
+    recovered.journal.close()
+    assert SegmentedCorpusStore.open(
+        tmp_path / "j", dim=DIM).recovered_records == 0
+
+
+def test_seq_resumes_across_checkpointed_reopen(tmp_path):
+    """Records written by a store REOPENED after a checkpoint must survive
+    the next recovery: the journal seq has to resume past the snapshot's
+    seq even though the rotated journal file is empty (regression — a
+    reset seq made ``replay(after_seq=snapshot.seq)`` filter them out)."""
+    store = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    ids, mat, ts = _rows(6)
+    store.append(ids, mat, ts)
+    store.checkpoint()
+    store.journal.close()
+
+    writer = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    ids, mat, ts = _rows(2, start=50)
+    writer.append(ids, mat, ts)
+    writer.delete([int(ids[0])])
+    writer.journal.close()
+
+    recovered = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    assert recovered.recovered_records == 2
+    assert recovered.n_live == 6 + 2 - 1
+    assert_stores_identical(recovered, writer)
+    recovered.journal.close()
+
+
+def test_journal_bytes_and_checkpoint_counters_in_stats(tmp_path):
+    store = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    ids, mat, ts = _rows(10)
+    store.append(ids, mat, ts)
+    st = store.stats()
+    assert st["journal_bytes"] > 0
+    assert st["checkpoints"] == 0
+    store.checkpoint()
+    st = store.stats()
+    assert st["journal_bytes"] == 0  # rotated away
+    assert st["checkpoints"] == 1
+    store.journal.close()
+
+
+# ---------------------------------------------------------------------------
+# vectorizer: backoff schedule (fake clock), dead letters, queue bounds
+# ---------------------------------------------------------------------------
+
+
+class _FailingEmbedder:
+    """Raises ``fail_times`` times, then embeds via HashEmbedder."""
+
+    def __init__(self, fail_times=10**9, dim=DIM):
+        self.fail_times = fail_times
+        self.calls = 0
+        self._emb = HashEmbedder(dim)
+
+    def __call__(self, text):
+        self.calls += 1
+        if self.calls <= self.fail_times:
+            raise RuntimeError("embedder down")
+        return self._emb(text)
+
+
+def _worker(embed, **kw):
+    sunk = []
+    kw.setdefault("jitter", 0.0)
+    kw.setdefault("base_backoff_s", 1.0)
+    kw.setdefault("max_backoff_s", 8.0)
+    worker = VectorizerWorker(
+        IngestQueue(64), embed,
+        lambda ids, vecs, ts: sunk.append((list(ids), vecs, list(ts))),
+        **kw)
+    return worker, sunk
+
+
+def test_backoff_schedule_is_exponential_and_capped():
+    worker, _ = _worker(_FailingEmbedder(), max_attempts=10)
+    assert [worker.backoff_s(n) for n in (1, 2, 3, 4, 5, 6)] == [
+        1.0, 2.0, 4.0, 8.0, 8.0, 8.0]  # base * 2^(n-1), capped
+
+
+def test_jitter_bounds():
+    worker, _ = _worker(_FailingEmbedder(), jitter=0.25, seed=3)
+    for n in (1, 2, 3):
+        base = min(8.0, 2.0 ** (n - 1))
+        for _ in range(20):
+            d = worker.backoff_s(n)
+            assert base <= d <= base * 1.25
+
+
+def test_retry_schedule_on_fake_clock():
+    """Failures reschedule at exactly now + backoff; a drain BEFORE the
+    due time takes nothing, a drain at it retries."""
+    embed = _FailingEmbedder(fail_times=2)
+    worker, sunk = _worker(embed, max_attempts=5)
+    worker.enqueue([(1, "alpha text", 10.0)])
+
+    assert worker.drain_once(now=0.0) == 0       # failure #1 -> due at 1.0
+    assert worker.stats()["retries"] == 1
+    assert not worker.has_due(now=0.99)          # backoff holds the row
+    assert worker.drain_once(now=0.5) == 0       # nothing due -> no embed
+    assert embed.calls == 1
+    assert worker.drain_once(now=1.0) == 0       # failure #2 -> due at 3.0
+    assert not worker.has_due(now=2.99)
+    assert worker.has_due(now=3.0)
+    assert worker.drain_once(now=3.0) == 1       # third attempt succeeds
+    assert sunk and sunk[0][0] == [1]
+    assert worker.stats()["retries"] == 2
+    assert worker.stats()["embedded"] == 1
+    assert len(worker.queue) == 0
+
+
+def test_dead_letter_after_retry_budget():
+    worker, sunk = _worker(_FailingEmbedder(), max_attempts=3)
+    worker.enqueue([(7, "poison row", None), (8, "poison too", None)])
+    now = 0.0
+    for _ in range(3):
+        worker.drain_once(now=now)
+        now += 100.0  # past any backoff
+    st = worker.stats()
+    assert st["dead_letter"] == 2
+    assert st["retries"] == 4        # 2 rows x 2 non-final failures
+    assert len(worker.queue) == 0    # dead rows never re-queue
+    assert not sunk
+    assert {d["chunk_id"] for d in worker.dead_letters} == {7, 8}
+    assert all(d["attempts"] == 3 for d in worker.dead_letters)
+    # one more drain: nothing left, nothing resurrects
+    assert worker.drain_once(now=now) == 0
+    assert worker.stats()["dead_letter"] == 2
+
+
+def test_flush_terminates_on_poison_rows():
+    worker, _ = _worker(_FailingEmbedder(), max_attempts=4)
+    worker.enqueue([(i, f"text {i}", None) for i in range(5)])
+    assert worker.flush() == 0  # all poison -> nothing ingested, no hang
+    assert worker.stats()["dead_letter"] == 5
+
+
+def test_queue_backpressure_all_or_nothing():
+    q = IngestQueue(maxsize=3)
+    q.put([(1, "a", None), (2, "b", None)])
+    with pytest.raises(IngestQueueFullError):
+        q.put([(3, "c", None), (4, "d", None)])
+    assert len(q) == 2           # the overflowing batch left no partial
+    assert q.rejected == 2
+    q.put([(3, "c", None)])
+    assert len(q) == 3
+
+
+def test_delete_discards_pending_rows():
+    worker, sunk = _worker(_FailingEmbedder(fail_times=0))
+    worker.enqueue([(1, "a", None), (2, "b", None)])
+    assert worker.queue.discard([1]) == 1
+    worker.flush()
+    assert [ids for ids, _, _ in sunk] == [[2]]  # deleted row never embeds
+
+
+# ---------------------------------------------------------------------------
+# enqueued-but-never-embedded rows survive a crash
+# ---------------------------------------------------------------------------
+
+
+def test_pending_rows_recovered_after_crash(tmp_path):
+    store = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    emb = HashEmbedder(DIM)
+    worker = VectorizerWorker(
+        IngestQueue(64), emb,
+        lambda ids, vecs, ts: store.append(
+            ids, vecs, [t or 0.0 for t in ts]),
+        journal=store.journal)
+    worker.enqueue([(1, "first pending", 5.0), (2, "second pending", 6.0)])
+    worker.drain_once()            # both embed and land in the store
+    worker.enqueue([(3, "never embedded", 7.0)])
+    # simulated crash: no close, no checkpoint — just drop everything
+
+    recovered = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    assert sorted(i for i, _, _ in recovered.recovered_pending) == [3]
+    assert recovered.n_live == 2   # 1 and 2 are sealed rows, not pending
+
+    # adopting re-admits without re-journaling; draining completes ingest
+    worker2 = VectorizerWorker(
+        IngestQueue(64), emb,
+        lambda ids, vecs, ts: recovered.append(
+            ids, vecs, [t or 0.0 for t in ts]),
+        journal=recovered.journal)
+    worker2.adopt(recovered.recovered_pending,
+                  recovered.recovered_dead_letters)
+    worker2.flush()
+    assert recovered.n_live == 3
+
+
+def test_vectorizer_post_embed_crash_reenqueues(tmp_path):
+    """Crash AFTER embedding but BEFORE the sink ingest: the batch was
+    never acknowledged into the store, so recovery re-surfaces it as
+    pending (at-least-once, idempotent because ingest seals by id)."""
+    plan = FaultPlan(crash_at="vectorizer:post-embed")
+    store = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM,
+                                      fault_plan=plan)
+    worker = VectorizerWorker(
+        IngestQueue(64), HashEmbedder(DIM),
+        lambda ids, vecs, ts: store.append(
+            ids, vecs, [t or 0.0 for t in ts]),
+        journal=store.journal, fault_plan=plan)
+    worker.enqueue([(11, "doomed batch", None)])
+    with pytest.raises(InjectedCrash):
+        worker.drain_once()
+
+    recovered = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    assert [i for i, _, _ in recovered.recovered_pending] == [11]
+    assert recovered.n_live == 0
+
+
+def test_dead_letters_survive_crash_and_checkpoint(tmp_path):
+    store = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    worker = VectorizerWorker(
+        IngestQueue(64), _FailingEmbedder(),
+        lambda *a: None, max_attempts=2, journal=store.journal,
+        base_backoff_s=0.0, jitter=0.0)
+    worker.enqueue([(5, "poison", None)])
+    worker.flush()
+    assert worker.stats()["dead_letter"] == 1
+
+    # crash (no checkpoint): the dead_letter journal record recovers it
+    recovered = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    assert [d["chunk_id"] for d in recovered.recovered_dead_letters] == [5]
+    assert recovered.recovered_pending == []  # dead, not pending
+    # checkpoint carries it through rotation too
+    recovered.checkpoint(dead_letters=recovered.recovered_dead_letters)
+    recovered.journal.close()
+    again = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    assert [d["chunk_id"] for d in again.recovered_dead_letters] == [5]
+    assert again.recovered_records == 0
+
+
+# ---------------------------------------------------------------------------
+# service end-to-end: queued INSERT, idle-gap drain, close() flush
+# ---------------------------------------------------------------------------
+
+
+def _service(tmp_path, **kwargs):
+    emb = HashEmbedder(DIM)
+    conn = sqlite3.connect(":memory:", check_same_thread=False)
+    build_database(conn, generate_corpus(n_chunks=80, n_sessions=6, seed=11),
+                   emb)
+    svc = RetrievalService(conn, dim=DIM, embedder=emb,
+                           store_path=tmp_path / "store", **kwargs)
+    return svc, conn
+
+
+INSERT = ("INSERT INTO chunks (id, session_id, type, content, created_at) "
+          "VALUES ({cid}, 'sess-d', 'assistant', '{text}', 1769000000.0)")
+
+
+def test_insert_enqueues_and_drains_in_idle_gaps(tmp_path):
+    svc, _ = _service(tmp_path)
+    try:
+        svc.serving(max_wait_ms=1.0)
+        new_id = 9001
+        res = svc.flex_search(INSERT.format(
+            cid=new_id, text="quixotic durability payload"))
+        assert res.ok, res.error
+        # the INSERT returned after ENQUEUE: the row is not sealed yet
+        # (it may embed moments later in an idle gap, hence >= checks)
+        st = svc.stats()["ingest"]
+        assert st["queued"] == 1
+        # the scheduler's idle-gap hook drains it without any search
+        assert wait_for(lambda: svc.stats()["ingest"]["embedded"] == 1)
+        assert new_id in svc.cache.store
+        assert svc.stats()["serving"]["vectorizer_drains"] >= 1
+        hits = svc.search("similar:quixotic durability payload", k=3)
+        assert hits and hits[0][0] == new_id
+    finally:
+        svc.close()
+
+
+def test_close_flushes_pending_ingest(tmp_path):
+    """The close() bugfix pin: accepted-but-not-yet-embedded rows must
+    be embedded (or dead-lettered) by close, never silently dropped."""
+    svc, conn = _service(tmp_path)
+    svc.serving(max_wait_ms=2000.0)  # huge wait: no idle gap will fire
+    new_id = 9002
+    assert svc.flex_search(INSERT.format(
+        cid=new_id, text="flush me on close")).ok
+    svc.close()  # must flush the queue before checkpointing
+
+    svc2 = RetrievalService(conn, dim=DIM, embedder=HashEmbedder(DIM),
+                            store_path=tmp_path / "store")
+    try:
+        assert new_id in svc2.cache.store
+        assert svc2.cache.store.recovered_records == 0  # checkpointed
+        hits = svc2.search("similar:flush me on close", k=3)
+        assert hits and hits[0][0] == new_id
+    finally:
+        svc2.close()
+
+
+def test_service_crash_recovers_pending_through_adoption(tmp_path):
+    """Kill-and-recover: a queued INSERT whose process dies before the
+    background embed still completes after reopen (journal -> adopt)."""
+    svc, conn = _service(tmp_path)
+    svc.serving(max_wait_ms=2000.0)
+    new_id = 9003
+    assert svc.flex_search(INSERT.format(
+        cid=new_id, text="survives the crash")).ok
+    assert new_id not in svc.cache.store
+    # simulated crash: stop the scheduler WITHOUT the close-path flush or
+    # checkpoint (a SIGKILL'd process gets neither), then drop the journal
+    eng, svc._serving = svc._serving, None
+    eng.vectorizer = None
+    eng.close()
+    svc.cache.store.journal.close()
+
+    svc2 = RetrievalService(conn, dim=DIM, embedder=HashEmbedder(DIM),
+                            store_path=tmp_path / "store")
+    try:
+        svc2.serving(max_wait_ms=1.0)  # adopts recovered pending rows
+        assert wait_for(lambda: new_id in svc2.cache.store)
+        hits = svc2.search("similar:survives the crash", k=3)
+        assert hits and hits[0][0] == new_id
+    finally:
+        svc2.close()
+
+
+def test_embed_failures_retry_then_succeed_in_service(tmp_path):
+    svc, _ = _service(tmp_path,
+                      fault_plan=FaultPlan(embed_failures=2))
+    try:
+        svc.serving(max_wait_ms=1.0, ingest_base_backoff_s=0.001)
+        assert svc.flex_search(INSERT.format(
+            cid=9004, text="eventually embedded")).ok
+        assert wait_for(lambda: svc.stats()["ingest"]["embedded"] == 1)
+        st = svc.stats()["ingest"]
+        assert st["retries"] == 2
+        assert st["dead_letter"] == 0
+    finally:
+        svc.close()
+
+
+def test_embed_failures_dead_letter_in_service(tmp_path):
+    svc, _ = _service(tmp_path,
+                      fault_plan=FaultPlan(embed_failures=10**6))
+    try:
+        svc.serving(max_wait_ms=1.0, ingest_max_attempts=2,
+                    ingest_base_backoff_s=0.001)
+        assert svc.flex_search(INSERT.format(
+            cid=9005, text="never embeds")).ok
+        assert wait_for(
+            lambda: svc.stats()["ingest"]["dead_letter"] == 1)
+        st = svc.stats()["ingest"]
+        assert st["embedded"] == 0
+        assert 9005 not in svc.cache.store
+    finally:
+        svc.close()
+    # the dead letter is durable across the close/open cycle
+    store = SegmentedCorpusStore.open(tmp_path / "store", dim=DIM)
+    assert [d["chunk_id"] for d in store.recovered_dead_letters] == [9005]
+    store.journal.close()
+
+
+def test_insert_with_explicit_embedding_stays_synchronous(tmp_path):
+    """Only rows MISSING embeddings queue; SQL writing the blob (none in
+    the INSERT grammar today) and the direct ingest() path stay inline."""
+    svc, _ = _service(tmp_path)
+    try:
+        svc.serving(max_wait_ms=2000.0)
+        n0 = svc.cache.store.n_live
+        svc.ingest([(9100, "sess-d", "assistant", "inline row", 1.0,
+                     0, None, None, None, None)])
+        assert svc.cache.store.n_live == n0 + 1  # no queue involved
+        assert svc.stats()["ingest"]["queued"] == 0
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# priority-aware shedding at admission
+# ---------------------------------------------------------------------------
+
+
+def _gated_engine(max_queue=2):
+    from tests.test_serve_async import GateBackend, make_cache
+
+    cache, _ = make_cache()
+    gate = GateBackend()
+    eng = BatchedRetrievalEngine(cache, max_batch=1, engine=gate,
+                                 max_queue=max_queue)
+    return eng, gate
+
+
+def test_full_queue_sheds_lowest_priority_for_higher(tmp_path):
+    import concurrent.futures as cf
+
+    eng, gate = _gated_engine(max_queue=2)
+    try:
+        with cf.ThreadPoolExecutor(4) as ex:
+            blocker = ex.submit(eng.search, "similar:group 1 tail", 5)
+            assert gate.entered.wait(5.0)
+            low = ex.submit(eng.search, "similar:group 2 tail", 5,
+                            **{"priority": 0})
+            mid = ex.submit(eng.search, "similar:group 3 tail", 5,
+                            **{"priority": 3})
+            assert wait_for(lambda: eng.queue_depth == 2)
+            # queue full; a HIGHER-priority arrival evicts the lowest
+            high = ex.submit(eng.search, "similar:group 4 tail", 5,
+                             **{"priority": 5})
+            with pytest.raises(QueueFullError):
+                low.result(10.0)
+            assert eng.shed_low_priority == 1
+            gate.release.set()
+            assert len(blocker.result(10.0)) == 5
+            assert len(mid.result(10.0)) == 5   # survivor, served
+            assert len(high.result(10.0)) == 5  # newcomer, admitted
+        assert eng.queue_depth == 0
+        assert eng.stats()["shed_low_priority"] == 1
+        assert eng.rejected == 0  # shed, not rejected
+    finally:
+        gate.release.set()
+        eng.close()
+
+
+def test_newcomer_rejected_when_itself_lowest(tmp_path):
+    import concurrent.futures as cf
+
+    eng, gate = _gated_engine(max_queue=2)
+    try:
+        with cf.ThreadPoolExecutor(4) as ex:
+            blocker = ex.submit(eng.search, "similar:group 1 tail", 5)
+            assert gate.entered.wait(5.0)
+            waiters = [ex.submit(eng.search, f"similar:group {i} tail", 5,
+                                 **{"priority": 5}) for i in (2, 3)]
+            assert wait_for(lambda: eng.queue_depth == 2)
+            with pytest.raises(QueueFullError):
+                eng.search("similar:group 4 tail", 5, **{"priority": 1})
+            assert eng.rejected == 1
+            assert eng.shed_low_priority == 0  # equal/lower never sheds
+            gate.release.set()
+            blocker.result(10.0)
+            for w in waiters:
+                assert len(w.result(10.0)) == 5
+    finally:
+        gate.release.set()
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# procgroup: shard stores + coordinator recover from their journals
+# ---------------------------------------------------------------------------
+
+
+def test_process_group_reopens_from_journals(tmp_path):
+    from repro.core import modulations as M
+    from repro.dist.procgroup import ProcessGroup
+
+    ids, mat, _ = _rows(60)
+    jdir = str(tmp_path / "group")
+    g = ProcessGroup.build(ids, mat, journal_dir=jdir, n_shards=3,
+                           replicas=2)
+    g.delete([3, 7])
+    ids2, mat2, _ = _rows(12, start=200)
+    g.append(ids2, mat2)
+    plan = M.ModulationPlan(query=M.l2_normalize(mat[0]), pool=10)
+    ref = g.search_plan(plan, k=10)
+    g.checkpoint()
+    ids3, mat3, _ = _rows(4, start=400)
+    g.append(ids3, mat3)
+    ref2 = g.search_plan(plan, k=10)
+    g.close()
+
+    g2 = ProcessGroup.open(jdir, DIM, n_shards=3, replicas=2)
+    try:
+        assert g2.recovered_records == 1      # O(delta) at the coordinator
+        assert g2.search_plan(plan, k=10) == ref2
+        # shard replicas each replayed only their post-snapshot delta
+        for row in g2.stats()["shards"]:
+            assert row["recovered_records"] <= 2
+    finally:
+        g2.close()
+    assert ref  # both rankings exercised
+
+
+def test_process_group_reconciles_unacked_crash_window(tmp_path):
+    """A shard append that never reached the coordinator journal (crash
+    between fan-out and group-ack) is dropped at open — recovery
+    converges on the ACKNOWLEDGED state."""
+    from repro.core import modulations as M
+    from repro.dist.procgroup import ProcessGroup
+
+    ids, mat, _ = _rows(30)
+    jdir = str(tmp_path / "group")
+    g = ProcessGroup.build(ids, mat, journal_dir=jdir, n_shards=2)
+    plan = M.ModulationPlan(query=M.l2_normalize(mat[1]), pool=8)
+    ref = g.search_plan(plan, k=8)
+    # un-acked write: straight to the shard, bypassing the coordinator
+    g._clients[0][0].call(
+        "append", np.asarray([777], dtype=np.int64),
+        RNG.standard_normal((1, DIM)).astype(np.float32), None)
+    g.close()
+
+    g2 = ProcessGroup.open(jdir, DIM, n_shards=2)
+    try:
+        assert 777 not in g2._shard_of
+        assert g2.reconciled_drops == 1
+        assert g2.search_plan(plan, k=8) == ref
+    finally:
+        g2.close()
+
+
+def test_journal_files_exist_on_disk(tmp_path):
+    store = SegmentedCorpusStore.open(tmp_path / "j", dim=DIM)
+    ids, mat, ts = _rows(5)
+    store.append(ids, mat, ts)
+    assert os.path.exists(tmp_path / "j" / "journal.wal")
+    store.checkpoint()
+    assert os.path.exists(tmp_path / "j" / "snapshot.bin")
+    store.journal.close()
+    assert StoreJournal(tmp_path / "j").load_snapshot() is not None
